@@ -1,0 +1,65 @@
+"""Fig. 11 analogue: DR-SpMM forward/backward kernel runtime vs the dense
+SpMM baseline (cuSPARSE-analogue) and the row-balanced dense-operand SpMM
+(GNNAdvisor-analogue), swept over K and embedding dim on the three
+representative design sizes (Table 1, scaled for CPU wall-clock).
+
+Timings use the bucketed XLA execution path (the Pallas kernels are
+validated in interpret mode, which is not wall-clock-representative on CPU);
+the *derived* column reports the byte-model speedup the CBSR gather traffic
+predicts on TPU: dense reads N·D per aggregated row, DR reads N·k values +
+indices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_jit
+from repro.core.cbsr import cbsr_from_dense
+from repro.core.drelu import drelu
+from repro.graphs.generator import generate_design
+from repro.kernels import ops
+
+
+def bench(scale=0.08):
+    rng = np.random.default_rng(0)
+    for size in ("small", "medium", "large"):
+        g = generate_design(1, size, scale=scale)[0]
+        for etype in ("near", "pin", "pinned"):
+            es = g.edges[etype]
+            n_src = es.adj.n_src
+            for dim in (64, 128):
+                x = jnp.asarray(rng.normal(size=(n_src, dim))
+                                .astype(np.float32))
+                t_dense = time_jit(
+                    lambda xv: ops.spmm(es.adj, es.adj_t, xv), x)
+                for k in (8, 16, 32):
+                    if k >= dim:
+                        continue
+                    c = cbsr_from_dense(drelu(x, k), k)
+                    t_dr = time_jit(
+                        lambda v: ops.drspmm(es.adj, es.adj_t, v, c.idx,
+                                             dim), c.values)
+                    # backward
+                    def bwd_dr(v):
+                        return jax.grad(lambda q: jnp.sum(ops.drspmm(
+                            es.adj, es.adj_t, q, c.idx, dim) ** 2))(v)
+
+                    def bwd_dense(xv):
+                        return jax.grad(lambda q: jnp.sum(ops.spmm(
+                            es.adj, es.adj_t, q) ** 2))(xv)
+
+                    t_dr_b = time_jit(bwd_dr, c.values)
+                    t_dense_b = time_jit(bwd_dense, x)
+                    byte_model = dim / (2 * k)      # val+idx per survivor
+                    emit(f"drspmm_fwd/{size}/{etype}/d{dim}/k{k}", t_dr,
+                         f"speedup_vs_dense={t_dense / t_dr:.2f}x;"
+                         f"tpu_byte_model={byte_model:.1f}x")
+                    emit(f"drspmm_bwd/{size}/{etype}/d{dim}/k{k}", t_dr_b,
+                         f"speedup_vs_dense={t_dense_b / t_dr_b:.2f}x")
+
+
+if __name__ == "__main__":
+    bench()

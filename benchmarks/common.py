@@ -1,0 +1,23 @@
+"""Shared benchmark utilities."""
+
+import time
+
+import jax
+
+
+def time_jit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time (µs) of a jitted callable."""
+    jfn = jax.jit(fn) if not hasattr(fn, "lower") else fn
+    for _ in range(warmup):
+        jax.block_until_ready(jfn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        times.append((time.perf_counter() - t0) * 1e6)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,71 @@
+"""Serve a small LM with batched requests: prefill + token-by-token decode.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-0.6b] \
+        [--batch 4] [--prompt-len 32] [--new-tokens 16]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ARCH_IDS, get_config, reduced
+from repro.models.lm import serve
+from repro.models.lm.model import build_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    lm = build_lm(cfg)
+    params = lm.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, s = args.batch, args.prompt_len
+    total = s + args.new_tokens
+
+    # prompts padded into a cache covering the full generation horizon
+    prompts = rng.integers(0, cfg.vocab, (b, total)).astype(np.int32)
+    prompts[:, s:] = 0
+    tokens = jnp.asarray(prompts)
+
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"image_emb": jnp.zeros((b, cfg.n_img_tokens, cfg.d_model),
+                                        lm.dtype)}
+    if cfg.family == "audio":
+        extra = {"frames": jnp.zeros((b, cfg.enc_frames, cfg.d_model),
+                                     lm.dtype)}
+
+    print(f"[serve] {cfg.name} prefill {b}×{total} ...")
+    t0 = time.perf_counter()
+    cache, logits = serve.prefill(lm, params, tokens, extra)
+    jax.block_until_ready(logits)
+    print(f"  prefill {time.perf_counter() - t0:.2f}s")
+
+    decode = jax.jit(lambda p, c, t, q: serve.decode_step(lm, p, c, t, q))
+    out_tokens = []
+    tok = jnp.argmax(logits[:, -1:, : cfg.vocab], -1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.new_tokens):
+        pos = jnp.asarray(s + i, jnp.int32)
+        cache, logits = decode(params, cache, tok, pos)
+        tok = jnp.argmax(logits[:, :, : cfg.vocab], -1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok)[:, 0])
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    gen = np.stack(out_tokens, 1)
+    print(f"  decoded {args.new_tokens} tokens × {b} reqs in {dt:.2f}s "
+          f"({b * args.new_tokens / dt:.1f} tok/s)")
+    print("  sample generations:", gen[:2].tolist())
+
+
+if __name__ == "__main__":
+    main()

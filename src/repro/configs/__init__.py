@@ -1,0 +1,3 @@
+"""Architecture configs.  ``get_config(name)`` resolves any assigned arch."""
+
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES, get_config, list_archs  # noqa: F401

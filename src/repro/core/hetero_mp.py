@@ -1,0 +1,101 @@
+"""Heterogeneous message passing with D-ReLU + DR-SpMM (the paper's core).
+
+One HeteroConv layer (paper Fig. 1 / Fig. 5) = three edge-type modules:
+
+    near   : SageConv   cell -> cell
+    pinned : SageConv   net  -> cell
+    pin    : GraphConv  cell -> net
+
+with the cell-side merge Y_cell = max(near_out, pinned_out) (Eq. 8) and
+Y_net = pin_out (Eq. 9).  Eqs. 12–14 (the mask-routed backward through the
+max merge) fall out of autodiff over ``jnp.maximum``; the SSpMM backward of
+each DR-SpMM is the custom VJP in kernels/ops.py.
+
+The three modules are computationally independent until the merge — the
+parallel scheduler (core/parallel.py) exploits exactly that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cbsr import cbsr_from_dense
+from repro.core.drelu import drelu
+from repro.graphs.circuit import CircuitGraph
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroMPConfig:
+    hidden: int = 64
+    k_cell: int = 16          # D-ReLU K for cell-sourced embeddings
+    k_net: int = 16           # D-ReLU K for net-sourced embeddings
+    backend: ops.Backend = "xla"
+    use_drelu: bool = True    # False => dense baseline path (plain SpMM)
+    drelu_backend: str = "topk"   # topk (lax.top_k) | pallas (binary search)
+
+
+class HeteroLayerParams(NamedTuple):
+    """Per-edge-type weights (Eq. 4's W^ψ) + SAGE self paths."""
+    w_near: jax.Array          # (H, H) neighbor transform, near
+    w_near_self: jax.Array     # (H, H)
+    w_pinned: jax.Array        # (H, H)
+    w_pinned_self: jax.Array   # unused by merge (self path shared) — kept for SAGE form
+    w_pin: jax.Array           # (H, H) GraphConv weight
+    b_cell: jax.Array          # (H,)
+    b_net: jax.Array           # (H,)
+
+
+def init_hetero_layer(key, hidden: int) -> HeteroLayerParams:
+    ks = jax.random.split(key, 5)
+    s = 1.0 / jnp.sqrt(hidden)
+    mk = lambda k: jax.random.uniform(k, (hidden, hidden), jnp.float32, -s, s)
+    return HeteroLayerParams(
+        w_near=mk(ks[0]), w_near_self=mk(ks[1]), w_pinned=mk(ks[2]),
+        w_pinned_self=mk(ks[3]), w_pin=mk(ks[4]),
+        b_cell=jnp.zeros((hidden,)), b_net=jnp.zeros((hidden,)))
+
+
+def _aggregate(graph: CircuitGraph, etype: str, x_src: jax.Array,
+               k: int, cfg: HeteroMPConfig) -> jax.Array:
+    """A^ψ · D-ReLU(x_src) for one edge type, via DR-SpMM (or dense SpMM)."""
+    es = graph.edges[etype]
+    if cfg.use_drelu and k < x_src.shape[-1]:
+        # D-ReLU -> CBSR -> DR-SpMM.  Gradient routing: the CBSR values carry
+        # the autodiff path (top-k gather is differentiable wrt x), and the
+        # SSpMM backward samples at the preserved indices (Alg. 2).
+        if cfg.drelu_backend == "pallas":
+            # the paper's row-wise binary search as a Pallas kernel
+            from repro.kernels.drelu_topk import drelu_pallas
+            xs = drelu_pallas(jax.lax.stop_gradient(x_src), k)
+            xs = xs + (x_src - jax.lax.stop_gradient(x_src)) * (xs != 0)
+        else:
+            xs = drelu(x_src, k)                   # dense w/ straight-through
+        c = cbsr_from_dense(xs, k)
+        return ops.drspmm(es.adj, es.adj_t, c.values, c.idx,
+                          x_src.shape[-1], backend=cfg.backend)
+    return ops.spmm(es.adj, es.adj_t, x_src, backend=cfg.backend)
+
+
+def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
+                x_cell: jax.Array, x_net: jax.Array,
+                cfg: HeteroMPConfig) -> Tuple[jax.Array, jax.Array]:
+    """One HeteroConv layer.  Returns (y_cell, y_net)."""
+    # --- three independent edge-type message passings (parallelizable) ---
+    agg_near = _aggregate(graph, "near", x_cell, cfg.k_cell, cfg)      # cell->cell
+    agg_pinned = _aggregate(graph, "pinned", x_net, cfg.k_net, cfg)    # net->cell
+    agg_pin = _aggregate(graph, "pin", x_cell, cfg.k_cell, cfg)        # cell->net
+
+    # --- per-edge W^ψ (Eq. 4) ---
+    near_out = agg_near @ params.w_near + x_cell @ params.w_near_self
+    pinned_out = agg_pinned @ params.w_pinned + x_cell @ params.w_pinned_self
+    pin_out = agg_pin @ params.w_pin
+
+    # --- merge (Eqs. 8-9); Eqs. 12-14 are the autodiff of the max ---
+    y_cell = jnp.maximum(near_out, pinned_out) + params.b_cell
+    y_net = pin_out + params.b_net
+    return y_cell, y_net

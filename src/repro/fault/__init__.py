@@ -1,0 +1,1 @@
+from repro.fault.monitor import StepMonitor, ElasticController  # noqa: F401

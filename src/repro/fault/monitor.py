@@ -1,0 +1,155 @@
+"""Fault tolerance: step-time monitoring, straggler mitigation, elastic
+restart policy.
+
+On a real cluster the heartbeat transport is the coordination service
+(jax.distributed); the *policy* layer below is transport-agnostic and is
+what we exercise in tests:
+
+* :class:`StepMonitor` — robust step-time statistics (median + MAD); flags
+  stragglers (> median + k·MAD) and hard failures (missed deadline).
+  Mitigations, in escalation order:
+    1. ``slack`` — tolerate transient jitter (no action, logged);
+    2. ``rebalance`` — reassign the straggler's *data shards* to healthy
+       hosts (the pipeline is shard-indexed and stateless, so this is a
+       pure index remap — see data/pipeline.py);
+    3. ``restart`` — declare the node dead, shrink the mesh, restore the
+       latest checkpoint elastically (checkpoint/ckpt.py resharding).
+* :class:`ElasticController` — computes the largest valid (data, model)
+  mesh for the surviving device count and the data-shard remap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    host: int
+    duration: float
+    threshold: float
+    action: str            # "slack" | "rebalance" | "restart"
+
+
+class StepMonitor:
+    def __init__(self, n_hosts: int = 1, *, mad_k: float = 6.0,
+                 deadline_factor: float = 10.0, window: int = 50,
+                 patience: int = 3):
+        self.n_hosts = n_hosts
+        self.mad_k = mad_k
+        self.deadline_factor = deadline_factor
+        self.window = window
+        self.patience = patience
+        self.history: Dict[int, List[float]] = {h: [] for h in range(n_hosts)}
+        self.strikes: Dict[int, int] = {h: 0 for h in range(n_hosts)}
+        self.events: List[StragglerEvent] = []
+
+    def record(self, step: int, host: int, duration: float) -> Optional[StragglerEvent]:
+        hist = self.history[host]
+        hist.append(duration)
+        if len(hist) > self.window:
+            hist.pop(0)
+        if len(hist) < 5:
+            return None
+        med = _median(hist)
+        mad = _median([abs(x - med) for x in hist]) + 1e-9
+        threshold = med + self.mad_k * mad
+        deadline = med * self.deadline_factor
+        if duration > deadline:
+            ev = StragglerEvent(step, host, duration, deadline, "restart")
+        elif duration > threshold:
+            self.strikes[host] += 1
+            action = ("rebalance" if self.strikes[host] >= self.patience
+                      else "slack")
+            ev = StragglerEvent(step, host, duration, threshold, action)
+        else:
+            self.strikes[host] = max(0, self.strikes[host] - 1)
+            return None
+        self.events.append(ev)
+        return ev
+
+
+def _median(xs: List[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+class ElasticController:
+    """Mesh shrink / data-shard remap policy for node loss.
+
+    Invariants: the model axis is preserved when possible (param resharding
+    is cheap over data but layout-changing over model); the data axis
+    shrinks to the largest divisor of the surviving host count.
+    """
+
+    def __init__(self, data: int, model: int, pods: int = 1):
+        self.data, self.model, self.pods = data, model, pods
+
+    def shrink(self, failed_hosts: int) -> Tuple[int, int, int]:
+        """Returns the new (pods, data, model) after losing hosts.
+
+        Whole-pod loss drops the pod axis first; partial loss shrinks data."""
+        surviving = self.pods * self.data - failed_hosts
+        if surviving <= 0:
+            raise RuntimeError("no survivors")
+        pods = self.pods
+        while pods > 1 and surviving < pods * self.data:
+            pods -= 1                       # drop incomplete pods
+        per_pod = surviving // pods
+        data = _largest_pow2_leq(per_pod) if per_pod >= 1 else 1
+        return pods, data, self.model
+
+    def shard_remap(self, n_shards: int, dead: List[int]) -> Dict[int, int]:
+        """Reassign dead hosts' data shards round-robin to survivors.
+        Stateless pipeline ⇒ remap is a pure function (no data motion)."""
+        alive = [h for h in range(n_shards) if h not in dead]
+        remap = {}
+        for i, d in enumerate(sorted(dead)):
+            remap[d] = alive[i % len(alive)]
+        return remap
+
+
+def _largest_pow2_leq(n: int) -> int:
+    p = 1
+    while p * 2 <= n:
+        p *= 2
+    return p
+
+
+class Heartbeat:
+    """Host-local heartbeat emitter (file-based transport for tests;
+    jax.distributed KV store in production)."""
+
+    def __init__(self, path: str, host: int, interval: float = 5.0):
+        self.path, self.host, self.interval = path, host, interval
+        self._last = 0.0
+
+    def beat(self, step: int):
+        now = time.time()
+        if now - self._last < self.interval:
+            return
+        self._last = now
+        import json, os
+        os.makedirs(self.path, exist_ok=True)
+        with open(f"{self.path}/host_{self.host}.json", "w") as f:
+            json.dump({"host": self.host, "step": step, "time": now}, f)
+
+    @staticmethod
+    def dead_hosts(path: str, timeout: float, now: Optional[float] = None
+                   ) -> List[int]:
+        import json, os
+        now = now or time.time()
+        dead = []
+        if not os.path.isdir(path):
+            return dead
+        for fn in os.listdir(path):
+            if fn.startswith("host_"):
+                with open(os.path.join(path, fn)) as f:
+                    rec = json.load(f)
+                if now - rec["time"] > timeout:
+                    dead.append(rec["host"])
+        return sorted(dead)

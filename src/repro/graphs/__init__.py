@@ -1,0 +1,1 @@
+"""Circuit-graph substrate: containers, ELL packing, synthetic CircuitNet."""

@@ -1,0 +1,87 @@
+"""Heterogeneous circuit graph container (CircuitNet schema).
+
+Two node types (``cell``, ``net``), three edge types:
+
+    near   : cell -> cell   (geometric)
+    pin    : cell -> net    (topological)
+    pinned : net  -> cell   (= pinᵀ)
+
+Each edge type carries a forward (row-major over destinations) and transposed
+(row-major over sources) degree-bucketed ELL packing — the CSR/CSC pair the
+paper preprocesses in Alg. 1 stage 1 / Alg. 2 stage 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.ell import BucketedELL, pack_ell_pair, degree_stats
+
+EDGE_TYPES = ("near", "pin", "pinned")
+# (source node type, destination node type) per edge type.
+EDGE_SCHEMA = {"near": ("cell", "cell"), "pin": ("cell", "net"),
+               "pinned": ("net", "cell")}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeSet:
+    adj: BucketedELL      # A   (n_dst x n_src)
+    adj_t: BucketedELL    # Aᵀ  (n_src x n_dst)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CircuitGraph:
+    n_cell: int = dataclasses.field(metadata=dict(static=True))
+    n_net: int = dataclasses.field(metadata=dict(static=True))
+    edges: Dict[str, EdgeSet]
+    x_cell: jax.Array            # (n_cell, f_cell) input features
+    x_net: jax.Array             # (n_net, f_net)
+    y_cell: jax.Array            # (n_cell,) congestion label
+
+    def n_nodes(self, ntype: str) -> int:
+        return self.n_cell if ntype == "cell" else self.n_net
+
+
+def build_circuit_graph(coo: Dict[str, Tuple[np.ndarray, np.ndarray]],
+                        n_cell: int, n_net: int,
+                        x_cell, x_net, y_cell,
+                        normalize: str = "mean") -> CircuitGraph:
+    """Pack COO edge dicts {etype: (dst, src)} into a CircuitGraph.
+
+    ``normalize="mean"`` row-normalizes edge weights (SAGE mean aggregator /
+    GraphConv style); ``"none"`` keeps unit weights.
+    """
+    sizes = {"cell": n_cell, "net": n_net}
+    edges = {}
+    for et, (dst, src) in coo.items():
+        s_t, d_t = EDGE_SCHEMA[et]
+        n_dst, n_src = sizes[d_t], sizes[s_t]
+        if normalize == "mean":
+            deg = np.bincount(dst, minlength=n_dst).astype(np.float32)
+            w = 1.0 / np.maximum(deg[dst], 1.0)
+        else:
+            w = np.ones(len(dst), np.float32)
+        adj, adj_t = pack_ell_pair(dst, src, w, n_dst, n_src)
+        edges[et] = EdgeSet(adj=adj, adj_t=adj_t)
+    return CircuitGraph(n_cell=n_cell, n_net=n_net, edges=edges,
+                        x_cell=jnp.asarray(x_cell), x_net=jnp.asarray(x_net),
+                        y_cell=jnp.asarray(y_cell))
+
+
+def graph_degree_stats(coo: Dict[str, Tuple[np.ndarray, np.ndarray]],
+                       n_cell: int, n_net: int) -> Dict[str, dict]:
+    sizes = {"cell": n_cell, "net": n_net}
+    out = {}
+    for et, (dst, src) in coo.items():
+        s_t, d_t = EDGE_SCHEMA[et]
+        st = degree_stats(np.asarray(dst), sizes[d_t])
+        st["src_type"] = s_t
+        out[et] = st
+    return out

@@ -1,0 +1,184 @@
+"""Degree-bucketed ELL adjacency — the TPU analogue of dynamic warp partitioning.
+
+The paper (Alg. 1, stage 2) classifies neighbor groups (rows) by degree and
+partitions warps accordingly so that evil rows do not stall a whole warp.  On
+TPU the execution unit is a Pallas grid cell over a *statically shaped* tile,
+so the equivalent move is structural: bin rows by degree, pad each bin to its
+own max degree (ELL), and dispatch each bin as its own kernel grid with a
+block shape tuned to that bin.  Short rows never pay for evil rows' padding,
+and evil rows get wide, deep tiles.
+
+All packing is host-side numpy (one-time preprocessing, matching the paper's
+CSR/CSC preprocessing stage).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# Row-block granularity of the Pallas grid; bucket row counts are padded to it.
+ROW_BLOCK = 8
+# Default degree-bucket upper bounds (inclusive); last bucket is open-ended.
+DEFAULT_BOUNDS = (4, 16, 64, 256)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ELLBucket:
+    """One degree bin: ``rows[r]`` is the destination row that ``nbr[r]``
+    describes.  Padded neighbor slots have weight 0 and index 0; padded row
+    slots have ``rows == 0`` and all-zero weights (inert under scatter-add).
+    """
+
+    rows: jax.Array   # (R,) int32 destination row ids
+    nbr: jax.Array    # (R, E) int32 source ids
+    w: jax.Array      # (R, E) float edge weights
+
+    @property
+    def n_rows(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.nbr.shape[1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BucketedELL:
+    """A sparse (n_dst x n_src) matrix as a tuple of degree-bucketed ELL slabs."""
+
+    buckets: Tuple[ELLBucket, ...]
+    n_dst: int = dataclasses.field(metadata=dict(static=True))
+    n_src: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nnz(self) -> int:
+        return int(sum(int((np.asarray(b.w) != 0).sum()) for b in self.buckets))
+
+    def to_dense(self) -> jax.Array:
+        a = jnp.zeros((self.n_dst, self.n_src), jnp.float32)
+        for b in self.buckets:
+            r = jnp.repeat(b.rows[:, None], b.width, axis=1)
+            a = a.at[r, b.nbr].add(b.w)
+        return a
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pack_ell(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
+             n_dst: int, n_src: int,
+             bounds: Sequence[int] = DEFAULT_BOUNDS,
+             row_block: int = ROW_BLOCK) -> BucketedELL:
+    """Pack COO edges into degree-bucketed ELL.
+
+    Parameters
+    ----------
+    dst, src : int arrays (nnz,) — edge endpoints (dst aggregates from src).
+    w : float array (nnz,) or None for unit weights.
+    bounds : inclusive degree upper bounds for all but the last bucket.
+    """
+    dst = np.asarray(dst, np.int64)
+    src = np.asarray(src, np.int64)
+    if w is None:
+        w = np.ones(dst.shape[0], np.float32)
+    w = np.asarray(w, np.float32)
+
+    # CSR-ify (stage 1 of Alg. 1).
+    order = np.argsort(dst, kind="stable")
+    dst, src, w = dst[order], src[order], w[order]
+    deg = np.bincount(dst, minlength=n_dst)
+    rowptr = np.zeros(n_dst + 1, np.int64)
+    np.cumsum(deg, out=rowptr[1:])
+
+    # Stage 2: classify rows by degree.  Empty rows are dropped entirely.
+    nonempty = np.nonzero(deg > 0)[0]
+    edges_of = lambda r: slice(rowptr[r], rowptr[r + 1])
+
+    buckets = []
+    lo = 1
+    bnds = list(bounds) + [int(deg.max()) if deg.size and deg.max() > 0 else 1]
+    for hi in bnds:
+        if hi < lo:
+            continue
+        rows = nonempty[(deg[nonempty] >= lo) & (deg[nonempty] <= hi)]
+        lo = hi + 1
+        if rows.size == 0:
+            continue
+        width = int(deg[rows].max())
+        n_r = _round_up(rows.size, row_block)
+        nbr = np.zeros((n_r, width), np.int32)
+        wts = np.zeros((n_r, width), np.float32)
+        rid = np.zeros(n_r, np.int32)
+        rid[: rows.size] = rows
+        for i, r in enumerate(rows):
+            sl = edges_of(r)
+            d = rowptr[r + 1] - rowptr[r]
+            nbr[i, :d] = src[sl]
+            wts[i, :d] = w[sl]
+        buckets.append(ELLBucket(rows=jnp.asarray(rid), nbr=jnp.asarray(nbr),
+                                 w=jnp.asarray(wts)))
+    if not buckets:  # empty matrix — keep one inert bucket for shape sanity
+        buckets = [ELLBucket(rows=jnp.zeros((row_block,), jnp.int32),
+                             nbr=jnp.zeros((row_block, 1), jnp.int32),
+                             w=jnp.zeros((row_block, 1), jnp.float32))]
+    return BucketedELL(buckets=tuple(buckets), n_dst=n_dst, n_src=n_src)
+
+
+def pack_eid_slabs(dst: np.ndarray, src: np.ndarray, n_dst: int, n_src: int,
+                   bounds: Sequence[int] = DEFAULT_BOUNDS):
+    """Edge-id slabs aligned with :func:`pack_ell`'s bucketing.
+
+    Packs edge *indices* (into the canonical dst-stable-sorted edge order)
+    instead of weights, with ``nnz`` as the padding sentinel.  Lets a
+    learnable weight vector w (nnz,) be gathered into the exact slab layout
+    pack_ell produces — the basis of differentiable edge weights
+    (kernels/learnable.py).  Returns (fwd_slabs, bwd_slabs, order, nnz):
+    slabs are BucketedELL whose ``w`` holds f32-encoded edge ids (exact up
+    to 2^24 edges); ``order`` maps the canonical order back to the caller's
+    COO order.
+    """
+    dst = np.asarray(dst, np.int64)
+    src = np.asarray(src, np.int64)
+    nnz = dst.shape[0]
+    assert nnz < (1 << 24), "edge ids exceed f32 exact-integer range"
+    order = np.argsort(dst, kind="stable")           # pack_ell's canonical
+    eid = np.empty(nnz, np.int64)
+    eid[order] = np.arange(nnz)                      # caller-order -> canon
+    fwd = pack_ell(dst, src, eid.astype(np.float32) + 1.0, n_dst, n_src,
+                   bounds)
+    bwd = pack_ell(src, dst, eid.astype(np.float32) + 1.0, n_src, n_dst,
+                   bounds)
+    # ids stored +1 so padding (0.0) maps to sentinel −1 after decode
+    return fwd, bwd, order, nnz
+
+
+def decode_eids(slab_w) -> "jax.Array":
+    """f32-encoded (id+1) slab -> int32 ids with −1 padding sentinel."""
+    return (slab_w.astype(jnp.int32)) - 1
+
+
+def pack_ell_pair(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
+                  n_dst: int, n_src: int,
+                  bounds: Sequence[int] = DEFAULT_BOUNDS
+                  ) -> Tuple[BucketedELL, BucketedELL]:
+    """Forward (A, row-major over dst) and backward (Aᵀ, row-major over src)
+    packings — the CSR/CSC pair of Alg. 1/Alg. 2.  The transposed packing
+    makes every *source* row owned by exactly one grid cell, so the backward
+    needs no atomics (see DESIGN.md §2)."""
+    fwd = pack_ell(dst, src, w, n_dst, n_src, bounds)
+    bwd = pack_ell(src, dst, w, n_src, n_dst, bounds)
+    return fwd, bwd
+
+
+def degree_stats(dst: np.ndarray, n_dst: int) -> dict:
+    deg = np.bincount(np.asarray(dst, np.int64), minlength=n_dst)
+    return dict(degrees=deg, max=int(deg.max()) if deg.size else 0,
+                mean=float(deg.mean()) if deg.size else 0.0)

@@ -1,0 +1,191 @@
+"""Pallas TPU kernels for DR-SpMM (forward) and sampled DR-SpMM (backward).
+
+Forward (Alg. 1):   Y[i, :] += w_ij * scatter(X_vals[j], X_idx[j])   over j∈N(i)
+Backward (Alg. 2):  dV[j, t]  += w_ij * dY[i, X_idx[j, t]]           over i∈N(j)
+
+Layout / TPU mapping
+--------------------
+* One ``pallas_call`` per degree bucket (see graphs/ell.py): the grid walks
+  row-blocks of that bucket's ELL slab; the slab width E is the bucket's max
+  degree, so short rows never pay evil-row padding — this is the paper's
+  dynamic warp partitioning expressed structurally.
+* The CBSR operand (values+indices, each (N, k)) and the gradient operand
+  (M, D) are small enough for circuit partitions (N ≲ 10k, k ≤ 64, D ≤ 128)
+  to live wholly in VMEM — they get whole-array BlockSpecs.  Row-blocks of
+  the ELL slab stream through VMEM tile by tile.
+* The scatter of k CBSR values into a D-wide accumulator is computed as a
+  one-hot contraction ``vals · onehot(idx)`` so it maps onto the MXU instead
+  of a serial scatter (TPUs have no fast in-kernel scatter).
+* Accumulation is fp32 in VMEM regardless of input dtype.
+
+Validated with ``interpret=True`` on CPU against kernels/ref.py; on real TPU
+the same code lowers via Mosaic (jnp.take of rows lowers to dynamic gathers
+along the sublane dimension).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graphs.ell import ELLBucket, ROW_BLOCK
+
+# CPU has no Mosaic backend: interpret the kernel bodies.  On TPU this flips
+# to False automatically and the kernels compile natively.
+INTERPRET = jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(nbr_ref, w_ref, xv_ref, xi_ref, out_ref, *, dim: int):
+    """One row-block: aggregate E neighbors' CBSR rows into (BR, D) output."""
+    nbr = nbr_ref[...]            # (BR, E) int32
+    w = w_ref[...]                # (BR, E)
+    xv = xv_ref[...]              # (N, k)
+    xi = xi_ref[...]              # (N, k) int32
+    br, e_width = nbr.shape
+
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, dim), 2)
+
+    def body(e, acc):
+        j = nbr[:, e]                             # (BR,)
+        v = jnp.take(xv, j, axis=0)               # (BR, k) gather from VMEM
+        c = jnp.take(xi, j, axis=0)               # (BR, k)
+        onehot = (c[:, :, None] == iota_d).astype(acc.dtype)   # (BR, k, D)
+        # MXU contraction: scatter-as-matmul over the k axis.
+        contrib = jnp.einsum("bk,bkd->bd", v.astype(acc.dtype), onehot)
+        return acc + w[:, e].astype(acc.dtype)[:, None] * contrib
+
+    acc = jax.lax.fori_loop(0, e_width, body,
+                            jnp.zeros((br, dim), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def drspmm_fwd_bucket(bucket: ELLBucket, x_vals: jax.Array, x_idx: jax.Array,
+                      dim: int, *, interpret: bool | None = None) -> jax.Array:
+    """Y_bucket (R, dim) for one degree bucket (rows still bucket-local)."""
+    if interpret is None:
+        interpret = INTERPRET
+    r, e = bucket.nbr.shape
+    n, k = x_vals.shape
+    br = min(ROW_BLOCK, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, dim=dim),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, e), lambda i: (i, 0)),          # nbr row-block
+            pl.BlockSpec((br, e), lambda i: (i, 0)),          # w   row-block
+            pl.BlockSpec((n, k), lambda i: (0, 0)),           # x_vals (whole)
+            pl.BlockSpec((n, k), lambda i: (0, 0)),           # x_idx  (whole)
+        ],
+        out_specs=pl.BlockSpec((br, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, dim), x_vals.dtype),
+        interpret=interpret,
+    )(bucket.nbr, bucket.w, x_vals, x_idx)
+
+
+# ---------------------------------------------------------------------------
+# backward (SSpMM): gradients sampled at the forward's CBSR indices
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(tnbr_ref, tw_ref, gy_ref, xi_ref, out_ref):
+    """One source-row-block: dV[j, t] = Σ_i w_ij · dY[i, idx[j, t]].
+
+    ``tnbr``/``tw`` come from the *transposed* ELL packing, so each source row
+    j is owned by exactly one grid cell — accumulation is a private VMEM
+    reduction, no atomics (DESIGN.md §2).
+    """
+    tnbr = tnbr_ref[...]          # (BR, E) target ids i ∈ N(j)
+    tw = tw_ref[...]              # (BR, E)
+    gy = gy_ref[...]              # (M, D)
+    xi = xi_ref[...]              # (BR, k) — this block's CBSR indices
+    br, e_width = tnbr.shape
+    k = xi.shape[1]
+
+    def body(e, acc):
+        i = tnbr[:, e]                                  # (BR,)
+        g = jnp.take(gy, i, axis=0)                     # (BR, D)
+        sampled = jnp.take_along_axis(g, xi, axis=1)    # (BR, k) — SSpMM
+        return acc + tw[:, e].astype(acc.dtype)[:, None] * sampled.astype(acc.dtype)
+
+    acc = jax.lax.fori_loop(0, e_width, body,
+                            jnp.zeros((br, k), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def drspmm_bwd_bucket(bucket: ELLBucket, gy: jax.Array, xi_rows: jax.Array,
+                      *, interpret: bool | None = None) -> jax.Array:
+    """dV_bucket (R, k) for one transposed-ELL bucket.
+
+    ``xi_rows`` is x_idx gathered at this bucket's source rows, shape (R, k).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    r, e = bucket.nbr.shape
+    m, d = gy.shape
+    k = xi_rows.shape[1]
+    br = min(ROW_BLOCK, r)
+    grid = (r // br,)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, e), lambda i: (i, 0)),
+            pl.BlockSpec((br, e), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),           # dY (whole)
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, k), gy.dtype),
+        interpret=interpret,
+    )(bucket.nbr, bucket.w, gy, xi_rows)
+
+
+# ---------------------------------------------------------------------------
+# dense-operand SpMM kernel (baseline, cuSPARSE-analogue) — same bucketed ELL
+# traversal but the operand is a full (N, D) matrix; lets benchmarks compare
+# the CBSR gather traffic (N·k) against the dense gather traffic (N·D) under
+# identical scheduling.
+# ---------------------------------------------------------------------------
+
+def _dense_kernel(nbr_ref, w_ref, x_ref, out_ref):
+    nbr = nbr_ref[...]
+    w = w_ref[...]
+    x = x_ref[...]
+    br, e_width = nbr.shape
+
+    def body(e, acc):
+        j = nbr[:, e]
+        rows = jnp.take(x, j, axis=0).astype(acc.dtype)       # (BR, D)
+        return acc + w[:, e].astype(acc.dtype)[:, None] * rows
+
+    acc = jax.lax.fori_loop(0, e_width, body,
+                            jnp.zeros((br, x.shape[1]), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def spmm_dense_bucket(bucket: ELLBucket, x: jax.Array,
+                      *, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = INTERPRET
+    r, e = bucket.nbr.shape
+    n, d = x.shape
+    br = min(ROW_BLOCK, r)
+    return pl.pallas_call(
+        _dense_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, e), lambda i: (i, 0)),
+            pl.BlockSpec((br, e), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
+        interpret=interpret,
+    )(bucket.nbr, bucket.w, x)

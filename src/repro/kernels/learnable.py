@@ -1,0 +1,104 @@
+"""Learnable edge weights through DR-SpMM (beyond-paper extension).
+
+The paper's adjacency values are fixed normalization constants.  This op
+makes them a differentiable parameter vector w (nnz,) — enabling GAT-style
+learned heterogeneous attention ON TOP of the CBSR/balanced-sparsity
+machinery:
+
+    Y = A(w) · dense(CBSR(x))        with  dY/dw  AND  dY/dx_vals
+
+Gradients:
+    dL/dx_vals[j,t] = Σ_{i∈N(j)} w_ij · dY[i, idx[j,t]]      (SSpMM, Alg. 2)
+    dL/dw_ij        = Σ_t dY[i, idx[j,t]] · vals[j,t]        (sampled dot)
+
+Both reuse the forward's CBSR indices; the w-gradient is the same sampled
+gather as the x-gradient with the roles of weight and value swapped —
+no new memory-access pattern is introduced, so the TPU kernel story
+(kernels/drspmm.py) carries over unchanged.
+
+Edge-id slabs (graphs/ell.py::pack_eid_slabs) keep the forward and
+transposed layouts consistent: both gather from the same canonical w.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.ell import BucketedELL, decode_eids
+
+
+def _slab_weights(w_canon: jax.Array, eid_slab) -> jax.Array:
+    """Gather canonical weights into a slab; padding (id −1) -> 0."""
+    ids = decode_eids(eid_slab)
+    wp = jnp.concatenate([w_canon, jnp.zeros((1,), w_canon.dtype)])
+    return wp[jnp.where(ids < 0, w_canon.shape[0], ids)]
+
+
+def _fwd_exact(fwd_slabs: BucketedELL, w_canon, x_vals, x_idx, dim: int):
+    y = jnp.zeros((fwd_slabs.n_dst, dim), x_vals.dtype)
+    for b in fwd_slabs.buckets:
+        w = _slab_weights(w_canon, b.w)                   # (R, E)
+        v = jnp.take(x_vals, b.nbr, axis=0)               # (R, E, k)
+        c = jnp.take(x_idx, b.nbr, axis=0)
+        vw = v * w[..., None]
+        yb = jnp.zeros((b.n_rows, dim), x_vals.dtype)
+        r, e, k = v.shape
+        rloc = jnp.broadcast_to(
+            jnp.arange(r, dtype=jnp.int32)[:, None, None], c.shape)
+        yb = yb.at[rloc, c].add(vw)
+        y = y.at[b.rows].add(yb)
+    return y
+
+
+def _bwd_x(bwd_slabs: BucketedELL, w_canon, gy, x_idx):
+    """dL/dx_vals via the transposed slabs (source-row ownership)."""
+    n, k = x_idx.shape
+    gv = jnp.zeros((n, k), gy.dtype)
+    for b in bwd_slabs.buckets:
+        w = _slab_weights(w_canon, b.w)                   # (R, E)
+        xi_rows = jnp.take(x_idx, b.rows, axis=0)         # (R, k)
+        g = jnp.take(gy, b.nbr, axis=0)                   # (R, E, D)
+        sampled = jnp.take_along_axis(
+            g, jnp.broadcast_to(xi_rows[:, None, :],
+                                g.shape[:2] + (k,)), axis=2)
+        gv = gv.at[b.rows].add(jnp.sum(sampled * w[..., None], axis=1))
+    return gv
+
+
+def _bwd_w(fwd_slabs: BucketedELL, gy, x_vals, x_idx, nnz: int):
+    """dL/dw per canonical edge: sampled dot of dY rows with CBSR values."""
+    gw = jnp.zeros((nnz + 1,), gy.dtype)
+    for b in fwd_slabs.buckets:
+        ids = decode_eids(b.w)                            # (R, E)
+        v = jnp.take(x_vals, b.nbr, axis=0)               # (R, E, k)
+        c = jnp.take(x_idx, b.nbr, axis=0)
+        g_rows = jnp.take(gy, b.rows, axis=0)             # (R, D)
+        r, e, k = v.shape
+        sampled = jnp.take_along_axis(
+            jnp.broadcast_to(g_rows[:, None, :], (r, e, g_rows.shape[-1])),
+            c, axis=2)                                    # (R, E, k)
+        contrib = jnp.sum(sampled * v, axis=-1)           # (R, E)
+        gw = gw.at[jnp.where(ids < 0, nnz, ids)].add(contrib)
+    return gw[:nnz]
+
+
+def drspmm_learnable(fwd_slabs: BucketedELL, bwd_slabs: BucketedELL,
+                     nnz: int, w_canon: jax.Array, x_vals: jax.Array,
+                     x_idx: jax.Array, dim: int) -> jax.Array:
+    """Differentiable in BOTH w_canon (nnz,) and x_vals (N, k)."""
+
+    @jax.custom_vjp
+    def f(w, xv):
+        return _fwd_exact(fwd_slabs, w, xv, x_idx, dim)
+
+    def f_fwd(w, xv):
+        return _fwd_exact(fwd_slabs, w, xv, x_idx, dim), (w, xv)
+
+    def f_bwd(res, gy):
+        w, xv = res
+        return (_bwd_w(fwd_slabs, gy, xv, x_idx, nnz),
+                _bwd_x(bwd_slabs, w, gy, x_idx))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(w_canon, x_vals)

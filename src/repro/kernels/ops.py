@@ -1,0 +1,127 @@
+"""Jit-ready wrappers over the DR-SpMM Pallas kernels.
+
+``drspmm`` is the public op: Y = A · dense(CBSR(x_vals, x_idx)), with a
+custom VJP that runs the sampled backward kernel (SSpMM) over the transposed
+ELL packing, exactly as Alg. 2 reuses the forward's CBSR indices.
+
+``backend`` selects the execution path:
+  * "pallas"   — the Pallas kernels (interpret-mode on CPU, native on TPU);
+  * "xla"      — same bucketed math in pure jnp (gather/one-hot), useful when
+                 interpret-mode tracing is too slow for large sweeps;
+  * "dense"    — fully dense oracle (kernels/ref.py), the cuSPARSE-analogue.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.ell import BucketedELL
+from repro.kernels import drspmm as _k
+from repro.kernels import ref as _ref
+
+Backend = Literal["pallas", "xla", "dense"]
+DEFAULT_BACKEND: Backend = "xla"
+
+
+def _fwd_bucket_xla(bucket, x_vals, x_idx, dim):
+    """Bucketed CBSR aggregation in plain jnp (same math as the kernel)."""
+    v = jnp.take(x_vals, bucket.nbr, axis=0)          # (R, E, k)
+    c = jnp.take(x_idx, bucket.nbr, axis=0)           # (R, E, k)
+    vw = v * bucket.w[..., None]                      # weight each neighbor
+    r, e, k = v.shape
+    flat_rows = jnp.repeat(jnp.arange(r, dtype=jnp.int32)[:, None, None],
+                           e, axis=1)
+    out = jnp.zeros((r, dim), x_vals.dtype)
+    return out.at[jnp.broadcast_to(flat_rows, c.shape), c].add(vw)
+
+
+def _bwd_bucket_xla(bucket, gy, xi_rows):
+    g = jnp.take(gy, bucket.nbr, axis=0)              # (R, E, D)
+    sampled = jnp.take_along_axis(
+        g, jnp.broadcast_to(xi_rows[:, None, :], g.shape[:2] + xi_rows.shape[1:]),
+        axis=2)                                       # (R, E, k)
+    return jnp.sum(sampled * bucket.w[..., None], axis=1)
+
+
+def _fwd_impl(adj: BucketedELL, x_vals, x_idx, dim: int, backend: Backend):
+    if backend == "dense":
+        return _ref.drspmm_fwd_ref(adj, x_vals, x_idx, dim)
+    y = jnp.zeros((adj.n_dst, dim), x_vals.dtype)
+    for b in adj.buckets:
+        if backend == "pallas":
+            yb = _k.drspmm_fwd_bucket(b, x_vals, x_idx, dim)
+        else:
+            yb = _fwd_bucket_xla(b, x_vals, x_idx, dim)
+        y = y.at[b.rows].add(yb)  # padded rows carry zero weights — inert
+    return y
+
+
+def _bwd_impl(adj_t: BucketedELL, gy, x_idx, backend: Backend):
+    if backend == "dense":
+        return _ref.drspmm_bwd_ref(adj_t, gy, x_idx)
+    n, k = x_idx.shape
+    gv = jnp.zeros((n, k), gy.dtype)
+    for b in adj_t.buckets:
+        xi_rows = jnp.take(x_idx, b.rows, axis=0)     # (R, k)
+        if backend == "pallas":
+            gb = _k.drspmm_bwd_bucket(b, gy, xi_rows)
+        else:
+            gb = _bwd_bucket_xla(b, gy, xi_rows)
+        gv = gv.at[b.rows].add(gb)
+    return gv
+
+
+def drspmm(adj: BucketedELL, adj_t: BucketedELL, x_vals: jax.Array,
+           x_idx: jax.Array, dim: int, *,
+           backend: Backend = DEFAULT_BACKEND) -> jax.Array:
+    """Differentiable DR-SpMM.  Gradient flows to ``x_vals`` only; the
+    adjacency and the CBSR indices are structural."""
+
+    @jax.custom_vjp
+    def f(xv):
+        return _fwd_impl(adj, xv, x_idx, dim, backend)
+
+    def f_fwd(xv):
+        return _fwd_impl(adj, xv, x_idx, dim, backend), None
+
+    def f_bwd(_, gy):
+        return (_bwd_impl(adj_t, gy, x_idx, backend),)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x_vals)
+
+
+def spmm(adj: BucketedELL, adj_t: BucketedELL, x: jax.Array, *,
+         backend: Backend = DEFAULT_BACKEND) -> jax.Array:
+    """Dense-operand SpMM baseline with full (not sampled) backward."""
+
+    @jax.custom_vjp
+    def f(xd):
+        return _spmm_fwd(adj, xd, backend)
+
+    def f_fwd(xd):
+        return _spmm_fwd(adj, xd, backend), None
+
+    def f_bwd(_, gy):
+        return (_spmm_fwd(adj_t, gy, backend),)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x)
+
+
+def _spmm_fwd(adj: BucketedELL, x, backend: Backend):
+    if backend == "dense":
+        return _ref.spmm_dense_ref(adj, x)
+    y = jnp.zeros((adj.n_dst, x.shape[1]), x.dtype)
+    for b in adj.buckets:
+        if backend == "pallas":
+            yb = _k.spmm_dense_bucket(b, x)
+        else:
+            rows = jnp.take(x, b.nbr, axis=0)         # (R, E, D)
+            yb = jnp.sum(rows * b.w[..., None], axis=1)
+        y = y.at[b.rows].add(yb)
+    return y

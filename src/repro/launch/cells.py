@@ -1,0 +1,164 @@
+"""(architecture × input-shape) cell definitions shared by the dry-run,
+the roofline analysis, and the benchmarks.
+
+A *cell* = (arch, shape).  ``build_cell`` returns everything needed to
+lower it on a mesh: the jit-able step function, abstract inputs
+(ShapeDtypeStruct — no allocation), and in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec, get_config
+from repro.models.lm import serve
+from repro.models.lm.model import LM, build_lm
+from repro.sharding.specs import make_pspec
+from repro.train import lm_step
+
+
+def cell_skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """Why a cell is skipped (None = runnable).  See DESIGN.md
+    §Arch-applicability."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is full-attention — skipped per spec")
+    return None
+
+
+def list_cells() -> Tuple[Tuple[str, str], ...]:
+    from repro.configs.base import ARCH_IDS
+    return tuple((a, s) for a in ARCH_IDS for s in SHAPES)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    lm: LM
+    step_fn: Callable           # jit-able
+    abstract_inputs: Tuple      # positional args (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+    kind: str                   # train | prefill | decode
+    donate: Tuple[int, ...] = ()
+
+
+def _named(mesh, shape, axes):
+    return NamedSharding(mesh, make_pspec(shape, axes, mesh))
+
+
+def _batch_extras(cfg: ArchConfig, b: int, mesh, dtype):
+    """Modality-frontend stubs (spec contract: precomputed embeddings)."""
+    extras, shards = {}, {}
+    if cfg.family == "vlm":
+        sh = (b, cfg.n_img_tokens, cfg.d_model)
+        extras["image_emb"] = jax.ShapeDtypeStruct(sh, dtype)
+        shards["image_emb"] = _named(mesh, sh, ("batch", None, None))
+    if cfg.family == "audio":
+        sh = (b, cfg.enc_frames, cfg.d_model)
+        extras["frames"] = jax.ShapeDtypeStruct(sh, dtype)
+        shards["frames"] = _named(mesh, sh, ("batch", "sp", None))
+    return extras, shards
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               causal_mode: str = "brick", grad_accum: int = 1,
+               overrides: Optional[Dict] = None) -> Cell:
+    cfg = get_config(arch, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    reason = cell_skip_reason(cfg, shape)
+    if reason:
+        raise ValueError(f"cell skipped: {reason}")
+    tp = mesh.shape.get("model", 1)
+    lm = build_lm(cfg, tp=tp, causal_mode=causal_mode)
+    b, s = shape.global_batch, shape.seq_len
+    tok_sh = (b, s)
+
+    if shape.kind == "train":
+        # microbatch gradient accumulation: batch gets a leading accum dim
+        # (same global tokens/step, ÷ga activation residency)
+        ga = grad_accum if grad_accum > 1 else cfg.grad_accum
+        state = lm_step.abstract_train_state(lm)
+        state_sh = lm_step.train_state_shardings(lm, mesh)
+        if ga > 1:
+            assert b % ga == 0, (b, ga)
+            tok_sh = (ga, b // ga, s)
+            tok_axes = (None, "batch", None)
+        else:
+            tok_axes = ("batch", None)
+        batch = {"tokens": jax.ShapeDtypeStruct(tok_sh, jnp.int32),
+                 "targets": jax.ShapeDtypeStruct(tok_sh, jnp.int32)}
+        batch_sh = {k: _named(mesh, tok_sh, tok_axes) for k in batch}
+        extras, ex_sh = _batch_extras(cfg, b // ga if ga > 1 else b,
+                                      mesh, lm.dtype)
+        if ga > 1 and extras:
+            extras = {k: jax.ShapeDtypeStruct((ga,) + v.shape, v.dtype)
+                      for k, v in extras.items()}
+            ex_sh = {k: _named(mesh, extras[k].shape,
+                               (None, "batch") + (None,) * (extras[k].ndim - 2))
+                     for k in extras}
+        batch.update(extras)
+        batch_sh.update(ex_sh)
+        step = lm_step.make_train_step(lm, grad_accum=ga)
+        scalar = NamedSharding(mesh, P())
+        out_sh = (state_sh, {"loss": scalar, "grad_norm": scalar,
+                             "lr": scalar})
+        return Cell(arch, shape, lm, step, (state, batch),
+                    (state_sh, batch_sh), out_sh, "train", donate=(0,))
+
+    params = lm.abstract_params()
+    params_sh = lm.param_shardings(mesh)
+
+    if shape.kind == "prefill":
+        tokens = jax.ShapeDtypeStruct(tok_sh, jnp.int32)
+        tokens_sh = _named(mesh, tok_sh, ("batch", None))
+        extras, ex_sh = _batch_extras(cfg, b, mesh, lm.dtype)
+        cache_sh = serve.cache_shardings(lm, b, s, mesh)
+        logits_sh = _named(mesh, (b, 1, lm.v_pad), ("batch", None, "vocab"))
+
+        if extras:
+            def step(p, t, ex):
+                return serve.prefill(lm, p, t, ex)
+            return Cell(arch, shape, lm, step, (params, tokens, extras),
+                        (params_sh, tokens_sh, ex_sh),
+                        (cache_sh, logits_sh), "prefill")
+
+        def step(p, t):
+            return serve.prefill(lm, p, t, None)
+        return Cell(arch, shape, lm, step, (params, tokens),
+                    (params_sh, tokens_sh), (cache_sh, logits_sh), "prefill")
+
+    # decode: one new token against a seq_len-sized cache
+    cache = serve.cache_structs(lm, b, s)
+    cache_sh = serve.cache_shardings(lm, b, s, mesh)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    token_sh = _named(mesh, (b, 1), ("batch", None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_sh = NamedSharding(mesh, P())
+    logits_sh = _named(mesh, (b, 1, lm.v_pad), ("batch", None, "vocab"))
+
+    def step(p, c, t, q):
+        return serve.decode_step(lm, p, c, t, q)
+
+    return Cell(arch, shape, lm, step, (params, cache, token, pos),
+                (params_sh, cache_sh, token_sh, pos_sh),
+                (cache_sh, logits_sh), "decode", donate=(1,))
+
+
+def lower_cell(cell: Cell, mesh: Mesh):
+    """.lower() the cell's step on the mesh (abstract — no allocation)."""
+    from repro.sharding.specs import mesh_context
+    with mesh_context(mesh):
+        jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+        with mesh:
+            lowered = jitted.lower(*cell.abstract_inputs)
+    return lowered

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Per-op diagnosis for the §Perf hillclimb: lowers one cell and prints the
+top collective and top byte-traffic instructions with loop multiplicities.
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch X --shape Y \
+        [--causal-mode brick] [--multi-pod] [--top 15]
+"""
+
+import argparse
+import re
+
+from repro.configs.base import ARCH_IDS, SHAPES
+from repro.launch import hlo_analysis as H
+from repro.launch.cells import build_cell, lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def diagnose(text: str, top: int = 15):
+    comps = H.parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            entry = H._COMP_START_RE.match(line).group(1)
+            break
+    mult, fus = {}, {}
+
+    def visit(name, m, f):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0) + m
+        fus[name] = fus.get(name, True) and f
+        for ins in comps[name].instrs:
+            for callee, ctx, trip in H._callees(ins):
+                visit(callee, m * trip, f or ctx == "fusion")
+
+    visit(entry, 1.0, False)
+
+    colls, bytes_rows = [], []
+    for name, m in mult.items():
+        comp = comps[name]
+        if fus.get(name):
+            continue
+        for ins in comp.instrs:
+            meta = re.search(r'op_name="([^"]*)"', ins.attrs)
+            label = meta.group(1)[-90:] if meta else ins.name
+            kind = H._coll_kind(ins.opcode)
+            if kind and not ins.opcode.endswith("-done"):
+                shapes = ins.out_shapes
+                if ins.opcode.endswith("-start") and len(shapes) > 1:
+                    shapes = shapes[: len(shapes) // 2]
+                b = sum(H._nbytes(dt, d) for dt, d in shapes)
+                colls.append((m * b, m, b, kind, shapes[:1], label))
+            b = H._instr_bytes(ins, comp)
+            if b:
+                bytes_rows.append((m * b, m, ins.opcode,
+                                   ins.out_shapes[:1], label))
+
+    print(f"== top {top} collectives (bytes × multiplicity) ==")
+    for r in sorted(colls, reverse=True)[:top]:
+        print(f"{r[0]/1e9:9.2f} GB  ×{r[1]:<5.0f} {r[3]:15s} {r[4]} {r[5]}")
+    print(f"\n== top {top} byte-traffic instructions ==")
+    for r in sorted(bytes_rows, reverse=True)[:top]:
+        print(f"{r[0]/1e9:9.2f} GB  ×{r[1]:<5.0f} {r[2]:20s} {r[3]} {r[4]}")
+    ana = H.analyze(text)
+    print(f"\nflops={ana['flops']:.3e}  bytes={ana['bytes']:.3e}  "
+          f"bytes_aliased={ana['bytes_aliased']:.3e}  "
+          f"coll={ana['collective_bytes']:.3e}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", choices=list(SHAPES), required=True)
+    ap.add_argument("--causal-mode", default="masked")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--override", action="append", default=[],
+                    help="config override key=value (int)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=")
+        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(args.arch, args.shape, mesh,
+                      causal_mode=args.causal_mode,
+                      grad_accum=args.grad_accum, overrides=overrides)
+    compiled = lower_cell(cell, mesh).compile()
+    diagnose(compiled.as_text(), args.top)
+
+
+if __name__ == "__main__":
+    main()

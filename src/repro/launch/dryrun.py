@@ -1,0 +1,140 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax import (device count locks at first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Success criterion (deliverable e): ``.lower().compile()`` succeeds for the
+(16,16) single-pod mesh AND the (2,16,16) multi-pod mesh for every cell;
+``memory_analysis()`` proves fit; ``cost_analysis()`` + the HLO collective
+scan feed §Roofline.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.cells import build_cell, cell_skip_reason, lower_cell
+from repro.launch.mesh import describe, make_production_mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             causal_mode: str = "brick") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": describe(mesh),
+           "multi_pod": multi_pod, "causal_mode": causal_mode}
+    cfg = get_config(arch)
+    reason = cell_skip_reason(cfg, SHAPES[shape_name])
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return _save(rec, out_dir)
+    try:
+        cell = build_cell(arch, shape_name, mesh, causal_mode=causal_mode)
+        lowered = lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        print("=== memory_analysis ===")
+        print(mem)
+        print("=== cost_analysis (flops/bytes) ===")
+        print({k: v for k, v in cost.items()
+               if k in ("flops", "bytes accessed")} if isinstance(cost, dict)
+              else cost)
+
+        # trip-count-aware analysis (cost_analysis counts scan bodies once;
+        # see hlo_analysis module docstring)
+        from repro.launch import hlo_analysis
+        ana = hlo_analysis.analyze(compiled.as_text())
+        rec.update(
+            status="ok", kind=cell.kind,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            xla_flops_naive=float(cost.get("flops", 0.0)),
+            xla_bytes_naive=float(cost.get("bytes accessed", 0.0)),
+            flops=ana["flops"],                       # per-device, ×trips
+            bytes_accessed=ana["bytes"],
+            collectives={**ana["collectives"],
+                         "total": ana["collective_bytes"],
+                         "n_ops": ana["n_collectives"]},
+            memory=_mem_dict(mem),
+            param_count=cfg.param_count(),
+            active_param_count=cfg.active_param_count(),
+            tokens=SHAPES[shape_name].global_batch
+                   * (1 if cell.kind == "decode" else SHAPES[shape_name].seq_len),
+        )
+    except Exception as e:
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _save(rec, out_dir)
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _save(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "mp" if rec["multi_pod"] else "sp"
+    fn = os.path.join(out_dir, f"{rec['arch']}_{rec['shape']}_{tag}.json")
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] {rec['arch']} × {rec['shape']} ({tag}) "
+          f"-> {rec['status']}" + (f" ({rec.get('error','')})"
+                                   if rec["status"] == "fail" else ""))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--causal-mode", default="brick",
+                    choices=("masked", "brick"))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        fails = 0
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    rec = run_cell(arch, shape, mp, args.out,
+                                   args.causal_mode)
+                    fails += rec["status"] == "fail"
+        sys.exit(1 if fails else 0)
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.out,
+                   args.causal_mode)
+    sys.exit(0 if rec["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a
+``lax.scan`` over 28 layers reports 1/28th of the real layer FLOPs.  All
+our models scan over layers, so naive cost_analysis undercounts by ~L×.
+This module re-derives the roofline terms from ``compiled.as_text()`` with
+while-loop multiplicities propagated through the call graph
+(``backend_config={"known_trip_count":{"n":...}}``).
+
+Per-device quantities produced:
+  * ``flops``        — 2·M·N·K summed over every ``dot`` (MXU work; the
+                       elementwise tail is bandwidth-, not compute-bound);
+  * ``bytes``        — Σ (operands + outputs) over non-fusion-internal
+                       instructions (HloCostAnalysis' definition of
+                       bytes-accessed, i.e. an HBM-traffic upper bound);
+  * ``collectives``  — per-kind payload bytes (per-participant shard sizes,
+                       the operand of the ICI-bandwidth term).
+
+The HLO module of an SPMD-partitioned program is the per-device program, so
+everything here is already per-chip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute", "collective-broadcast")
+
+# free / metadata ops excluded from byte accounting
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _dims(dims_str: str) -> Tuple[int, ...]:
+    return tuple(int(d) for d in dims_str.split(",") if d)
+
+
+def _nbytes(dtype: str, dims: Tuple[int, ...]) -> int:
+    n = _DTYPE_BYTES.get(dtype, 4)
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shape_of: Dict[str, List[Tuple[str, Tuple[int, ...]]]]
+
+
+def _parse_operands(rest: str, op_idx: int) -> Tuple[List[str], str]:
+    """Operand %names inside the balanced parens after the opcode."""
+    i = rest.index("(", op_idx)
+    depth, j = 0, i
+    while j < len(rest):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    args = rest[i + 1: j]
+    attrs = rest[j + 1:]
+    return re.findall(r"%([\w.\-]+)", args), attrs
+
+
+_OPCODE_RE = re.compile(
+    r"^\s*(?:\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)"
+    r"\s+([\w\-]+)\(")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_START_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OPCODE_RE.match(rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        type_part = rest[: om.start(1)]
+        out_shapes = [(dt, _dims(ds)) for dt, ds in _SHAPE_RE.findall(type_part)]
+        operands, attrs = _parse_operands(rest, om.start(1))
+        ins = Instr(name, opcode, out_shapes, operands, attrs)
+        cur.instrs.append(ins)
+        cur.shape_of[name] = out_shapes
+    return comps
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    """2 · |output| · K (K = product of lhs contracting dim sizes)."""
+    out_elems = 1
+    for _, dims in ins.out_shapes[:1]:
+        for d in dims:
+            out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operands:
+        return 0.0
+    lhs = comp.shape_of.get(ins.operands[0])
+    if not lhs:
+        return 0.0
+    lhs_dims = lhs[0][1]
+    k = 1
+    for ci in _dims(m.group(1)):
+        if ci < len(lhs_dims):
+            k *= lhs_dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _instr_bytes(ins: Instr, comp: Computation) -> float:
+    if ins.opcode in _FREE_OPS:
+        return 0.0
+    total = 0
+    for dt, dims in ins.out_shapes:
+        total += _nbytes(dt, dims)
+    for op in ins.operands:
+        for dt, dims in comp.shape_of.get(op, []):
+            total += _nbytes(dt, dims)
+    return float(total)
+
+
+def _instr_bytes_aliased(ins: Instr, comp: Computation) -> float:
+    """Optimistic-aliasing byte model: when an operand has exactly the
+    output's shape (scan accumulators, dynamic-update-slice buffers,
+    elementwise in-place), XLA's buffer assignment aliases it — the write
+    is in-place and the buffer moves once, not twice."""
+    if ins.opcode in _FREE_OPS:
+        return 0.0
+    out_shapes = list(ins.out_shapes)
+    total = sum(_nbytes(dt, d) for dt, d in out_shapes)
+    remaining = list(out_shapes)
+    for op in ins.operands:
+        for dt, dims in comp.shape_of.get(op, []):
+            if (dt, dims) in remaining:
+                remaining.remove((dt, dims))     # aliased with an output
+                continue
+            total += _nbytes(dt, dims)
+    return float(total)
+
+
+def _callees(ins: Instr) -> List[Tuple[str, str, int]]:
+    """(callee, context, trip) — context ∈ {fusion, control}."""
+    out = []
+    if ins.opcode == "while":
+        trip = 1
+        m = _TRIP_RE.search(ins.attrs)
+        if m:
+            trip = int(m.group(1))
+        b = re.search(r"body=%?([\w.\-]+)", ins.attrs)
+        c = re.search(r"condition=%?([\w.\-]+)", ins.attrs)
+        if b:
+            out.append((b.group(1), "control", trip))
+        if c:
+            out.append((c.group(1), "control", trip + 1))
+    elif ins.opcode == "fusion":
+        m = re.search(r"calls=%?([\w.\-]+)", ins.attrs)
+        if m:
+            out.append((m.group(1), "fusion", 1))
+    elif ins.opcode in ("call", "async-start", "custom-call"):
+        m = re.search(r"to_apply=%?([\w.\-]+)", ins.attrs)
+        if m:
+            out.append((m.group(1), "control", 1))
+    elif ins.opcode == "conditional":
+        for m in re.finditer(r"(?:true_computation|false_computation|"
+                             r"branch_computations=\{)[=%]?%?([\w.\-]+)",
+                             ins.attrs):
+            out.append((m.group(1), "control", 1))
+        m = re.search(r"branch_computations=\{([^}]*)\}", ins.attrs)
+        if m:
+            for name in re.findall(r"%([\w.\-]+)", m.group(1)):
+                out.append((name, "control", 1))
+    return out
+
+
+def analyze(text: str) -> Dict:
+    comps = parse_module(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_START_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None or entry not in comps:
+        # fall back: largest computation
+        entry = max(comps, key=lambda k: len(comps[k].instrs))
+
+    # multiplicity propagation (DFS; HLO call graphs are acyclic)
+    mult: Dict[str, float] = {}
+    fusion_ctx: Dict[str, bool] = {}
+
+    def visit(name: str, m: float, in_fusion: bool):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        fusion_ctx[name] = fusion_ctx.get(name, True) and in_fusion
+        for ins in comps[name].instrs:
+            for callee, ctx, trip in _callees(ins):
+                visit(callee, m * trip, in_fusion or ctx == "fusion")
+
+    visit(entry, 1.0, False)
+
+    flops = 0.0
+    bytes_ = 0.0
+    bytes_aliased = 0.0
+    coll = {k: 0.0 for k in COLLECTIVE_KINDS}
+    n_coll = 0.0
+    for name, m in mult.items():
+        comp = comps[name]
+        in_fusion = fusion_ctx.get(name, False)
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+            if in_fusion:
+                continue
+            kind = _coll_kind(ins.opcode)
+            if kind:
+                if ins.opcode.endswith("-done"):
+                    continue
+                b = 0.0
+                shapes = ins.out_shapes
+                if ins.opcode.endswith("-start") and len(shapes) > 1:
+                    shapes = shapes[: len(shapes) // 2]
+                for dt, dims in shapes:
+                    b += _nbytes(dt, dims)
+                coll[kind] += m * b
+                n_coll += m
+            bytes_ += m * _instr_bytes(ins, comp)
+            bytes_aliased += m * _instr_bytes_aliased(ins, comp)
+
+    coll_total = sum(coll.values())
+    return {"flops": flops, "bytes": bytes_,
+            "bytes_aliased": bytes_aliased, "collectives": coll,
+            "collective_bytes": coll_total, "n_collectives": n_coll,
+            "n_computations": len(comps)}
+
+
+def _coll_kind(opcode: str) -> Optional[str]:
+    for k in COLLECTIVE_KINDS:
+        if opcode == k or opcode == k + "-start" or opcode == k + "-done":
+            return k
+    return None

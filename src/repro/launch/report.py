@@ -1,0 +1,69 @@
+"""Assemble EXPERIMENTS.md tables from the dry-run record directory.
+
+    PYTHONPATH=src python -m repro.launch.report \
+        [--dryrun-dir experiments/dryrun] [--out experiments/dryrun_table.md]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(d):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    rows = ["| arch | shape | mesh | status | kind | compile s "
+            "| temp GB/dev | flops/dev | bytes/dev | coll GB/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | skipped "
+                        f"(sub-quadratic rule) | — | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | FAIL | — "
+                        f"| — | — | — | — | — |")
+            continue
+        mem = r.get("memory", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {mesh} | ok | {r['kind']} "
+            f"| {r.get('compile_s', 0):.0f} | {temp:.1f} "
+            f"| {r['flops']:.2e} | {r['bytes_accessed']:.2e} "
+            f"| {r['collectives']['total']/1e9:.1f} |")
+    return "\n".join(rows)
+
+
+def summary(recs) -> str:
+    n_ok = sum(r.get("status") == "ok" for r in recs)
+    n_skip = sum(r.get("status") == "skipped" for r in recs)
+    n_fail = len(recs) - n_ok - n_skip
+    return (f"records: {len(recs)} — ok {n_ok}, skipped {n_skip} "
+            f"(long_500k × full-attention archs), fail {n_fail}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/dryrun_table.md")
+    args = ap.parse_args()
+    recs = load(args.dryrun_dir)
+    out = ("# Dry-run records (" + summary(recs) + ")\n\n"
+           + dryrun_table(recs) + "\n")
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(summary(recs))
+
+
+if __name__ == "__main__":
+    main()

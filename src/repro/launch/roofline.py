@@ -1,0 +1,138 @@
+"""Roofline analysis over the dry-run records (deliverable g).
+
+    PYTHONPATH=src python -m repro.launch.roofline \
+        [--dryrun-dir experiments/dryrun] [--out EXPERIMENTS_roofline.md]
+
+Three-term roofline per (arch × shape), single-pod mesh, from the compiled
+artifact (per-device HLO quantities, trip-count corrected — hlo_analysis.py):
+
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes / HBM_BW
+    collective = collective_bytes / ICI_BW
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(we charge the busiest-link bandwidth — collectives are modeled as
+bandwidth-optimal, so payload bytes/link_bw lower-bounds their time).
+
+Derived:
+    bound        = argmax(term)                       (the bottleneck)
+    t_lb         = max(term)                          (step-time lower bound)
+    MODEL_FLOPS  = 6·N·D (train) / 2·N·D (serve); N = active params (MoE)
+    useful ratio = MODEL_FLOPS / (chips · flops)      (remat/waste factor)
+    MFU bound    = MODEL_FLOPS / (chips · PEAK · t_lb) (roofline fraction —
+                   the §Perf score: achievable MFU given the compiled program)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def roofline_terms(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec.get("multi_pod") else 256
+    flops = rec["flops"]
+    bytes_ = rec["bytes_accessed"]
+    coll = rec["collectives"]["total"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / ICI_BW
+    t_lb = max(t_c, t_m, t_x)
+    bound = {t_c: "compute", t_m: "memory", t_x: "collective"}[t_lb]
+    n = rec.get("active_param_count") or rec["param_count"]
+    mult = 6 if rec.get("kind") == "train" else 2
+    model_flops = mult * n * rec["tokens"]
+    useful = model_flops / max(chips * flops, 1.0)
+    mfu_bound = model_flops / (chips * PEAK_FLOPS * t_lb)
+    return dict(compute_s=t_c, memory_s=t_m, collective_s=t_x, t_lb=t_lb,
+                bound=bound, model_flops=model_flops, useful_ratio=useful,
+                mfu_bound=mfu_bound, chips=chips)
+
+
+def improvement_hint(rec: Dict, terms: Dict) -> str:
+    b = terms["bound"]
+    if b == "collective":
+        c = rec["collectives"]
+        top = max((k for k in c if k not in ("total", "n_ops")),
+                  key=lambda k: c[k])
+        return (f"dominant collective is {top} "
+                f"({c[top]/1e9:.1f} GB/dev) — reshard to convert to "
+                f"reduce-scatter / overlap with compute")
+    if b == "memory":
+        return ("HBM-bound: shrink materialized intermediates (fuse masks "
+                "into flash inner loop, bf16 scores, larger kv-chunk reuse)")
+    return ("compute-bound: cut non-model FLOPs (brick causal schedule, "
+            "remat policy on cheap ops only)")
+
+
+def load_records(d: str, mesh_tag: str = "sp", suffix: str = "") -> List[Dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(d, f"*_{mesh_tag}{suffix}.json"))):
+        base = os.path.basename(fn)
+        if suffix == "" and base.count("_") > 2 and not base.endswith(
+                f"_{mesh_tag}.json"):
+            continue                      # skip variant records in plain scan
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | kind | compute s | memory s | collective s |"
+            " bound | useful | MFU-bound |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for rec in recs:
+        if rec.get("status") == "skipped":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — |"
+                        f" skipped | — | — |")
+            continue
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | — | — | — | — |"
+                        f" FAIL | — | — |")
+            continue
+        t = roofline_terms(rec)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | **{t['bound']}** "
+            f"| {t['useful_ratio']:.2f} | {t['mfu_bound']*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def detail(rec: Dict) -> str:
+    t = roofline_terms(rec)
+    if t is None:
+        return f"* {rec['arch']} × {rec['shape']}: {rec.get('reason', rec.get('error','fail'))}"
+    return (f"* **{rec['arch']} × {rec['shape']}** [{t['bound']}-bound, "
+            f"MFU-bound {t['mfu_bound']*100:.1f}%]: {improvement_hint(rec, t)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="experiments/roofline.md")
+    ap.add_argument("--suffix", default="",
+                    help="record variant, e.g. _brick")
+    args = ap.parse_args()
+    recs = load_records(args.dryrun_dir, "sp", args.suffix)
+    lines = ["# Roofline (single-pod 16×16, per TPU v5e chip)", "",
+             table(recs), "", "## What moves the dominant term", ""]
+    lines += [detail(r) for r in recs if r.get("status") == "ok"]
+    out = "\n".join(lines) + "\n"
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

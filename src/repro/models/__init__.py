@@ -1,0 +1,1 @@
+"""Model zoo: DR-CircuitGNN, homogeneous GNN baselines, LM architectures."""

@@ -1,0 +1,177 @@
+"""DR-CircuitGNN model (paper Fig. 1) + homogeneous GNN baselines.
+
+DR-CircuitGNN: per-type input Linear → 2 × HeteroConv → per-cell Linear head
+(congestion regression).  Baselines: 3-layer GCN / GraphSAGE / GAT on the
+homogenized graph (all edges merged, single node space), matching the paper's
+Table 2 comparison protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hetero_mp import (HeteroLayerParams, HeteroMPConfig,
+                                  hetero_conv, init_hetero_layer)
+from repro.graphs.circuit import CircuitGraph
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------------------
+# DR-CircuitGNN
+# ---------------------------------------------------------------------------
+
+class DRCircuitGNNParams(NamedTuple):
+    in_cell: jax.Array          # (f_cell, H)
+    in_net: jax.Array           # (f_net, H)
+    layers: Tuple[HeteroLayerParams, ...]
+    head_w: jax.Array           # (H, 1)
+    head_b: jax.Array           # (1,)
+
+
+def init_drcircuitgnn(key, f_cell: int, f_net: int, hidden: int,
+                      n_layers: int = 2) -> DRCircuitGNNParams:
+    ks = jax.random.split(key, n_layers + 3)
+    s_c, s_n = 1.0 / jnp.sqrt(f_cell), 1.0 / jnp.sqrt(f_net)
+    return DRCircuitGNNParams(
+        in_cell=jax.random.uniform(ks[0], (f_cell, hidden), jnp.float32, -s_c, s_c),
+        in_net=jax.random.uniform(ks[1], (f_net, hidden), jnp.float32, -s_n, s_n),
+        layers=tuple(init_hetero_layer(ks[2 + i], hidden)
+                     for i in range(n_layers)),
+        head_w=jax.random.uniform(ks[-1], (hidden, 1), jnp.float32,
+                                  -1.0 / jnp.sqrt(hidden), 1.0 / jnp.sqrt(hidden)),
+        head_b=jnp.zeros((1,)))
+
+
+def drcircuitgnn_forward(params: DRCircuitGNNParams, graph: CircuitGraph,
+                         cfg: HeteroMPConfig) -> jax.Array:
+    """Per-cell congestion prediction in [0, 1]."""
+    h_cell = graph.x_cell @ params.in_cell
+    h_net = graph.x_net @ params.in_net
+    for lp in params.layers:
+        h_cell, h_net = hetero_conv(lp, graph, h_cell, h_net, cfg)
+        # inter-layer nonlinearity IS D-ReLU (dense form) — the sparsifier
+        # doubles as the activation, per the paper's framing.
+        from repro.core.drelu import drelu
+        if cfg.use_drelu:
+            h_cell = drelu(h_cell, cfg.k_cell)
+            h_net = drelu(h_net, cfg.k_net)
+        else:
+            h_cell, h_net = jax.nn.relu(h_cell), jax.nn.relu(h_net)
+    pred = jax.nn.sigmoid(h_cell @ params.head_w + params.head_b)
+    return pred[:, 0]
+
+
+def loss_fn(params, graph, cfg) -> jax.Array:
+    pred = drcircuitgnn_forward(params, graph, cfg)
+    return jnp.mean((pred - graph.y_cell) ** 2)
+
+
+# ---------------------------------------------------------------------------
+# Homogeneous baselines (GCN / SAGE / GAT) on the homogenized graph
+# ---------------------------------------------------------------------------
+
+class HomoParams(NamedTuple):
+    w_in: jax.Array
+    w_layers: Tuple[Any, ...]
+    head_w: jax.Array
+    head_b: jax.Array
+
+
+def homogenize(graph: CircuitGraph):
+    """Merge node spaces: [cells; nets], all edges unified, mean-normalized.
+
+    Features are zero-padded into a common width.  Returns (adj, adj_t, x, y,
+    n_cell) with adj in BucketedELL over the merged id space."""
+    import numpy as np
+    from repro.graphs.ell import pack_ell_pair
+
+    n_c, n_n = graph.n_cell, graph.n_net
+    n = n_c + n_n
+    dsts, srcs = [], []
+    for et, es in graph.edges.items():
+        a = np.asarray(es.adj.to_dense())
+        d, s = np.nonzero(a)
+        if et == "near":
+            pass                      # cell->cell
+        elif et == "pin":
+            d = d + n_c               # dst nets offset
+        elif et == "pinned":
+            s = s + n_c               # src nets offset
+        dsts.append(d), srcs.append(s)
+    # self-loops (Â = A + I — GCN/GAT need the node's own features)
+    loop = np.arange(n)
+    dsts.append(loop), srcs.append(loop)
+    dst = np.concatenate(dsts)
+    src = np.concatenate(srcs)
+    deg = np.bincount(dst, minlength=n).astype(np.float32)
+    w = 1.0 / np.maximum(deg[dst], 1.0)
+    adj, adj_t = pack_ell_pair(dst, src, w, n, n)
+
+    f = max(graph.x_cell.shape[1], graph.x_net.shape[1])
+    xc = jnp.pad(graph.x_cell, ((0, 0), (0, f - graph.x_cell.shape[1])))
+    xn = jnp.pad(graph.x_net, ((0, 0), (0, f - graph.x_net.shape[1])))
+    x = jnp.concatenate([xc, xn], 0)
+    return adj, adj_t, x, graph.y_cell, n_c
+
+
+def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
+              kind: str = "gcn") -> HomoParams:
+    ks = jax.random.split(key, n_layers + 2)
+    s = 1.0 / jnp.sqrt(hidden)
+    layers = []
+    for i in range(n_layers):
+        if kind == "sage":
+            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
+                                              jnp.float32, -s, s),
+                           jax.random.uniform(jax.random.fold_in(ks[i], 1),
+                                              (hidden, hidden), jnp.float32, -s, s)))
+        elif kind == "gat":
+            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
+                                              jnp.float32, -s, s),
+                           jax.random.uniform(jax.random.fold_in(ks[i], 1),
+                                              (2 * hidden,), jnp.float32, -s, s)))
+        else:  # gcn
+            layers.append(jax.random.uniform(ks[i], (hidden, hidden),
+                                             jnp.float32, -s, s))
+    si = 1.0 / jnp.sqrt(f_in)
+    return HomoParams(
+        w_in=jax.random.uniform(ks[-2], (f_in, hidden), jnp.float32, -si, si),
+        w_layers=tuple(layers),
+        head_w=jax.random.uniform(ks[-1], (hidden, 1), jnp.float32, -s, s),
+        head_b=jnp.zeros((1,)))
+
+
+def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
+                 kind: str = "gcn", backend: ops.Backend = "xla") -> jax.Array:
+    h = x @ params.w_in
+    for lw in params.w_layers:
+        if kind == "sage":
+            w_nbr, w_self = lw
+            agg = ops.spmm(adj, adj_t, h, backend=backend)
+            h = jax.nn.relu(agg @ w_nbr + h @ w_self)
+        elif kind == "gat":
+            w, a = lw
+            hw = h @ w
+            # single-head GAT, SpMM-decomposable source-score attention plus
+            # an explicit self-attention term.  The additive GATv1 logit
+            # e_ij = σ(s_dst_i + s_src_j) factorizes in exp space and the
+            # destination part cancels in the softmax ratio — but the self
+            # pair (i, i) keeps its full joint score, which is what lets
+            # attention upweight a node's own features.
+            s_src = jnp.exp(jax.nn.leaky_relu(hw @ a[: hw.shape[1]]))
+            s_self = jnp.exp(jax.nn.leaky_relu(
+                hw @ a[: hw.shape[1]] + hw @ a[hw.shape[1]:]))
+            num = ops.spmm(adj, adj_t, s_src[:, None] * hw, backend=backend)
+            den = ops.spmm(adj, adj_t, s_src[:, None], backend=backend)
+            num = num + s_self[:, None] * hw
+            den = den + s_self[:, None]
+            h = jax.nn.relu(num / jnp.maximum(den, 1e-6))
+        else:
+            agg = ops.spmm(adj, adj_t, h, backend=backend)
+            h = jax.nn.relu(agg @ lw)
+    pred = jax.nn.sigmoid(h @ params.head_w + params.head_b)
+    return pred[:n_cell, 0]

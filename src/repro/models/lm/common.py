@@ -1,0 +1,175 @@
+"""Shared LM building blocks: parameter templates, norms, RoPE, embeddings.
+
+Parameter-template system: each model family declares its weights once as a
+nested dict of :class:`PSpec` (shape + logical sharding axes + init).  From
+the template we derive real params, abstract params (for the dry-run — no
+allocation), and NamedShardings, with zero bookkeeping drift between them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.specs import constrain, make_pspec, param_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical name per dim
+    init: str = "normal"                      # normal | zeros | ones
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Template = Dict[str, Any]   # nested dicts of PSpec
+
+
+def _map_template(template: Template, fn):
+    out = {}
+    for k, v in template.items():
+        out[k] = _map_template(v, fn) if isinstance(v, dict) else fn(k, v)
+    return out
+
+
+def init_params(template: Template, key: jax.Array, dtype=jnp.float32):
+    leaves = []
+
+    def collect(k, v):
+        leaves.append((k, v))
+        return None
+
+    _map_template(template, collect)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    it = iter(range(len(leaves)))
+
+    def mk(_, spec: PSpec):
+        i = next(it)
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        return (jax.random.normal(keys[i], spec.shape, jnp.float32)
+                * spec.scale).astype(dtype)
+
+    return _map_template(template, mk)
+
+
+def abstract_params(template: Template, dtype=jnp.float32):
+    """ShapeDtypeStructs — the dry-run's no-allocation parameter stand-ins."""
+    return _map_template(
+        template, lambda _, s: jax.ShapeDtypeStruct(s.shape, dtype))
+
+
+def param_shardings(template: Template, mesh):
+    return _map_template(
+        template, lambda _, s: param_sharding(s.shape, s.axes, mesh))
+
+
+def param_pspecs(template: Template, mesh):
+    return _map_template(
+        template, lambda _, s: make_pspec(s.shape, s.axes, mesh))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def head_rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6):
+    """qk-norm: RMS over the head_dim of (..., H, hd) tensors (qwen3)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e6) -> jax.Array:
+    """Rotary embedding for (..., S, H, hd); ``positions`` is (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1).astype(x.dtype)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_heads(n_heads: int, n_kv: int, tp: int) -> Tuple[int, int]:
+    """Zero-padded head counts so the flat q-head axis shards over ``tp``.
+
+    Padded q heads have zero in/out weights (inert); kv is padded only when
+    needed for the tile mapping (h_pad % kv == 0).  Returns (h_pad, kv_pad).
+    See DESIGN.md §5 / attention.py module docstring.
+    """
+    if tp <= 1 or n_heads % tp == 0:
+        return n_heads, n_kv
+    h_pad = round_up(n_heads, tp)
+    if h_pad % n_kv == 0:
+        return h_pad, n_kv
+    if n_kv == n_heads:                       # MHA: pad kv alongside q
+        return h_pad, h_pad
+    kv_pad = n_kv
+    while h_pad % kv_pad != 0:
+        kv_pad += 1
+    return h_pad, kv_pad
+
+
+def pad_vocab(vocab: int, tp: int) -> int:
+    """Vocab padded for TP sharding; pad logits are masked in the loss."""
+    if tp <= 1:
+        return vocab
+    m = 256 * tp
+    return round_up(vocab, m) if vocab % tp else vocab
+
+
+def cross_entropy_chunked(x_final: jax.Array, out_w: jax.Array,
+                          targets: jax.Array, vocab: int,
+                          chunk: int = 512) -> jax.Array:
+    """Next-token CE computed in sequence chunks so (B,S,V) logits are never
+    resident all at once.  ``out_w`` is (d, V_padded); ids >= vocab never
+    occur in targets (pad rows are inert)."""
+    b, s, d = x_final.shape
+    n_chunks = max(s // chunk, 1)
+    chunk = s // n_chunks
+    xs = x_final.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    v_pad = out_w.shape[-1]
+    pad_mask = (jnp.arange(v_pad) >= vocab) if v_pad > vocab else None
+
+    def body(carry, inp):
+        xc, tc = inp
+        logits = (xc.astype(jnp.float32) @ out_w.astype(jnp.float32))
+        logits = constrain(logits, ("batch", None, "vocab"))
+        if pad_mask is not None:              # mask padded vocab columns
+            logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    # checkpoint: otherwise autodiff saves each chunk's (B, chunk, V) logits
+    # across the scan (§Perf iteration 4) — recomputing one matmul in the
+    # backward is far cheaper than 300 MB/chunk of residuals.
+    total, _ = jax.lax.scan(jax.checkpoint(body),
+                            jnp.zeros((), jnp.float32), (xs, ts))
+    return total / (b * s)

@@ -1,0 +1,212 @@
+"""Mamba-2 SSD (state-space duality) core [arXiv:2405.21060].
+
+Chunked SSD for train/prefill (scan over chunks carrying the inter-chunk
+state) and the O(1) recurrence for decode — this is what makes the
+``long_500k`` cell runnable (DESIGN.md §Arch-applicability: the paper's
+DR-SpMM does not apply inside this core; the state recurrence contracts a
+dense structured matrix).
+
+Projections are kept *separate* (z/x/B/C/dt) rather than fused so each can
+carry its own sharding: the d_inner-sized ones shard over ``model`` ('mlp' /
+'ssm_heads'), the small state projections stay replicated.
+
+Shapes (n_groups = 1):
+    x   : (B, S, H, P)    — P = ssm_head_dim, H = d_inner / P heads
+    B,C : (B, S, N)       — N = ssm_state
+    dt  : (B, S, H)       — softplus-positive step sizes
+    A   : (H,)            — negative decay rates (−exp(a_log))
+state  : (B, H, P, N) f32
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import rms_norm
+from repro.sharding.specs import constrain
+
+CONV_K = 4          # depthwise causal conv width (mamba2 default)
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array      # (B, H, P, N) f32
+    conv_x: jax.Array     # (B, CONV_K-1, d_inner)
+    conv_b: jax.Array     # (B, CONV_K-1, N)
+    conv_c: jax.Array     # (B, CONV_K-1, N)
+
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv.  x (B,S,C); w (CONV_K, C); b (C,)."""
+    pad = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(CONV_K):
+        out = out + pad[:, i: i + x.shape[1]] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def causal_conv1d_step(x_t, conv_state, w, b):
+    """One-token conv.  x_t (B,1,C); conv_state (B, CONV_K-1, C).
+    Returns (out (B,1,C), new_conv_state)."""
+    window = jnp.concatenate([conv_state, x_t], axis=1)      # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b
+    return out[:, None, :].astype(x_t.dtype), window[:, 1:]
+
+
+def ssd_chunked(x, b_mat, c_mat, dt, a_log, d_skip, *, chunk: int,
+                initial_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    chunk = min(chunk, s)
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))             # (B,S,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]              # (B,S,H,P)
+    da = dt * a[None, None, :]                               # (B,S,H) ≤ 0
+
+    xdt = xdt.reshape(bsz, nc, chunk, h, p)
+    da = da.reshape(bsz, nc, chunk, h)
+    bm = b_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+    cm = c_mat.astype(jnp.float32).reshape(bsz, nc, chunk, n)
+
+    cum = jnp.cumsum(da, axis=2)                             # (B,nc,C,H)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: Y_i = Σ_{j≤i} (C_i·B_j) decay_ij xdt_j
+    g = jnp.einsum("bniv,bnjv->bnij", cm, bm)                # (B,nc,C,C)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", g, decay, xdt)
+
+    # chunk-end states: S_n = Σ_j exp(cum_end − cum_j) B_j ⊗ xdt_j
+    end_decay = jnp.exp(cum[:, :, -1:, :] - cum)             # (B,nc,C,H)
+    states = jnp.einsum("bnjh,bnjv,bnjhp->bnhpv", end_decay, bm, xdt)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((bsz, h, p, n), jnp.float32))
+
+    def scan_body(st_in, inp):
+        states_n, cd_n = inp
+        st_out = st_in * cd_n[:, :, None, None] + states_n
+        return st_out, st_in                                 # emit incoming
+
+    final_state, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)       # (B,nc,H,P,N)
+
+    # inter-chunk: Y_i += C_i · prev_state · exp(cum_i)
+    in_decay = jnp.exp(cum)                                  # (B,nc,C,H)
+    y_inter = jnp.einsum("bniv,bnhpv,bnih->bnihp", cm, prev_states, in_decay)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(x_t, b_t, c_t, dt_t, a_log, d_skip, state):
+    """O(1) recurrence: state ← state·exp(dt·a) + dt·(B ⊗ x); y = C·state.
+
+    x_t (B,1,H,P); b_t/c_t (B,1,N); dt_t (B,1,H); state (B,H,P,N) f32."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dt = jax.nn.softplus(dt_t.astype(jnp.float32))[:, 0]      # (B,H)
+    xf = x_t.astype(jnp.float32)[:, 0]                        # (B,H,P)
+    bf = b_t.astype(jnp.float32)[:, 0]                        # (B,N)
+    cf = c_t.astype(jnp.float32)[:, 0]
+    decay = jnp.exp(dt * a[None, :])                          # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dt[..., None], bf)
+    state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, cf)
+    y = y + xf * d_skip[None, :, None]
+    return y[:, None].astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# full mamba2 block (split projections + conv + SSD + gate)
+# ---------------------------------------------------------------------------
+
+def mamba2_block(x, p, cfg, *, mode: str = "train",
+                 cache: Optional[SSMCache] = None
+                 ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """One mamba2 block.  x (B,S,d).
+
+    mode: "train" (no cache), "prefill" (returns cache), "decode"
+    (consumes + returns cache; S must be 1).
+    """
+    bsz, s, d = x.shape
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    p_hd = cfg.ssm_head_dim
+    h = di // p_hd
+    dt_f32 = jnp.float32
+
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"].astype(x.dtype))
+    xc_raw = jnp.einsum("bsd,de->bse", x, p["x_proj"].astype(x.dtype))
+    b_raw = jnp.einsum("bsd,dv->bsv", x, p["b_proj"].astype(x.dtype))
+    c_raw = jnp.einsum("bsd,dv->bsv", x, p["c_proj"].astype(x.dtype))
+    dt = (jnp.einsum("bsd,dh->bsh", x, p["dt_proj"].astype(x.dtype))
+          .astype(dt_f32) + p["dt_bias"][None, None, :])
+    xc_raw = constrain(xc_raw, ("batch", None, "mlp"))
+    z = constrain(z, ("batch", None, "mlp"))
+
+    cw = {k: p[k].astype(x.dtype) for k in
+          ("conv_x_w", "conv_x_b", "conv_b_w", "conv_b_b",
+           "conv_c_w", "conv_c_b")}
+    if mode == "decode":
+        assert cache is not None
+        xc, conv_x = causal_conv1d_step(xc_raw, cache.conv_x,
+                                        cw["conv_x_w"], cw["conv_x_b"])
+        bm, conv_b = causal_conv1d_step(b_raw, cache.conv_b,
+                                        cw["conv_b_w"], cw["conv_b_b"])
+        cm, conv_c = causal_conv1d_step(c_raw, cache.conv_c,
+                                        cw["conv_c_w"], cw["conv_c_b"])
+    else:
+        xc = causal_conv1d(xc_raw, cw["conv_x_w"], cw["conv_x_b"])
+        bm = causal_conv1d(b_raw, cw["conv_b_w"], cw["conv_b_b"])
+        cm = causal_conv1d(c_raw, cw["conv_c_w"], cw["conv_c_b"])
+        conv_x = xc_raw[:, -(CONV_K - 1):]
+        conv_b = b_raw[:, -(CONV_K - 1):]
+        conv_c = c_raw[:, -(CONV_K - 1):]
+
+    xc = jax.nn.silu(xc)
+    bm = jax.nn.silu(bm)
+    cm = jax.nn.silu(cm)
+
+    xh = xc.reshape(bsz, s, h, p_hd)
+    xh = constrain(xh, ("batch", None, "ssm_heads", None))
+
+    new_cache = None
+    if mode == "decode":
+        y, new_state = ssd_decode_step(xh, bm, cm, dt, p["a_log"],
+                                       p["d_skip"], cache.state)
+        new_cache = SSMCache(state=new_state, conv_x=conv_x,
+                             conv_b=conv_b, conv_c=conv_c)
+    else:
+        y, final_state = ssd_chunked(xh, bm, cm, dt, p["a_log"],
+                                     p["d_skip"], chunk=cfg.ssm_chunk)
+        if mode == "prefill":
+            new_cache = SSMCache(state=final_state, conv_x=conv_x,
+                                 conv_b=conv_b, conv_c=conv_c)
+
+    y = y.reshape(bsz, s, di)
+    y = y * jax.nn.silu(z)                      # gated
+    y = rms_norm(y, p["ssd_norm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    return constrain(out, ("batch", "sp", None)), new_cache
+
+
+def init_ssm_cache(bsz: int, cfg, dtype=jnp.float32) -> SSMCache:
+    di = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = di // cfg.ssm_head_dim
+    return SSMCache(
+        state=jnp.zeros((bsz, h, cfg.ssm_head_dim, n), jnp.float32),
+        conv_x=jnp.zeros((bsz, CONV_K - 1, di), dtype),
+        conv_b=jnp.zeros((bsz, CONV_K - 1, n), dtype),
+        conv_c=jnp.zeros((bsz, CONV_K - 1, n), dtype))

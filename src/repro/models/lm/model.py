@@ -1,0 +1,463 @@
+"""LM model zoo: one class, six families, three entry points.
+
+Families: dense (qwen3/minitron/minicpm), ssm (mamba2), moe (moonshot,
+granite), vlm (llama-3.2-vision), audio (whisper enc-dec), hybrid (zamba2).
+
+Entry points (all pure functions of (params, inputs)):
+    loss(params, batch)                      — training objective
+    prefill(params, tokens, extra)           — build KV/SSM cache + last logits
+    decode_step(params, cache, token, pos)   — one-token serve step
+
+Compile-time discipline: every layer stack is a ``lax.scan`` over stacked
+parameters (HLO size independent of depth); heterogeneous stacks (vlm
+cross-attention every 5 layers, zamba2 shared block every 6) are scans over
+*groups* so no per-layer Python unrolling happens at paper scale.
+Remat (``jax.checkpoint``) wraps each layer body when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.lm import attention as attn
+from repro.models.lm import ffn as ffn_mod
+from repro.models.lm import mamba2 as m2
+from repro.models.lm.common import (PSpec, abstract_params, cross_entropy_chunked,
+                                    init_params, pad_heads, pad_vocab,
+                                    param_pspecs, param_shardings, rms_norm)
+from repro.sharding.specs import constrain
+
+Params = Dict[str, Any]
+
+
+def _maybe_remat(fn, enable: bool, policy: str = "full"):
+    if not enable:
+        return fn
+    if policy == "dots":
+        # save ALL matmul outputs (incl. flash internals — measured 2.6×
+        # bytes regression on qwen3; kept for ablation only)
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_saveable)
+    if policy == "proj":
+        # save only the named projection outputs (q/k/v/ctx/ffn-hidden) —
+        # the backward skips their recompute (and its re-all-gathers) while
+        # flash internals still recompute from the saved q/k/v locally
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names("proj"))
+    return jax.checkpoint(fn)
+
+
+class LM:
+    """A config-specialized model: template + apply functions."""
+
+    def __init__(self, cfg: ArchConfig, tp: int = 1, *,
+                 causal_mode: str = "brick"):
+        self.cfg = cfg
+        self.tp = tp
+        self.causal_mode = causal_mode
+        if cfg.family == "ssm":
+            self.h_pad, self.kv_pad = 0, 0
+        else:
+            self.h_pad, self.kv_pad = pad_heads(cfg.n_heads, cfg.n_kv, tp)
+        self.v_pad = pad_vocab(cfg.vocab, tp)
+        self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        self.template = self._build_template()
+
+    # ------------------------------------------------------------------
+    # parameter templates
+    # ------------------------------------------------------------------
+
+    def _attn_tmpl(self, n: int, cross: bool = False) -> Dict[str, PSpec]:
+        c, hd = self.cfg, self.cfg.hd
+        t = {
+            "wq": PSpec((n, c.d_model, self.h_pad, hd),
+                        (None, "embed", "heads", None)),
+            "wk": PSpec((n, c.d_model, self.kv_pad, hd),
+                        (None, "embed", "kv_heads", None)),
+            "wv": PSpec((n, c.d_model, self.kv_pad, hd),
+                        (None, "embed", "kv_heads", None)),
+            "wo": PSpec((n, self.h_pad, hd, c.d_model),
+                        (None, "heads", None, "embed")),
+        }
+        if c.qk_norm and not cross:
+            t["qk_q"] = PSpec((n, hd), (None, None), "ones")
+            t["qk_k"] = PSpec((n, hd), (None, None), "ones")
+        return t
+
+    def _ffn_tmpl(self, n: int, gelu: bool = False) -> Dict[str, PSpec]:
+        c = self.cfg
+        if gelu:
+            return {"w1": PSpec((n, c.d_model, c.d_ff), (None, "embed", "mlp")),
+                    "b1": PSpec((n, c.d_ff), (None, "mlp"), "zeros"),
+                    "w2": PSpec((n, c.d_ff, c.d_model), (None, "mlp", "embed")),
+                    "b2": PSpec((n, c.d_model), (None, None), "zeros")}
+        return {"w_gate": PSpec((n, c.d_model, c.d_ff), (None, "embed", "mlp")),
+                "w_up": PSpec((n, c.d_model, c.d_ff), (None, "embed", "mlp")),
+                "w_down": PSpec((n, c.d_ff, c.d_model), (None, "mlp", "embed"))}
+
+    def _moe_tmpl(self, n: int) -> Dict[str, PSpec]:
+        c = self.cfg
+        return {
+            "router": PSpec((n, c.d_model, c.n_experts), (None, "embed", None)),
+            "w_gate": PSpec((n, c.n_experts, c.d_model, c.d_ff),
+                            (None, "experts", "embed", None)),
+            "w_up": PSpec((n, c.n_experts, c.d_model, c.d_ff),
+                          (None, "experts", "embed", None)),
+            "w_down": PSpec((n, c.n_experts, c.d_ff, c.d_model),
+                            (None, "experts", None, "embed")),
+        }
+
+    def _ssm_tmpl(self, n: int) -> Dict[str, PSpec]:
+        c = self.cfg
+        d, di = c.d_model, c.ssm_expand * c.d_model
+        nst, h = c.ssm_state, (c.ssm_expand * c.d_model) // c.ssm_head_dim
+        k = m2.CONV_K
+        return {
+            "z_proj": PSpec((n, d, di), (None, "embed", "mlp")),
+            "x_proj": PSpec((n, d, di), (None, "embed", "mlp")),
+            "b_proj": PSpec((n, d, nst), (None, "embed", None)),
+            "c_proj": PSpec((n, d, nst), (None, "embed", None)),
+            "dt_proj": PSpec((n, d, h), (None, "embed", "ssm_heads")),
+            "dt_bias": PSpec((n, h), (None, "ssm_heads"), "zeros"),
+            "conv_x_w": PSpec((n, k, di), (None, None, "mlp"), "normal", 0.1),
+            "conv_x_b": PSpec((n, di), (None, "mlp"), "zeros"),
+            "conv_b_w": PSpec((n, k, nst), (None, None, None), "normal", 0.1),
+            "conv_b_b": PSpec((n, nst), (None, None), "zeros"),
+            "conv_c_w": PSpec((n, k, nst), (None, None, None), "normal", 0.1),
+            "conv_c_b": PSpec((n, nst), (None, None), "zeros"),
+            "a_log": PSpec((n, h), (None, "ssm_heads"), "zeros"),
+            "d_skip": PSpec((n, h), (None, "ssm_heads"), "ones"),
+            "ssd_norm": PSpec((n, di), (None, "mlp"), "ones"),
+            "out_proj": PSpec((n, di, d), (None, "mlp", "embed")),
+        }
+
+    def _norms(self, n: int, names) -> Dict[str, PSpec]:
+        return {k: PSpec((n, self.cfg.d_model), (None, None), "ones")
+                for k in names}
+
+    def _build_template(self) -> Params:
+        c = self.cfg
+        t: Params = {
+            "embed": PSpec((self.v_pad, c.d_model), ("vocab", "embed")),
+            "final_norm": PSpec((c.d_model,), (None,), "ones"),
+        }
+        if not c.tie_embeddings:
+            t["out_w"] = PSpec((c.d_model, self.v_pad), ("embed", "vocab"))
+
+        if c.family in ("dense",):
+            t["layers"] = {**self._attn_tmpl(c.n_layers),
+                           **self._ffn_tmpl(c.n_layers),
+                           **self._norms(c.n_layers, ("ln1", "ln2"))}
+        elif c.family == "moe":
+            t["layers"] = {**self._attn_tmpl(c.n_layers),
+                           **self._moe_tmpl(c.n_layers),
+                           **self._norms(c.n_layers, ("ln1", "ln2"))}
+        elif c.family == "ssm":
+            t["layers"] = {**self._ssm_tmpl(c.n_layers),
+                           **self._norms(c.n_layers, ("ln",))}
+        elif c.family == "hybrid":
+            t["layers"] = {**self._ssm_tmpl(c.n_layers),
+                           **self._norms(c.n_layers, ("ln",))}
+            t["shared"] = {**self._attn_tmpl(1), **self._ffn_tmpl(1),
+                           **self._norms(1, ("ln1", "ln2"))}
+        elif c.family == "vlm":
+            n_cross = c.n_layers // c.cross_every
+            n_self = c.n_layers - n_cross
+            self.n_groups = n_cross
+            self.self_per_group = n_self // n_cross
+            t["layers"] = {**self._attn_tmpl(n_self),
+                           **self._ffn_tmpl(n_self),
+                           **self._norms(n_self, ("ln1", "ln2"))}
+            cross = {**self._attn_tmpl(n_cross, cross=True),
+                     **self._ffn_tmpl(n_cross),
+                     **self._norms(n_cross, ("ln1", "ln2"))}
+            cross["gate_attn"] = PSpec((n_cross,), (None,), "zeros")
+            cross["gate_ffn"] = PSpec((n_cross,), (None,), "zeros")
+            t["cross"] = cross
+        elif c.family == "audio":
+            t["enc_layers"] = {**self._attn_tmpl(c.enc_layers),
+                               **self._ffn_tmpl(c.enc_layers, gelu=True),
+                               **self._norms(c.enc_layers, ("ln1", "ln2"))}
+            t["enc_norm"] = PSpec((c.d_model,), (None,), "ones")
+            dec = {**self._attn_tmpl(c.n_layers),
+                   **self._ffn_tmpl(c.n_layers, gelu=True),
+                   **self._norms(c.n_layers, ("ln1", "ln2", "ln_x"))}
+            for k, v in self._attn_tmpl(c.n_layers, cross=True).items():
+                dec["x_" + k] = v
+            t["layers"] = dec
+        else:
+            raise ValueError(c.family)
+        return t
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+
+    def init(self, key) -> Params:
+        return init_params(self.template, key, jnp.float32)
+
+    def abstract_params(self):
+        return abstract_params(self.template, jnp.float32)
+
+    def param_shardings(self, mesh):
+        return param_shardings(self.template, mesh)
+
+    def param_pspecs(self, mesh):
+        return param_pspecs(self.template, mesh)
+
+    def _out_w(self, params):
+        return (params["embed"].T if self.cfg.tie_embeddings
+                else params["out_w"])
+
+    # ------------------------------------------------------------------
+    # layer bodies
+    # ------------------------------------------------------------------
+
+    def _attn_args(self, lp, prefix=""):
+        g = lambda k: lp[prefix + k].astype(self.dtype)
+        qn = lp.get(prefix + "qk_q")
+        return dict(wq=g("wq"), wk=g("wk"), wv=g("wv"), wo=g("wo"),
+                    qk_q=None if qn is None else lp[prefix + "qk_q"],
+                    qk_k=None if qn is None else lp[prefix + "qk_k"],
+                    n_kv=self.kv_pad, rope_theta=self.cfg.rope_theta)
+
+    def _dense_body(self, x, lp, *, kv_out: bool = False):
+        c = self.cfg
+        h = attn.attention_block(rms_norm(x, lp["ln1"]),
+                                 causal_mode=self.causal_mode,
+                                 return_kv=kv_out, **self._attn_args(lp))
+        kv = None
+        if kv_out:
+            h, kv = h
+        x = x + h
+        f = ffn_mod.swiglu_ffn(rms_norm(x, lp["ln2"]),
+                               lp["w_gate"].astype(self.dtype),
+                               lp["w_up"].astype(self.dtype),
+                               lp["w_down"].astype(self.dtype),
+                               drelu_k=c.drelu_k, drelu_groups=self.tp)
+        x = constrain(x + f, ("batch", "sp", None))
+        return (x, kv) if kv_out else x
+
+    def _moe_body(self, xa, lp, *, kv_out: bool = False):
+        x, aux = xa
+        c = self.cfg
+        h = attn.attention_block(rms_norm(x, lp["ln1"]),
+                                 causal_mode=self.causal_mode,
+                                 return_kv=kv_out, **self._attn_args(lp))
+        kv = None
+        if kv_out:
+            h, kv = h
+        x = x + h
+        f, aux_l = ffn_mod.moe_ffn(rms_norm(x, lp["ln2"]),
+                                   lp["router"],
+                                   lp["w_gate"].astype(self.dtype),
+                                   lp["w_up"].astype(self.dtype),
+                                   lp["w_down"].astype(self.dtype),
+                                   n_experts=c.n_experts, top_k=c.top_k,
+                                   capacity_factor=c.capacity_factor)
+        x = constrain(x + f, ("batch", "sp", None))
+        return ((x, aux + aux_l), kv) if kv_out else (x, aux + aux_l)
+
+    def _ssm_body(self, x, lp):
+        h, _ = m2.mamba2_block(rms_norm(x, lp["ln"]), lp, self.cfg)
+        return constrain(x + h, ("batch", "sp", None))
+
+    def _gelu_ffn(self, x, lp, prefix=""):
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x,
+                                   lp[prefix + "w1"].astype(self.dtype))
+                        + lp[prefix + "b1"].astype(self.dtype))
+        h = constrain(h, ("batch", None, "mlp"))
+        return (jnp.einsum("bsf,fd->bsd", h,
+                           lp[prefix + "w2"].astype(self.dtype))
+                + lp[prefix + "b2"].astype(self.dtype))
+
+    # ------------------------------------------------------------------
+    # forward (training): tokens -> final hidden
+    # ------------------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        return constrain(x, ("batch", "sp", None))
+
+    def forward(self, params, tokens, extra: Optional[Dict] = None):
+        """Returns (hidden (B,S,d), aux_loss scalar)."""
+        c = self.cfg
+        x = self._embed(params, tokens)
+        aux = jnp.zeros((), jnp.float32)
+        remat = c.remat
+
+        if c.family == "dense":
+            body = _maybe_remat(lambda x_, lp: (self._dense_body(x_, lp), None),
+                                remat, c.remat_policy)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        elif c.family == "moe":
+            body = _maybe_remat(lambda xa, lp: (self._moe_body(xa, lp), None),
+                                remat, c.remat_policy)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["layers"])
+        elif c.family == "ssm":
+            body = _maybe_remat(lambda x_, lp: (self._ssm_body(x_, lp), None),
+                                remat, c.remat_policy)
+            x, _ = jax.lax.scan(body, x, params["layers"])
+        elif c.family == "hybrid":
+            x = self._hybrid_forward(params, x)
+        elif c.family == "vlm":
+            x = self._vlm_forward(params, x, extra["image_emb"])
+        elif c.family == "audio":
+            x = self._audio_forward(params, x, extra["frames"])
+        return rms_norm(x, params["final_norm"]), aux
+
+    # --- hybrid: shared attention block every attn_every ssm layers -----
+
+    def _shared_block(self, params, x):
+        sp = {k: v[0] for k, v in params["shared"].items()}
+        h = attn.attention_block(rms_norm(x, sp["ln1"]),
+                                 causal_mode=self.causal_mode,
+                                 **self._attn_args(sp))
+        x = x + h
+        f = ffn_mod.swiglu_ffn(rms_norm(x, sp["ln2"]),
+                               sp["w_gate"].astype(self.dtype),
+                               sp["w_up"].astype(self.dtype),
+                               sp["w_down"].astype(self.dtype),
+                               drelu_k=self.cfg.drelu_k, drelu_groups=self.tp)
+        return constrain(x + f, ("batch", "sp", None))
+
+    def _hybrid_split(self, layers):
+        c = self.cfg
+        n_full = (c.n_layers // c.attn_every) * c.attn_every
+        head = jax.tree.map(lambda a: a[:n_full].reshape(
+            (n_full // c.attn_every, c.attn_every) + a.shape[1:]), layers)
+        tail = jax.tree.map(lambda a: a[n_full:], layers)
+        n_tail = c.n_layers - n_full
+        return head, tail, n_full // c.attn_every, n_tail
+
+    def _hybrid_forward(self, params, x):
+        c = self.cfg
+        head, tail, n_groups, n_tail = self._hybrid_split(params["layers"])
+        ssm_body = _maybe_remat(
+            lambda x_, lp: (self._ssm_body(x_, lp), None), c.remat,
+            c.remat_policy)
+
+        def group(x_, glp):
+            x_ = self._shared_block(params, x_)
+            x_, _ = jax.lax.scan(ssm_body, x_, glp)
+            return x_, None
+
+        x, _ = jax.lax.scan(group, x, head)
+        if n_tail:
+            x = self._shared_block(params, x)        # final application
+            x, _ = jax.lax.scan(ssm_body, x, tail)
+        return x
+
+    # --- vlm: groups of self layers + one gated cross-attention ---------
+
+    def _cross_body(self, x, lp, img):
+        h = attn.attention_block(rms_norm(x, lp["ln1"]), kv_x=img,
+                                 causal=False, **self._attn_args(lp))
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * h
+        f = ffn_mod.swiglu_ffn(rms_norm(x, lp["ln2"]),
+                               lp["w_gate"].astype(self.dtype),
+                               lp["w_up"].astype(self.dtype),
+                               lp["w_down"].astype(self.dtype),
+                               drelu_k=self.cfg.drelu_k, drelu_groups=self.tp)
+        x = x + jnp.tanh(lp["gate_ffn"]).astype(x.dtype) * f
+        return constrain(x, ("batch", "sp", None))
+
+    def _vlm_forward(self, params, x, img):
+        c = self.cfg
+        img = constrain(img.astype(self.dtype), ("batch", None, None))
+        k = self.self_per_group
+        grouped = jax.tree.map(
+            lambda a: a.reshape((self.n_groups, k) + a.shape[1:]),
+            params["layers"])
+        self_body = _maybe_remat(
+            lambda x_, lp: (self._dense_body(x_, lp), None), c.remat,
+            c.remat_policy)
+        cross_body = _maybe_remat(
+            lambda x_, lp: self._cross_body(x_, lp, img), c.remat,
+            c.remat_policy)
+
+        def group(x_, inp):
+            slp, clp = inp
+            x_, _ = jax.lax.scan(self_body, x_, slp)
+            x_ = cross_body(x_, clp)
+            return x_, None
+
+        x, _ = jax.lax.scan(group, x, (grouped, params["cross"]))
+        return x
+
+    # --- audio: whisper encoder-decoder ---------------------------------
+
+    def _enc_body(self, x, lp):
+        h = attn.attention_block(rms_norm(x, lp["ln1"]), causal=False,
+                                 **self._attn_args(lp))
+        x = x + h
+        x = x + self._gelu_ffn(rms_norm(x, lp["ln2"]), lp)
+        return constrain(x, ("batch", "sp", None))
+
+    def _dec_body(self, x, lp, enc_out, *, kv_out: bool = False):
+        h = attn.attention_block(rms_norm(x, lp["ln1"]),
+                                 causal_mode=self.causal_mode,
+                                 return_kv=kv_out, **self._attn_args(lp))
+        kv = None
+        if kv_out:
+            h, kv = h
+        x = x + h
+        hx = attn.attention_block(rms_norm(x, lp["ln_x"]), kv_x=enc_out,
+                                  causal=False,
+                                  return_kv=kv_out,
+                                  **self._attn_args(lp, prefix="x_"))
+        xkv = None
+        if kv_out:
+            hx, xkv = hx
+        x = x + hx
+        x = x + self._gelu_ffn(rms_norm(x, lp["ln2"]), lp)
+        x = constrain(x, ("batch", "sp", None))
+        return (x, (kv, xkv)) if kv_out else x
+
+    def encode_audio(self, params, frames):
+        """frames (B, F, d) — precomputed mel-frame embeddings (stub)."""
+        x = constrain(frames.astype(self.dtype), ("batch", "sp", None))
+        body = _maybe_remat(lambda x_, lp: (self._enc_body(x_, lp), None),
+                            self.cfg.remat, self.cfg.remat_policy)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(x, params["enc_norm"])
+
+    def _audio_forward(self, params, x, frames):
+        enc_out = self.encode_audio(params, frames)
+        body = _maybe_remat(
+            lambda x_, lp: (self._dec_body(x_, lp, enc_out), None),
+            self.cfg.remat, self.cfg.remat_policy)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    # ------------------------------------------------------------------
+    # loss
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch: Dict) -> jax.Array:
+        extra = {k: v for k, v in batch.items()
+                 if k not in ("tokens", "targets")}
+        hidden, aux = self.forward(params, batch["tokens"], extra or None)
+        ce = cross_entropy_chunked(hidden, self._out_w(params),
+                                   batch["targets"], self.cfg.vocab)
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # serve: prefill + decode  (see serve.py for cache plumbing)
+    # ------------------------------------------------------------------
+
+    def logits_last(self, params, hidden_last):
+        """hidden_last (B,1,d) -> (B,1,V_pad)."""
+        logits = jnp.einsum("bsd,dv->bsv", hidden_last.astype(jnp.float32),
+                            self._out_w(params).astype(jnp.float32))
+        return constrain(logits, ("batch", None, "vocab"))
+
+
+def build_lm(cfg: ArchConfig, tp: int = 1, **kw) -> LM:
+    return LM(cfg, tp, **kw)

@@ -1,0 +1,435 @@
+"""Serving: cache templates, prefill, and one-token decode for every family.
+
+Cache layout notes (axes are logical sharding names, DESIGN.md §5):
+* attention KV caches are **sequence-sharded** over ``model`` ('kv_seq') —
+  at decode_32k×B128 or long_500k they cannot live on fewer devices — and
+  batch-sharded over data/pod;
+* SSM caches shard the head axis ('ssm_heads' → model) and batch;
+* cross-attention caches (image tokens / audio frames) are short — batch
+  sharding only.
+
+``decode_step`` is the serve_step the decode_* dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import attention as attn
+from repro.models.lm import ffn as ffn_mod
+from repro.models.lm import mamba2 as m2
+from repro.models.lm.common import rms_norm, rope, head_rms_norm
+from repro.models.lm.model import LM
+from repro.sharding.specs import constrain, param_sharding
+
+CacheTmpl = Dict[str, Tuple[Tuple[int, ...], Tuple[Any, ...], Any]]
+
+
+# ---------------------------------------------------------------------------
+# cache templates
+# ---------------------------------------------------------------------------
+
+def cache_template(lm: LM, batch: int, s_max: int) -> CacheTmpl:
+    """name -> (shape, logical axes, dtype)."""
+    c = lm.cfg
+    kv, hd = lm.kv_pad, c.hd
+    dt = lm.dtype
+    kv_axes = (None, "batch", "kv_seq", None, None)
+
+    if c.family in ("dense", "moe"):
+        shape = (c.n_layers, batch, s_max, kv, hd)
+        return {"k": (shape, kv_axes, dt), "v": (shape, kv_axes, dt)}
+
+    if c.family == "ssm":
+        return _ssm_cache_tmpl(c, c.n_layers, batch, dt)
+
+    if c.family == "hybrid":
+        t = _ssm_cache_tmpl(c, c.n_layers, batch, dt)
+        n_app = -(-c.n_layers // c.attn_every)       # ceil — one per group
+        shape = (n_app, batch, s_max, kv, hd)
+        t["sk"] = (shape, kv_axes, dt)
+        t["sv"] = (shape, kv_axes, dt)
+        return t
+
+    if c.family == "vlm":
+        g, spg = lm.n_groups, lm.self_per_group
+        self_shape = (g, spg, batch, s_max, kv, hd)
+        self_axes = (None, None, "batch", "kv_seq", None, None)
+        x_shape = (g, batch, c.n_img_tokens, kv, hd)
+        x_axes = (None, "batch", None, None, None)
+        return {"k": (self_shape, self_axes, dt),
+                "v": (self_shape, self_axes, dt),
+                "xk": (x_shape, x_axes, dt), "xv": (x_shape, x_axes, dt)}
+
+    if c.family == "audio":
+        shape = (c.n_layers, batch, s_max, kv, hd)
+        x_shape = (c.n_layers, batch, c.enc_frames, kv, hd)
+        x_axes = (None, "batch", None, None, None)
+        return {"k": (shape, kv_axes, dt), "v": (shape, kv_axes, dt),
+                "xk": (x_shape, x_axes, dt), "xv": (x_shape, x_axes, dt)}
+    raise ValueError(c.family)
+
+
+def _ssm_cache_tmpl(c, n_layers, batch, dt):
+    di = c.ssm_expand * c.d_model
+    n = c.ssm_state
+    h = di // c.ssm_head_dim
+    k = m2.CONV_K - 1
+    return {
+        "state": ((n_layers, batch, h, c.ssm_head_dim, n),
+                  (None, "batch", "ssm_heads", None, None), jnp.float32),
+        "conv_x": ((n_layers, batch, k, di), (None, "batch", None, "mlp"), dt),
+        "conv_b": ((n_layers, batch, k, n), (None, "batch", None, None), dt),
+        "conv_c": ((n_layers, batch, k, n), (None, "batch", None, None), dt),
+    }
+
+
+def cache_structs(lm: LM, batch: int, s_max: int):
+    return {k: jax.ShapeDtypeStruct(sh, d)
+            for k, (sh, ax, d) in cache_template(lm, batch, s_max).items()}
+
+
+def cache_shardings(lm: LM, batch: int, s_max: int, mesh):
+    return {k: param_sharding(sh, ax, mesh)
+            for k, (sh, ax, d) in cache_template(lm, batch, s_max).items()}
+
+
+def cache_zeros(lm: LM, batch: int, s_max: int):
+    return {k: jnp.zeros(sh, d)
+            for k, (sh, ax, d) in cache_template(lm, batch, s_max).items()}
+
+
+# ---------------------------------------------------------------------------
+# decode-time attention sublayer (projection + distributed flash-decode)
+# ---------------------------------------------------------------------------
+
+def _decode_attn(lm: LM, x, lp, kc, vc, pos, prefix=""):
+    """x (B,1,d) -> (attn_out (B,1,d), kc, vc)."""
+    c = lm.cfg
+    dt = lm.dtype
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhe->bshe", x, lp[prefix + "wq"].astype(dt))
+    nk = jnp.einsum("bsd,dke->bske", x, lp[prefix + "wk"].astype(dt))
+    nv = jnp.einsum("bsd,dke->bske", x, lp[prefix + "wv"].astype(dt))
+    if (prefix + "qk_q") in lp:
+        q = head_rms_norm(q, lp[prefix + "qk_q"])
+        nk = head_rms_norm(nk, lp[prefix + "qk_k"])
+    if getattr(pos, "ndim", 0) == 1:
+        positions = pos[:, None]                   # per-slot positions (B,1)
+    else:
+        positions = jnp.broadcast_to(pos, (b, 1))
+    q = rope(q, positions, c.rope_theta)
+    nk = rope(nk, positions, c.rope_theta)
+    ctx, kc, vc = attn.decode_attention(q, kc, vc, pos,
+                                        nk.astype(kc.dtype),
+                                        nv.astype(vc.dtype))
+    out = jnp.einsum("bshe,hed->bsd", ctx, lp[prefix + "wo"].astype(dt))
+    return out, kc, vc
+
+
+def _decode_cross(lm: LM, x, lp, xk, xv, prefix="x_"):
+    """Cross-attention against a static (short) cached memory."""
+    dt = lm.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, lp[prefix + "wq"].astype(dt))
+    ctx = attn._local_decode(q, xk, xv, jnp.asarray(xk.shape[1] - 1), 0)
+    return jnp.einsum("bshe,hed->bsd", ctx, lp[prefix + "wo"].astype(dt))
+
+
+def _decode_ffn(lm: LM, x, lp):
+    c = lm.cfg
+    if c.family == "moe":
+        y, _ = ffn_mod.moe_ffn(x, lp["router"],
+                               lp["w_gate"].astype(lm.dtype),
+                               lp["w_up"].astype(lm.dtype),
+                               lp["w_down"].astype(lm.dtype),
+                               n_experts=c.n_experts, top_k=c.top_k,
+                               capacity_factor=c.capacity_factor)
+        return y
+    if c.family == "audio":
+        return lm._gelu_ffn(x, lp)
+    if c.drelu_k:
+        # D-ReLU structural sparsity: decode down-proj gathers only the k
+        # surviving rows of W_down (paper technique, DR-SpMM analogue).
+        return ffn_mod.swiglu_ffn_decode_sparse(
+            x, lp["w_gate"].astype(lm.dtype), lp["w_up"].astype(lm.dtype),
+            lp["w_down"].astype(lm.dtype), c.drelu_k)
+    return ffn_mod.swiglu_ffn(x, lp["w_gate"].astype(lm.dtype),
+                              lp["w_up"].astype(lm.dtype),
+                              lp["w_down"].astype(lm.dtype))
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(lm: LM, params, tokens, extra: Optional[Dict] = None,
+            s_max: Optional[int] = None):
+    """Run the full prompt; returns (cache, last-token logits).
+
+    The cache covers [0, s_max); tokens fill positions [0, S).
+    """
+    c = lm.cfg
+    b, s = tokens.shape
+    s_max = s_max or s
+    assert s_max == s, "prefill cache sized to prompt (pad prompt to s_max)"
+    x = lm._embed(params, tokens)
+
+    if c.family in ("dense", "moe"):
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, lp):
+            if c.family == "dense":
+                x_, kv = lm._dense_body(carry, lp, kv_out=True)
+                return x_, kv
+            (x_, aux), kv = lm._moe_body(carry, lp, kv_out=True)
+            return (x_, aux), kv
+
+        carry0 = x if c.family == "dense" else (x, aux0)
+        carry, kvs = jax.lax.scan(body, carry0, params["layers"])
+        x = carry if c.family == "dense" else carry[0]
+        cache = {"k": kvs[0], "v": kvs[1]}
+
+    elif c.family == "ssm":
+        def body(x_, lp):
+            h, cch = m2.mamba2_block(rms_norm(x_, lp["ln"]), lp, c,
+                                     mode="prefill")
+            return constrain(x_ + h, ("batch", "sp", None)), cch
+
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        cache = {"state": caches.state, "conv_x": caches.conv_x,
+                 "conv_b": caches.conv_b, "conv_c": caches.conv_c}
+
+    elif c.family == "hybrid":
+        cache = _hybrid_prefill_body(lm, params, x)
+        x, cache = cache
+
+    elif c.family == "vlm":
+        img = extra["image_emb"].astype(lm.dtype)
+        grouped = jax.tree.map(
+            lambda a: a.reshape((lm.n_groups, lm.self_per_group) + a.shape[1:]),
+            params["layers"])
+
+        def self_body(x_, lp):
+            x_, kv = lm._dense_body(x_, lp, kv_out=True)
+            return x_, kv
+
+        def group(x_, inp):
+            slp, clp = inp
+            x_, kvs = jax.lax.scan(self_body, x_, slp)
+            xk = jnp.einsum("bsd,dke->bske", img, clp["wk"].astype(lm.dtype))
+            xv = jnp.einsum("bsd,dke->bske", img, clp["wv"].astype(lm.dtype))
+            x_ = lm._cross_body(x_, clp, img)
+            return x_, (kvs, (xk.astype(lm.dtype), xv.astype(lm.dtype)))
+
+        x, (kvs, xkvs) = jax.lax.scan(group, x, (grouped, params["cross"]))
+        cache = {"k": kvs[0], "v": kvs[1], "xk": xkvs[0], "xv": xkvs[1]}
+
+    elif c.family == "audio":
+        enc_out = lm.encode_audio(params, extra["frames"])
+
+        def body(x_, lp):
+            x_, (kv, xkv) = lm._dec_body(x_, lp, enc_out, kv_out=True)
+            return x_, (kv, xkv)
+
+        x, (kvs, xkvs) = jax.lax.scan(body, x, params["layers"])
+        cache = {"k": kvs[0], "v": kvs[1], "xk": xkvs[0], "xv": xkvs[1]}
+    else:
+        raise ValueError(c.family)
+
+    hidden = rms_norm(x, params["final_norm"])[:, -1:]
+    return cache, lm.logits_last(params, hidden)
+
+
+def _hybrid_prefill_body(lm: LM, params, x):
+    c = lm.cfg
+    head, tail, n_groups, n_tail = lm._hybrid_split(params["layers"])
+
+    def ssm_body(x_, lp):
+        h, cch = m2.mamba2_block(rms_norm(x_, lp["ln"]), lp, c,
+                                 mode="prefill")
+        return constrain(x_ + h, ("batch", "sp", None)), cch
+
+    def shared_kv(x_):
+        sp = {k: v[0] for k, v in params["shared"].items()}
+        h, (sk, sv) = attn.attention_block(
+            rms_norm(x_, sp["ln1"]), causal_mode=lm.causal_mode,
+            return_kv=True, **lm._attn_args(sp))
+        x_ = x_ + h
+        f = ffn_mod.swiglu_ffn(rms_norm(x_, sp["ln2"]),
+                               sp["w_gate"].astype(lm.dtype),
+                               sp["w_up"].astype(lm.dtype),
+                               sp["w_down"].astype(lm.dtype),
+                               drelu_k=c.drelu_k, drelu_groups=lm.tp)
+        return constrain(x_ + f, ("batch", "sp", None)), sk, sv
+
+    def group(x_, glp):
+        x_, sk, sv = shared_kv(x_)
+        x_, cch = jax.lax.scan(ssm_body, x_, glp)
+        return x_, (cch, sk, sv)
+
+    x, (cch_head, sks, svs) = jax.lax.scan(group, x, head)
+    caches = cch_head
+    if n_tail:
+        x, sk_t, sv_t = shared_kv(x)
+        x, cch_tail = jax.lax.scan(ssm_body, x, tail)
+        caches = jax.tree.map(lambda a, b: jnp.concatenate([a.reshape(
+            (n_groups * c.attn_every,) + a.shape[2:]), b], 0),
+            cch_head, cch_tail)
+        sks = jnp.concatenate([sks, sk_t[None]], 0)
+        svs = jnp.concatenate([svs, sv_t[None]], 0)
+    else:
+        caches = jax.tree.map(lambda a: a.reshape(
+            (n_groups * c.attn_every,) + a.shape[2:]), cch_head)
+    cache = {"state": caches.state, "conv_x": caches.conv_x,
+             "conv_b": caches.conv_b, "conv_c": caches.conv_c,
+             "sk": sks, "sv": svs}
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def decode_step(lm: LM, params, cache: Dict, token, pos):
+    """One serve step: token (B,1) int32, pos scalar int32.
+
+    Returns (new_cache, logits (B,1,V_pad))."""
+    c = lm.cfg
+    x = lm._embed(params, token)
+
+    if c.family in ("dense", "moe"):
+        def body(x_, inp):
+            lp, kc, vc = inp
+            h, kc, vc = _decode_attn(lm, rms_norm(x_, lp["ln1"]), lp,
+                                     kc, vc, pos)
+            x_ = x_ + h
+            x_ = x_ + _decode_ffn(lm, rms_norm(x_, lp["ln2"]), lp)
+            return x_, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+
+    elif c.family == "ssm":
+        def body(x_, inp):
+            lp, st, cx, cb, cc = inp
+            h, cch = m2.mamba2_block(
+                rms_norm(x_, lp["ln"]), lp, c, mode="decode",
+                cache=m2.SSMCache(state=st, conv_x=cx, conv_b=cb, conv_c=cc))
+            return x_ + h, cch
+
+        x, cch = jax.lax.scan(body, x, (params["layers"], cache["state"],
+                                        cache["conv_x"], cache["conv_b"],
+                                        cache["conv_c"]))
+        new_cache = {"state": cch.state, "conv_x": cch.conv_x,
+                     "conv_b": cch.conv_b, "conv_c": cch.conv_c}
+
+    elif c.family == "hybrid":
+        x, new_cache = _hybrid_decode_body(lm, params, cache, x, pos)
+
+    elif c.family == "vlm":
+        def self_body(x_, inp):
+            lp, kc, vc = inp
+            h, kc, vc = _decode_attn(lm, rms_norm(x_, lp["ln1"]), lp,
+                                     kc, vc, pos)
+            x_ = x_ + h
+            x_ = x_ + _decode_ffn(lm, rms_norm(x_, lp["ln2"]), lp)
+            return x_, (kc, vc)
+
+        grouped = jax.tree.map(
+            lambda a: a.reshape((lm.n_groups, lm.self_per_group) + a.shape[1:]),
+            params["layers"])
+
+        def group(x_, inp):
+            slp, kc, vc, clp, xk, xv = inp
+            x_, (kc, vc) = jax.lax.scan(self_body, x_, (slp, kc, vc))
+            h = _decode_cross(lm, rms_norm(x_, clp["ln1"]), clp, xk, xv,
+                              prefix="")
+            x_ = x_ + jnp.tanh(clp["gate_attn"]).astype(x_.dtype) * h
+            f = _decode_ffn(lm, rms_norm(x_, clp["ln2"]), clp)
+            x_ = x_ + jnp.tanh(clp["gate_ffn"]).astype(x_.dtype) * f
+            return x_, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(
+            group, x, (grouped, cache["k"], cache["v"], params["cross"],
+                       cache["xk"], cache["xv"]))
+        new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+
+    elif c.family == "audio":
+        def body(x_, inp):
+            lp, kc, vc, xk, xv = inp
+            h, kc, vc = _decode_attn(lm, rms_norm(x_, lp["ln1"]), lp,
+                                     kc, vc, pos)
+            x_ = x_ + h
+            x_ = x_ + _decode_cross(lm, rms_norm(x_, lp["ln_x"]), lp, xk, xv)
+            x_ = x_ + _decode_ffn(lm, rms_norm(x_, lp["ln2"]), lp)
+            return x_, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"], cache["xk"],
+                                             cache["xv"]))
+        new_cache = {"k": ks, "v": vs, "xk": cache["xk"], "xv": cache["xv"]}
+    else:
+        raise ValueError(c.family)
+
+    hidden = rms_norm(x, params["final_norm"])
+    return new_cache, lm.logits_last(params, hidden)
+
+
+def _hybrid_decode_body(lm: LM, params, cache, x, pos):
+    c = lm.cfg
+    head, tail, n_groups, n_tail = lm._hybrid_split(params["layers"])
+    n_full = n_groups * c.attn_every
+    sp = {k: v[0] for k, v in params["shared"].items()}
+
+    def ssm_body(x_, inp):
+        lp, st, cx, cb, cc = inp
+        h, cch = m2.mamba2_block(
+            rms_norm(x_, lp["ln"]), lp, c, mode="decode",
+            cache=m2.SSMCache(state=st, conv_x=cx, conv_b=cb, conv_c=cc))
+        return x_ + h, cch
+
+    def shared(x_, kc, vc):
+        h, kc, vc = _decode_attn(lm, rms_norm(x_, sp["ln1"]), sp, kc, vc, pos)
+        x_ = x_ + h
+        x_ = x_ + _decode_ffn(lm, rms_norm(x_, sp["ln2"]), sp)
+        return x_, kc, vc
+
+    ssm_head = jax.tree.map(lambda a: a[:n_full].reshape(
+        (n_groups, c.attn_every) + a.shape[1:]),
+        {k: cache[k] for k in ("state", "conv_x", "conv_b", "conv_c")})
+    ssm_tail = jax.tree.map(lambda a: a[n_full:],
+                            {k: cache[k] for k in ("state", "conv_x",
+                                                   "conv_b", "conv_c")})
+
+    def group(x_, inp):
+        glp, gc, kc, vc = inp
+        x_, kc, vc = shared(x_, kc, vc)
+        x_, cch = jax.lax.scan(ssm_body, x_, (glp, gc["state"], gc["conv_x"],
+                                              gc["conv_b"], gc["conv_c"]))
+        return x_, (cch, kc, vc)
+
+    x, (cch_head, sks, svs) = jax.lax.scan(
+        group, x, (head, ssm_head, cache["sk"][:n_groups],
+                   cache["sv"][:n_groups]))
+    flat_head = jax.tree.map(
+        lambda a: a.reshape((n_full,) + a.shape[2:]), cch_head)
+    if n_tail:
+        x, sk_t, sv_t = shared(x, cache["sk"][n_groups], cache["sv"][n_groups])
+        x, cch_tail = jax.lax.scan(ssm_body, x,
+                                   (tail, ssm_tail["state"],
+                                    ssm_tail["conv_x"], ssm_tail["conv_b"],
+                                    ssm_tail["conv_c"]))
+        merged = jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                              flat_head, cch_tail)
+        sks = jnp.concatenate([sks, sk_t[None]], 0)
+        svs = jnp.concatenate([svs, sv_t[None]], 0)
+    else:
+        merged = flat_head
+    new_cache = {"state": merged.state, "conv_x": merged.conv_x,
+                 "conv_b": merged.conv_b, "conv_c": merged.conv_c,
+                 "sk": sks, "sv": svs}
+    return x, new_cache

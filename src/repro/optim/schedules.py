@@ -1,0 +1,38 @@
+"""LR schedules.  WSD (warmup-stable-decay) is required by the minicpm-2b
+assigned architecture [arXiv:2404.06395]."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        # warmup reaches lr at `warmup`, starting ABOVE zero at step 0
+        # (an lr of exactly 0 makes the first optimizer step a no-op)
+        warm = jnp.minimum((step + 1.0) / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * warm * cos
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, min_ratio: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup, flat plateau, sharp final decay."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum((step + 1.0) / warmup, 1.0)
+        t = jnp.clip((step - decay_start) / jnp.maximum(total_steps - decay_start, 1),
+                     0.0, 1.0)
+        decay = 1.0 - (1.0 - min_ratio) * t
+        return lr * warm * decay
+    return f

@@ -1,0 +1,124 @@
+"""Continuous-batching serve engine (vLLM-lite).
+
+Slot-based scheduler over the LM's one-token decode step:
+
+* a fixed pool of B cache slots (static shapes — TPU-compile-once);
+* every engine step decodes ONE token for every active slot, each at its
+  own position (the vector-``pos`` decode path in models/lm/attention.py);
+* prompt consumption and generation use the same step: while a slot still
+  has prompt tokens left, the model's prediction is discarded and the next
+  prompt token is fed (ragged prefill-by-decode, so requests of different
+  lengths join/leave the batch at any step with zero recompilation);
+* finished slots are freed and immediately refilled from the queue.
+
+One jitted function serves the whole lifecycle.  For the 32k-cache shapes
+the caches are sequence-sharded over ``model`` exactly as in the dry-run
+cells; the engine is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import serve
+from repro.models.lm.model import LM
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    _consumed: int = 0         # prompt tokens already fed
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, lm: LM, params, *, max_batch: int, s_max: int,
+                 sample: Optional[Callable] = None):
+        self.lm = lm
+        self.params = params
+        self.b = max_batch
+        self.s_max = s_max
+        self.sample = sample or (lambda logits: int(np.argmax(logits)))
+        self.cache = serve.cache_zeros(lm, max_batch, s_max)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int32)     # next write position
+        self.queue: Deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        self._rid = itertools.count()
+        self._decode = jax.jit(
+            lambda p, c, t, q: serve.decode_step(lm, p, c, t, q))
+
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt: List[int], max_new_tokens: int = 16) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid, list(prompt), max_new_tokens))
+        return rid
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _admit(self):
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.pos[i] = 0
+
+    def step(self) -> int:
+        """One engine step: decode one token for every active slot.
+        Returns the number of active slots processed."""
+        self._admit()
+        if self.n_active == 0:
+            return 0
+        token = np.zeros((self.b, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if req._consumed < len(req.prompt):
+                token[i, 0] = req.prompt[req._consumed]
+            else:
+                token[i, 0] = req.generated[-1]
+        pos_vec = jnp.asarray(np.where(
+            [s is not None for s in self.slots], self.pos, 0))
+        self.cache, logits = self._decode(self.params, self.cache,
+                                          jnp.asarray(token), pos_vec)
+        logits_np = np.asarray(logits[:, 0, : self.lm.cfg.vocab], np.float32)
+
+        n = 0
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            n += 1
+            self.pos[i] += 1
+            if req._consumed < len(req.prompt):
+                req._consumed += 1
+                if req._consumed == len(req.prompt):
+                    req.generated.append(self.sample(logits_np[i]))
+            else:
+                req.generated.append(self.sample(logits_np[i]))
+            if req.done or self.pos[i] >= self.s_max:
+                self.finished[req.rid] = req
+                self.slots[i] = None
+        return n
+
+    def run(self, max_steps: int = 10_000) -> Dict[int, Request]:
+        for _ in range(max_steps):
+            if self.n_active == 0 and not self.queue:
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,2 @@
+from repro.sharding.specs import (RULES, constrain, make_pspec, set_mesh,  # noqa: F401
+                                  get_mesh, mesh_context, param_sharding)

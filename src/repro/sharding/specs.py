@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Models annotate tensors with *logical* axis names; this module maps them to
+mesh axes per :data:`RULES`, dropping any mapping whose divisibility fails
+(a replicated axis is always correct, never wrong — the roofline analysis
+then shows the cost and the perf loop fixes the layout, e.g. by head
+padding).
+
+Mesh axes:
+    pod    — inter-pod data parallelism (multi-pod mesh only)
+    data   — intra-pod data parallelism + FSDP (ZeRO-3) param sharding
+    model  — tensor parallelism (heads / mlp / vocab / experts / kv-seq)
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (in priority order; multiple axes multiply)
+RULES = {
+    "batch": ("pod", "data"),
+    "sp": ("model",),          # sequence-parallel residual storage
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "embed": ("data",),        # FSDP axis for parameter d_model dims
+    "kv_seq": ("model",),      # decode-time KV/state cache sequence sharding
+    "ssm_heads": ("model",),
+    None: (),
+}
+
+_state = threading.local()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _axes_for(logical: Optional[str], mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in RULES.get(logical, ()) if a in mesh.axis_names)
+
+
+def make_pspec(shape: Sequence[int], axes: Sequence[Optional[str]],
+               mesh: Mesh) -> P:
+    """PartitionSpec for ``shape`` under logical ``axes`` — replicating any
+    dim whose size is not divisible by its mesh-axis product."""
+    assert len(shape) == len(axes), (shape, axes)
+    spec = []
+    for dim, name in zip(shape, axes):
+        mesh_axes = _axes_for(name, mesh)
+        size = 1
+        for a in mesh_axes:
+            size *= mesh.shape[a]
+        if mesh_axes and dim % size == 0 and dim > 0:
+            spec.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a mesh or
+    inside a manual (shard_map) region, where shard_map's specs govern."""
+    mesh = get_mesh()
+    if mesh is None or mesh.size == 1 or manual_axes():
+        return x
+    spec = make_pspec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
+                   mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, make_pspec(shape, axes, mesh))
+
+
+def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
+    mesh = mesh or get_mesh()
+    return tuple(a for a in ("pod", "data") if mesh and a in mesh.axis_names)
+
+
+def manual_axes() -> Tuple[str, ...]:
+    """Mesh axes already in Manual mode (i.e. we are inside a shard_map).
+    Nested full-manual shard_maps over a mismatched mesh are rejected by
+    JAX, so callers fall back to plain jnp in that case."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or not m.axis_names:
+            return ()
+        return tuple(n for n, t in zip(m.axis_names, m.axis_types)
+                     if "Manual" in str(t))
+    except Exception:
+        return ()

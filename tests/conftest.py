@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see exactly ONE device (the dry-run sets its own flags in a
+# subprocess); make `import repro` work regardless of invocation dir.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,154 @@
+"""Attention: chunked-flash vs naive softmax oracle; decode path; padding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm.attention import (chunked_attention, decode_attention,
+                                       tile_kv, _local_decode, _pick_chunk)
+from repro.models.lm.common import pad_heads, pad_vocab, rope
+
+
+def naive_attention(q, k, v, causal):
+    """O(S²) oracle, f32."""
+    qf, kf, vf = (np.asarray(t, np.float64) for t in (q, k, v))
+    b, sq, h, hd = qf.shape
+    sk = kf.shape[1]
+    s = np.einsum("bqhd,bshd->bhqs", qf, kf) / np.sqrt(hd)
+    if causal:
+        mask = np.tril(np.ones((sq, sk), bool), k=sk - sq)
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("sq,sk,causal,mode", [
+    (32, 32, True, "masked"), (32, 32, True, "brick"),
+    (32, 32, False, "masked"), (16, 48, False, "masked"),
+    (64, 64, True, "brick"), (30, 30, True, "masked"),  # non-pow2
+])
+def test_chunked_vs_naive(sq, sk, causal, mode):
+    rng = np.random.default_rng(sq + sk)
+    b, h, hd = 2, 4, 16
+    q = rng.normal(size=(b, sq, h, hd)).astype(np.float32)
+    k = rng.normal(size=(b, sk, h, hd)).astype(np.float32)
+    v = rng.normal(size=(b, sk, h, hd)).astype(np.float32)
+    out = chunked_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                            causal=causal, q_chunk=8, kv_chunk=8,
+                            causal_mode=mode)
+    ref = naive_attention(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-4)
+
+
+def test_brick_equals_masked():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(2, 64, 4, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(2, 64, 4, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(2, 64, 4, 16)).astype(np.float32))
+    a = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                          causal_mode="masked")
+    b = chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                          causal_mode="brick")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_full_attention():
+    """decode at pos p == row p of full causal attention."""
+    rng = np.random.default_rng(1)
+    b, s, h, hd, kv = 2, 24, 4, 16, 2
+    k = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+    v = rng.normal(size=(b, s, kv, hd)).astype(np.float32)
+    q_all = rng.normal(size=(b, s, h, hd)).astype(np.float32)
+    kt = np.asarray(tile_kv(jnp.asarray(k), h))
+    vt = np.asarray(tile_kv(jnp.asarray(v), h))
+    full = naive_attention(q_all, kt, vt, causal=True)
+    pos = 10
+    kc = jnp.asarray(np.where(np.arange(s)[None, :, None, None] <= pos, k, 0.0)
+                     .astype(np.float32))
+    vc = jnp.asarray(np.where(np.arange(s)[None, :, None, None] <= pos, v, 0.0)
+                     .astype(np.float32))
+    ctx, kc2, vc2 = decode_attention(
+        jnp.asarray(q_all[:, pos: pos + 1]), kc, vc,
+        jnp.asarray(pos), jnp.asarray(k[:, pos: pos + 1]),
+        jnp.asarray(v[:, pos: pos + 1]))
+    np.testing.assert_allclose(np.asarray(ctx)[:, 0], full[:, pos],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tile_kv_mapping():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4)
+    t = tile_kv(k, 6)
+    assert t.shape == (2, 3, 6, 4)
+    # q head h reads kv head h % 2
+    for h in range(6):
+        np.testing.assert_array_equal(np.asarray(t[:, :, h]),
+                                      np.asarray(k[:, :, h % 2]))
+
+
+def test_pad_heads_properties():
+    assert pad_heads(16, 8, 16) == (16, 8)       # divisible: unchanged
+    h, kv = pad_heads(24, 8, 16)                 # minitron
+    assert h % 16 == 0 and h % kv == 0 and h >= 24 and kv == 8
+    h, kv = pad_heads(36, 36, 16)                # minicpm MHA
+    assert h % 16 == 0 and h == kv
+    h, kv = pad_heads(20, 20, 16)                # whisper MHA
+    assert h % 16 == 0 and h == kv
+    assert pad_heads(64, 8, 16) == (64, 8)       # llama-90b
+
+
+def test_pad_vocab():
+    assert pad_vocab(151936, 16) == 151936       # already divisible
+    v = pad_vocab(122753, 16)
+    assert v % 16 == 0 and v >= 122753
+    assert pad_vocab(122753, 1) == 122753
+
+
+def test_padded_heads_are_inert():
+    """Zero-weight padded q heads must not change the block output."""
+    from repro.models.lm.attention import attention_block
+    rng = np.random.default_rng(5)
+    b, s, d, h, kv, hd = 2, 16, 32, 6, 2, 8
+    x = jnp.asarray(rng.normal(size=(b, s, d)).astype(np.float32))
+    wq = rng.normal(size=(d, h, hd)).astype(np.float32) * 0.1
+    wk = rng.normal(size=(d, kv, hd)).astype(np.float32) * 0.1
+    wv = rng.normal(size=(d, kv, hd)).astype(np.float32) * 0.1
+    wo = rng.normal(size=(h, hd, d)).astype(np.float32) * 0.1
+    out = attention_block(x, jnp.asarray(wq), jnp.asarray(wk),
+                          jnp.asarray(wv), jnp.asarray(wo), n_kv=kv)
+    # pad q heads 6 -> 8 with zeros (kv unchanged; 8 % 2 == 0)
+    wq_p = np.zeros((d, 8, hd), np.float32)
+    wq_p[:, :h] = wq
+    wo_p = np.zeros((8, hd, d), np.float32)
+    wo_p[:h] = wo
+    out_p = attention_block(x, jnp.asarray(wq_p), jnp.asarray(wk),
+                            jnp.asarray(wv), jnp.asarray(wo_p), n_kv=kv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_p),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pick_chunk():
+    assert _pick_chunk(1500, 1024) == 750
+    assert _pick_chunk(1600, 1024) == 800
+    assert _pick_chunk(4096, 1024) == 1024
+    assert _pick_chunk(7, 4) == 1
+
+
+def test_rope_rotation_invariant():
+    """RoPE preserves norms and relative-position inner products."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 16)).astype(np.float32))
+    pos = jnp.arange(8)[None, :]
+    r = rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(r), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)).astype(np.float32))
+    qb = jnp.broadcast_to(q, (1, 8, 1, 16))
+    rq = np.asarray(rope(qb, pos, theta=1e4))
+    d01 = float((rq[0, 0] * rq[0, 1]).sum())
+    d34 = float((rq[0, 3] * rq[0, 4]).sum())
+    assert abs(d01 - d34) < 1e-3

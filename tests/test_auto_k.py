@@ -1,0 +1,26 @@
+"""The paper's K-profiling preprocessing (Sec. 4.3) wired into the trainer."""
+
+import numpy as np
+
+from repro.graphs.generator import generate_design
+from repro.train.circuit_trainer import CircuitTrainConfig, CircuitTrainer
+
+
+def test_auto_k_profiles_and_trains():
+    graphs = generate_design(5, "small", scale=0.03)
+    tr = CircuitTrainer(CircuitTrainConfig(epochs=2, hidden=32, auto_k=True),
+                        16, 16)
+    out = tr.fit(graphs, eval_graphs=graphs)
+    # profiled K's must be applied and be valid powers of two <= hidden
+    assert tr.mp_cfg.k_cell in (2, 4, 8, 16, 32)
+    assert tr.mp_cfg.k_net in (2, 4, 8, 16, 32)
+    assert np.isfinite(out["final"]["loss"])
+
+
+def test_profile_k_prefers_smaller_for_denser_source():
+    graphs = generate_design(5, "small", scale=0.04)
+    tr = CircuitTrainer(CircuitTrainConfig(hidden=64), 16, 16)
+    ks = tr.profile_k(graphs)
+    # 'cell'-sourced edges include the heavy-tailed `near` adjacency; the
+    # cost model must not pick a larger K for it than for net-sourced edges
+    assert ks["cell"] <= ks["net"] * 2

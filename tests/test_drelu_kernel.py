@@ -1,0 +1,39 @@
+"""Binary-search D-ReLU Pallas kernel vs the lax.top_k oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.drelu import drelu
+from repro.kernels.drelu_topk import drelu_pallas, _bisect_threshold
+
+
+@pytest.mark.parametrize("n,d,k", [(8, 32, 8), (17, 64, 16), (40, 128, 32),
+                                   (5, 16, 1), (8, 16, 15)])
+def test_kernel_matches_topk_oracle(n, d, k):
+    rng = np.random.default_rng(n * d + k)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    x += np.arange(n * d).reshape(n, d) * 1e-6      # break ties
+    got = np.asarray(drelu_pallas(jnp.asarray(x), k))
+    want = np.asarray(drelu(jnp.asarray(x), k))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_bisect_threshold_counts():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(12, 64)).astype(np.float32)
+    x += np.arange(12 * 64).reshape(12, 64) * 1e-6
+    for k in (1, 4, 16, 63):
+        th = np.asarray(_bisect_threshold(jnp.asarray(x), k))
+        cnt = (x >= th[:, None]).sum(1)
+        assert np.all(cnt == k), (k, cnt)
+
+
+def test_kernel_bf16():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(16, 32)).astype(np.float32))
+    got = drelu_pallas(x.astype(jnp.bfloat16), 8)
+    want = drelu(x.astype(jnp.bfloat16).astype(jnp.float32), 8)
+    nnz = np.asarray((np.asarray(got, np.float32) != 0).sum(1))
+    # bf16 ties possible; allow k ± tie width
+    assert np.all(nnz >= 7) and np.all(nnz <= 10)

@@ -1,0 +1,79 @@
+"""Degree-bucketed ELL packing properties (hypothesis)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.graphs.ell import BucketedELL, pack_ell, pack_ell_pair, ROW_BLOCK
+
+settings.register_profile("fast", max_examples=25, deadline=None)
+settings.load_profile("fast")
+
+
+graphs = st.integers(0, 2 ** 31 - 1).flatmap(lambda seed: st.tuples(
+    st.just(seed), st.integers(1, 60), st.integers(1, 60),
+    st.integers(0, 300)))
+
+
+def make_coo(seed, n_dst, n_src, nnz):
+    rng = np.random.default_rng(seed)
+    if nnz == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32))
+    dst = rng.integers(0, n_dst, nnz)
+    src = rng.integers(0, n_src, nnz)
+    pairs = np.unique(np.stack([dst, src], 1), axis=0)
+    w = rng.normal(size=pairs.shape[0]).astype(np.float32)
+    return pairs[:, 0], pairs[:, 1], w
+
+
+@given(graphs)
+def test_dense_reconstruction(args):
+    seed, n_dst, n_src, nnz = args
+    dst, src, w = make_coo(seed, n_dst, n_src, nnz)
+    adj = pack_ell(dst, src, w, n_dst, n_src)
+    dense = np.zeros((n_dst, n_src), np.float32)
+    dense[dst, src] = w
+    np.testing.assert_allclose(np.asarray(adj.to_dense()), dense, atol=1e-6)
+
+
+@given(graphs)
+def test_transpose_pair(args):
+    seed, n_dst, n_src, nnz = args
+    dst, src, w = make_coo(seed, n_dst, n_src, nnz)
+    a, at = pack_ell_pair(dst, src, w, n_dst, n_src)
+    np.testing.assert_allclose(np.asarray(a.to_dense()).T,
+                               np.asarray(at.to_dense()), atol=1e-6)
+
+
+@given(graphs)
+def test_bucket_invariants(args):
+    seed, n_dst, n_src, nnz = args
+    dst, src, w = make_coo(seed, n_dst, n_src, nnz)
+    adj = pack_ell(dst, src, w, n_dst, n_src)
+    seen = set()
+    for b in adj.buckets:
+        assert b.n_rows % ROW_BLOCK == 0          # grid-aligned
+        rows = np.asarray(b.rows)
+        wts = np.asarray(b.w)
+        real = wts.any(axis=1)
+        for r in rows[real]:
+            assert r not in seen                   # each row in ONE bucket
+            seen.add(int(r))
+        # padded rows are inert (zero weights)
+        assert not wts[~real].any()
+
+
+@given(graphs)
+def test_no_bucket_wider_than_its_max_degree(args):
+    """The point of bucketing: short rows never pay evil-row padding."""
+    seed, n_dst, n_src, nnz = args
+    dst, src, w = make_coo(seed, n_dst, n_src, nnz)
+    if len(dst) == 0:
+        return
+    adj = pack_ell(dst, src, w, n_dst, n_src)
+    deg = np.bincount(dst, minlength=n_dst)
+    for b in adj.buckets:
+        rows = np.asarray(b.rows)
+        real = np.asarray(b.w).any(axis=1)
+        if real.any():
+            assert b.width == deg[rows[real]].max()

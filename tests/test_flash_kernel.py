@@ -1,0 +1,50 @@
+"""Pallas flash-attention kernel vs naive softmax oracle + the jnp chunked
+flash used in the model path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.lm.attention import chunked_attention
+
+
+def naive(q, k, v, causal):
+    qf, kf, vf = (np.asarray(t, np.float64) for t in (q, k, v))
+    b, sq, h, hd = qf.shape
+    sk = kf.shape[1]
+    s = np.einsum("bqhd,bshd->bhqs", qf, kf) / np.sqrt(hd)
+    if causal:
+        mask = np.tril(np.ones((sq, sk), bool), k=sk - sq)
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhqs,bshd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("sq,sk,causal", [
+    (128, 128, True), (128, 128, False), (256, 256, True),
+    (128, 256, False),
+])
+def test_flash_vs_naive(sq, sk, causal):
+    rng = np.random.default_rng(sq + sk)
+    b, h, hd = 2, 2, 64
+    q = rng.normal(size=(b, sq, h, hd)).astype(np.float32)
+    k = rng.normal(size=(b, sk, h, hd)).astype(np.float32)
+    v = rng.normal(size=(b, sk, h, hd)).astype(np.float32)
+    out = flash_attention(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                          causal=causal)
+    np.testing.assert_allclose(np.asarray(out), naive(q, k, v, causal),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_matches_model_path():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 256, 2, 64)).astype(np.float32))
+    a = flash_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=64,
+                          causal_mode="brick")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,78 @@
+"""DR-CircuitGNN model + homogeneous baselines + metrics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hetero_mp import HeteroMPConfig
+from repro.graphs.generator import generate_design, generate_partition, TABLE1
+from repro.models.hgnn import (drcircuitgnn_forward, homo_forward, homogenize,
+                               init_drcircuitgnn, init_homo)
+from repro.train import metrics as M
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate_design(3, "small", scale=0.03)[0]
+
+
+def test_forward_shapes_and_range(graph):
+    params = init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8)
+    pred = drcircuitgnn_forward(params, graph, cfg)
+    assert pred.shape == (graph.n_cell,)
+    p = np.asarray(pred)
+    assert np.all((p >= 0) & (p <= 1)) and not np.isnan(p).any()
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gat"])
+def test_homogeneous_baselines_run(graph, kind):
+    adj, adj_t, x, y, n_cell = homogenize(graph)
+    params = init_homo(jax.random.PRNGKey(0), x.shape[1], 32, kind=kind)
+    pred = homo_forward(params, adj, adj_t, x @ jnp.eye(x.shape[1]), n_cell,
+                        kind=kind)
+    assert pred.shape == (n_cell,)
+    assert not np.isnan(np.asarray(pred)).any()
+
+
+def test_generator_matches_table1_statistics():
+    """Structural stats the paper depends on (Fig. 4 / Table 1)."""
+    rng = np.random.default_rng(0)
+    coo, xc, xn, y = generate_partition(rng, 2000, 1000)
+    near_dst, near_src = coo["near"]
+    deg = np.bincount(near_dst, minlength=2000)
+    assert deg.max() > 4 * max(deg.mean(), 1)      # evil rows exist
+    pin_cell, pin_net = coo["pinned"][0], coo["pinned"][1]
+    pdeg = np.bincount(coo["pin"][0], minlength=1000)
+    assert 2 <= pdeg[pdeg > 0].mean() <= 8         # pins concentrate low
+    # pinned is pin transposed
+    a = set(zip(coo["pin"][0].tolist(), coo["pin"][1].tolist()))
+    b = set(zip(coo["pinned"][1].tolist(), coo["pinned"][0].tolist()))
+    assert a == b
+    # labels correlate with density (learnable)
+    dens = np.bincount(near_dst, minlength=2000).astype(np.float64)
+    assert M.pearson(dens, y) > 0.5
+
+
+def test_design_sizes():
+    gs = generate_design(1, "medium", scale=0.02)
+    assert len(gs) == TABLE1["medium"]["graphs"]
+
+
+def test_metrics_against_known_values():
+    a = np.array([1.0, 2.0, 3.0, 4.0])
+    assert abs(M.pearson(a, a) - 1.0) < 1e-9
+    assert abs(M.spearman(a, -a) + 1.0) < 1e-9
+    assert abs(M.kendall(a, a) - 1.0) < 1e-9
+    b = np.array([1.0, 3.0, 2.0, 4.0])
+    assert abs(M.kendall(a, b) - (4.0 / 6.0)) < 1e-9   # 5 conc, 1 disc
+    assert M.mae(a, b) == 0.5
+    assert abs(M.rmse(a, b) - np.sqrt(0.5)) < 1e-9
+
+
+def test_metrics_with_ties():
+    a = np.array([1.0, 1.0, 2.0, 3.0])
+    b = np.array([1.0, 2.0, 2.0, 3.0])
+    s = M.spearman(a, b)
+    assert 0.5 < s <= 1.0
