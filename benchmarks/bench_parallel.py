@@ -52,13 +52,17 @@ def _step_time(graph, cfg, sequential: bool, iters=5):
 def bench(scale=0.08):
     graphs = generate_design(2, "medium", scale=scale)[:2]
     for gi, g in enumerate(graphs):
-        base_cfg = HeteroMPConfig(hidden=64, use_drelu=False)
+        # per-bucket ("xla") kept as the pre-fused reference point
+        base_cfg = HeteroMPConfig(hidden=64, use_drelu=False, backend="xla")
         dr_cfg = HeteroMPConfig(hidden=64, k_cell=16, k_net=16,
-                                use_drelu=True)
+                                use_drelu=True, backend="xla")
+        fused_cfg = HeteroMPConfig(hidden=64, k_cell=16, k_net=16,
+                                   use_drelu=True)   # default fused backend
         t_base = _step_time(g, base_cfg, sequential=True)
         t_kernel = _step_time(g, dr_cfg, sequential=True)
         t_par = _step_time(g, base_cfg, sequential=False)
         t_both = _step_time(g, dr_cfg, sequential=False)
+        t_fused = _step_time(g, fused_cfg, sequential=False)
         emit(f"e2e_baseline/graph{gi}", t_base, "sequential+dense")
         emit(f"e2e_dr_kernel/graph{gi}", t_kernel,
              f"dr_savings={100 * (1 - t_kernel / t_base):.1f}%")
@@ -66,6 +70,10 @@ def bench(scale=0.08):
              f"parallel_savings={100 * (1 - t_par / t_base):.1f}%")
         emit(f"e2e_both/graph{gi}", t_both,
              f"total_speedup={t_base / t_both:.2f}x")
+        emit(f"e2e_fused_exec/graph{gi}", t_fused,
+             f"total_speedup={t_base / t_fused:.2f}x;"
+             f"vs_bucketed_dr={t_both / t_fused:.2f}x;"
+             f"backend={fused_cfg.backend}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,7 @@
 """Shared benchmark utilities."""
 
+import json
+import os
 import time
 
 import jax
@@ -21,3 +23,18 @@ def time_jit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+
+
+def append_json(path: str, record: dict):
+    """Append one run record to a JSON-list file (perf trajectory log)."""
+    runs = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                runs = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    with open(path, "w") as f:
+        json.dump(runs, f, indent=1)
+    print(f"[bench] appended record #{len(runs)} to {path}")

@@ -12,7 +12,10 @@ max merge) fall out of autodiff over ``jnp.maximum``; the SSpMM backward of
 each DR-SpMM is the custom VJP in kernels/ops.py.
 
 The three modules are computationally independent until the merge — the
-parallel scheduler (core/parallel.py) exploits exactly that.
+parallel scheduler (core/parallel.py) exploits exactly that.  With the
+default ``pallas_fused`` backend (TPU) each edge type's entire bucketed
+aggregation is ONE kernel dispatch, so a layer's message passing is exactly
+three forward launches (DESIGN.md §1).
 """
 
 from __future__ import annotations
@@ -34,7 +37,9 @@ class HeteroMPConfig:
     hidden: int = 64
     k_cell: int = 16          # D-ReLU K for cell-sourced embeddings
     k_net: int = 16           # D-ReLU K for net-sourced embeddings
-    backend: ops.Backend = "xla"
+    # "pallas_fused" on TPU (one kernel dispatch per edge-type direction,
+    # DESIGN.md §1), "xla_fused" on CPU — the same fused arena in plain XLA.
+    backend: ops.Backend = ops.DEFAULT_BACKEND
     use_drelu: bool = True    # False => dense baseline path (plain SpMM)
     drelu_backend: str = "topk"   # topk (lax.top_k) | pallas (binary search)
 

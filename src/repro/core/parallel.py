@@ -22,6 +22,7 @@ threads + 3 cudaStreams.  The JAX/XLA equivalents:
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import Callable, Dict, Sequence
 
@@ -29,21 +30,37 @@ import jax
 import jax.numpy as jnp
 
 
+# A fresh ``jax.jit`` wrapper owns a fresh trace cache, so wrapping inside
+# the runner forced a retrace (and recompile) on EVERY invocation.  The
+# executables are memoized on the function tuple instead: a second call with
+# the same modules and argument shapes reuses the compiled computation.
+#
+# Caveat: the memo is keyed on function identity, so callers must reuse the
+# SAME closure objects across calls to benefit (rebuilding lambdas per step
+# retraces exactly as before, and the cache then also pins whatever the
+# stale closures captured until they cycle out — keep module closures
+# long-lived and small).
+
+@functools.lru_cache(maxsize=128)
+def _fused_executable(fns: tuple):
+    return jax.jit(lambda args: tuple(f(*a) for f, a in zip(fns, args)))
+
+
+@functools.lru_cache(maxsize=512)
+def _jit_one(fn: Callable):
+    return jax.jit(fn)
+
+
 def run_fused(fns: Sequence[Callable], args: Sequence[tuple]):
-    """Execute independent module closures inside one jit."""
-
-    @jax.jit
-    def fused():
-        return tuple(f(*a) for f, a in zip(fns, args))
-
-    return fused()
+    """Execute independent module closures inside one (cached) jit."""
+    return _fused_executable(tuple(fns))(tuple(args))
 
 
 def run_sequential(fns: Sequence[Callable], args: Sequence[tuple]):
     """DGL-analogue: jit per module, host barrier between modules."""
     outs = []
     for f, a in zip(fns, args):
-        o = jax.jit(f)(*a)
+        o = _jit_one(f)(*a)
         jax.block_until_ready(o)
         outs.append(o)
     return tuple(outs)

@@ -8,6 +8,16 @@ own max degree (ELL), and dispatch each bin as its own kernel grid with a
 block shape tuned to that bin.  Short rows never pay for evil rows' padding,
 and evil rows get wide, deep tiles.
 
+Two packings live here:
+
+* :class:`BucketedELL` — one slab per degree bucket, dispatched as one
+  ``pallas_call`` each (the reference per-bucket path).
+* :class:`FusedELL` — all bucket slabs re-chunked into a single uniform
+  chunk arena plus a per-chunk metadata table, so the *entire* bucketed
+  aggregation runs as ONE ``pallas_call`` (DESIGN.md §1).  Output rows are
+  laid out arena-contiguously; a single inverse-permutation gather replaces
+  the per-bucket ``y.at[rows].add`` combine.
+
 All packing is host-side numpy (one-time preprocessing, matching the paper's
 CSR/CSC preprocessing stage).
 """
@@ -15,7 +25,8 @@ CSR/CSC preprocessing stage).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+import weakref
+from typing import Dict, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -25,6 +36,15 @@ import jax.numpy as jnp
 ROW_BLOCK = 8
 # Default degree-bucket upper bounds (inclusive); last bucket is open-ended.
 DEFAULT_BOUNDS = (4, 16, 64, 256)
+# Neighbor-chunk width of the fused arena: each fused grid step contracts
+# EDGE_CHUNK neighbors at once (an (BR, Ec·k) × (BR, Ec·k, D) MXU issue).
+# 8 × k=16 = 128 = one MXU contraction dim; small enough that narrow rows
+# (pin/pinned fan-outs of 2–6) waste at most one chunk of padding.
+EDGE_CHUNK = 8
+# Row-block height of the fused arena.  Kept at the Pallas grid granularity:
+# the degree-sort makes a block's chunk count track the max width of just
+# these 8 rows, so smaller blocks mean tighter adaptive widths.
+FUSED_ROW_BLOCK = 8
 
 
 @jax.tree_util.register_dataclass
@@ -51,15 +71,18 @@ class ELLBucket:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BucketedELL:
-    """A sparse (n_dst x n_src) matrix as a tuple of degree-bucketed ELL slabs."""
+    """A sparse (n_dst x n_src) matrix as a tuple of degree-bucketed ELL slabs.
+
+    ``nnz`` is counted once at pack time (host-side) and stored as a static
+    field — reading it never forces a device→host sync.  ``-1`` means the
+    packing predates the count (hand-built instances); consumers treat that
+    as unknown.
+    """
 
     buckets: Tuple[ELLBucket, ...]
     n_dst: int = dataclasses.field(metadata=dict(static=True))
     n_src: int = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def nnz(self) -> int:
-        return int(sum(int((np.asarray(b.w) != 0).sum()) for b in self.buckets))
+    nnz: int = dataclasses.field(metadata=dict(static=True), default=-1)
 
     def to_dense(self) -> jax.Array:
         a = jnp.zeros((self.n_dst, self.n_src), jnp.float32)
@@ -103,6 +126,7 @@ def pack_ell(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
     edges_of = lambda r: slice(rowptr[r], rowptr[r + 1])
 
     buckets = []
+    nnz = 0
     lo = 1
     bnds = list(bounds) + [int(deg.max()) if deg.size and deg.max() > 0 else 1]
     for hi in bnds:
@@ -123,13 +147,15 @@ def pack_ell(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
             d = rowptr[r + 1] - rowptr[r]
             nbr[i, :d] = src[sl]
             wts[i, :d] = w[sl]
+        nnz += int((wts != 0).sum())
         buckets.append(ELLBucket(rows=jnp.asarray(rid), nbr=jnp.asarray(nbr),
                                  w=jnp.asarray(wts)))
     if not buckets:  # empty matrix — keep one inert bucket for shape sanity
         buckets = [ELLBucket(rows=jnp.zeros((row_block,), jnp.int32),
                              nbr=jnp.zeros((row_block, 1), jnp.int32),
                              w=jnp.zeros((row_block, 1), jnp.float32))]
-    return BucketedELL(buckets=tuple(buckets), n_dst=n_dst, n_src=n_src)
+    return BucketedELL(buckets=tuple(buckets), n_dst=n_dst, n_src=n_src,
+                       nnz=nnz)
 
 
 def pack_eid_slabs(dst: np.ndarray, src: np.ndarray, n_dst: int, n_src: int,
@@ -182,3 +208,184 @@ def degree_stats(dst: np.ndarray, n_dst: int) -> dict:
     deg = np.bincount(np.asarray(dst, np.int64), minlength=n_dst)
     return dict(degrees=deg, max=int(deg.max()) if deg.size else 0,
                 mean=float(deg.mean()) if deg.size else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# FusedELL — single-dispatch arena packing (DESIGN.md §1)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FusedELL:
+    """All degree buckets re-chunked into one uniform (C, BR, Ec) arena.
+
+    Every chunk holds ``row_block`` rows × ``chunk`` neighbor slots of ONE
+    bucket's ELL slab; zero-weight slots are inert padding.  Chunks of the
+    same output row-block are stored consecutively, so a Pallas grid over
+    chunks revisits each output block in an unbroken run — the grouped-matmul
+    accumulation pattern that needs no atomics and no host-side combine.
+
+    ``block_of``/``start`` are the scalar-prefetch metadata table: the output
+    row-block each chunk accumulates into, and whether the chunk opens its
+    block (→ zero-init).  ``rows`` maps arena rows back to original row ids
+    (padding → 0 with zero weights); ``gather`` is the inverse map used to
+    read the final (n_dst, D) output out of the arena with ONE gather —
+    original rows absent from every bucket point at the trailing sentinel
+    block, which is written as all-zeros.
+    """
+
+    nbr: jax.Array       # (C, BR, Ec) int32 source ids
+    w: jax.Array         # (C, BR, Ec) f32 edge weights (0 = padding)
+    block_of: jax.Array  # (C,) int32 output row-block per chunk
+    start: jax.Array     # (C,) int32 1 iff chunk opens its row-block
+    rows: jax.Array      # (R_arena,) int32 original row per arena row
+    gather: jax.Array    # (n_dst,) int32 arena row per original row
+    n_dst: int = dataclasses.field(metadata=dict(static=True))
+    n_src: int = dataclasses.field(metadata=dict(static=True))
+    nnz: int = dataclasses.field(metadata=dict(static=True))
+    row_block: int = dataclasses.field(metadata=dict(static=True))
+    chunk: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_chunks(self) -> int:
+        return self.nbr.shape[0]
+
+    @property
+    def n_arena_rows(self) -> int:
+        return self.rows.shape[0]
+
+    def to_dense(self) -> np.ndarray:
+        """Host-side dense reconstruction (round-trip tests)."""
+        a = np.zeros((self.n_dst, self.n_src), np.float32)
+        nbr = np.asarray(self.nbr)
+        w = np.asarray(self.w)
+        blk = np.asarray(self.block_of)
+        rows = np.asarray(self.rows)
+        br = self.row_block
+        for c in range(nbr.shape[0]):
+            for b in range(br):
+                rid = rows[blk[c] * br + b]
+                mask = w[c, b] != 0
+                np.add.at(a[rid], nbr[c, b][mask], w[c, b][mask])
+        return a
+
+
+# id-keyed memo: fusing is host-side numpy work we only want once per packing.
+_FUSE_CACHE: Dict[tuple, tuple] = {}
+
+
+def fuse_bucketed(adj: BucketedELL, row_block: int = None,
+                  chunk: int = None) -> FusedELL:
+    """Re-pack a :class:`BucketedELL` into the single-dispatch fused arena.
+
+    Pure host-side preprocessing; results are memoized per (packing, layout)
+    so jit re-traces and repeated layer calls never re-pack.
+    """
+    if row_block is None:
+        row_block = FUSED_ROW_BLOCK
+    if chunk is None:
+        chunk = EDGE_CHUNK
+    key = (id(adj), row_block, chunk)
+    hit = _FUSE_CACHE.get(key)
+    if hit is not None and hit[0]() is adj:
+        return hit[1]
+
+    nbr_chunks, w_chunks, block_of, start = [], [], [], []
+    rows_parts = []
+    gather = np.full(adj.n_dst, -1, np.int64)
+    blk = 0
+    arena_off = 0
+    for b in adj.buckets:
+        nb = np.asarray(b.nbr)
+        wt = np.asarray(b.w, np.float32)
+        rid = np.asarray(b.rows, np.int64)
+        r, e = nb.shape
+        rpad = _round_up(max(r, 1), row_block)
+        epad = _round_up(max(e, 1), chunk)
+        nb_p = np.zeros((rpad, epad), np.int32)
+        wt_p = np.zeros((rpad, epad), np.float32)
+        nb_p[:r, :e] = nb
+        wt_p[:r, :e] = wt
+        rid_p = np.zeros(rpad, np.int32)
+        rid_p[:r] = rid
+        # Effective row width = last carried weight (pack_ell fills rows
+        # left-to-right; zero-weight slots contribute nothing either way).
+        nz = wt_p != 0
+        width_r = np.where(nz.any(axis=1),
+                           epad - np.argmax(nz[:, ::-1], axis=1), 0)
+        # Finer-than-bucket adaptivity: order rows by effective width so
+        # each row-block's chunk count tracks its OWN max degree, not the
+        # bucket's.  A degree-17 row in a width-64 bucket then costs
+        # ceil(17/Ec) chunks instead of the whole slab (DESIGN.md §1.2).
+        order = np.argsort(-width_r, kind="stable")
+        nb_p, wt_p, rid_p, width_r = (nb_p[order], wt_p[order],
+                                      rid_p[order], width_r[order])
+        # A row is "real" iff it carries any weight; all-zero rows produce
+        # all-zero output either way, so routing them to the sentinel is
+        # equivalent (DESIGN.md §1.3).
+        real = width_r > 0
+        gather[rid_p[real]] = arena_off + np.nonzero(real)[0]
+        rows_parts.append(rid_p)
+        arena_off += rpad
+        for t in range(rpad // row_block):
+            sl = slice(t * row_block, (t + 1) * row_block)
+            bw = int(width_r[sl].max(initial=0))
+            nch = max(1, -(-bw // chunk))            # ≥1 so the block inits
+            for ci in range(nch):
+                cs = slice(ci * chunk, (ci + 1) * chunk)
+                nbr_chunks.append(nb_p[sl, cs])
+                w_chunks.append(wt_p[sl, cs])
+                block_of.append(blk)
+                start.append(1 if ci == 0 else 0)
+            blk += 1
+
+    # Trailing sentinel block: BR guaranteed-zero arena rows that empty
+    # original rows gather from.
+    nbr_chunks.append(np.zeros((row_block, chunk), np.int32))
+    w_chunks.append(np.zeros((row_block, chunk), np.float32))
+    block_of.append(blk)
+    start.append(1)
+    sentinel_row = arena_off
+    rows_parts.append(np.zeros(row_block, np.int32))
+    gather[gather < 0] = sentinel_row
+
+    nnz = adj.nnz if adj.nnz >= 0 else int(
+        sum(int((np.asarray(b.w) != 0).sum()) for b in adj.buckets))
+    # NB: leaves stay host numpy — fusing may run lazily inside a jit trace
+    # (first call of a jitted layer), where jnp.asarray would capture
+    # tracers into the memo and leak them out of the trace.  numpy leaves
+    # are trace-safe constants.
+    fused = FusedELL(
+        nbr=np.stack(nbr_chunks),
+        w=np.stack(w_chunks),
+        block_of=np.asarray(block_of, np.int32),
+        start=np.asarray(start, np.int32),
+        rows=np.concatenate(rows_parts).astype(np.int32),
+        gather=gather.astype(np.int32),
+        n_dst=adj.n_dst, n_src=adj.n_src, nnz=nnz,
+        row_block=row_block, chunk=chunk)
+    # Evict promptly when the packing dies — a dead entry would otherwise
+    # pin its whole fused arena (id reuse is also why the hit path
+    # re-checks `ref() is adj`).
+    _FUSE_CACHE[key] = (weakref.ref(adj, lambda _: _FUSE_CACHE.pop(key, None)),
+                        fused)
+    return fused
+
+
+def pack_fused(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
+               n_dst: int, n_src: int,
+               bounds: Sequence[int] = DEFAULT_BOUNDS,
+               row_block: int = None,
+               chunk: int = None) -> FusedELL:
+    """COO → fused single-dispatch arena (pack_ell then fuse)."""
+    return fuse_bucketed(pack_ell(dst, src, w, n_dst, n_src, bounds),
+                         row_block=row_block, chunk=chunk)
+
+
+def pack_fused_pair(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
+                    n_dst: int, n_src: int,
+                    bounds: Sequence[int] = DEFAULT_BOUNDS
+                    ) -> Tuple[FusedELL, FusedELL]:
+    """Fused forward/transposed pair (the CSR/CSC analogue of Alg. 1/2)."""
+    return (pack_fused(dst, src, w, n_dst, n_src, bounds),
+            pack_fused(src, dst, w, n_src, n_dst, bounds))

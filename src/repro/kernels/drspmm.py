@@ -5,17 +5,31 @@ Backward (Alg. 2):  dV[j, t]  += w_ij * dY[i, X_idx[j, t]]           over i∈N(
 
 Layout / TPU mapping
 --------------------
-* One ``pallas_call`` per degree bucket (see graphs/ell.py): the grid walks
-  row-blocks of that bucket's ELL slab; the slab width E is the bucket's max
-  degree, so short rows never pay evil-row padding — this is the paper's
-  dynamic warp partitioning expressed structurally.
-* The CBSR operand (values+indices, each (N, k)) and the gradient operand
-  (M, D) are small enough for circuit partitions (N ≲ 10k, k ≤ 64, D ≤ 128)
-  to live wholly in VMEM — they get whole-array BlockSpecs.  Row-blocks of
-  the ELL slab stream through VMEM tile by tile.
+Two execution strategies share the same math:
+
+* **Per-bucket** (reference): one ``pallas_call`` per degree bucket (see
+  graphs/ell.py): the grid walks row-blocks of that bucket's ELL slab; the
+  slab width E is the bucket's max degree, so short rows never pay evil-row
+  padding — the paper's dynamic warp partitioning expressed structurally.
+* **Fused** (default hot path, DESIGN.md §1): ALL buckets in ONE
+  ``pallas_call``.  The :class:`~repro.graphs.ell.FusedELL` arena stores
+  uniform (BR, Ec) neighbor chunks; the grid walks chunks, and a
+  scalar-prefetch metadata table routes each chunk's accumulation into its
+  output row-block (grouped-matmul revisit pattern — consecutive grid steps
+  hit the same output block, so the block stays VMEM-resident and no atomics
+  or host-side combines are needed).
+
+Shared kernel-body idioms:
+
+* Neighbors are processed in **E-chunks**: one ``(BR, Ec·k) × (BR, Ec·k, D)``
+  MXU contraction per chunk instead of a serial per-neighbor einsum.
 * The scatter of k CBSR values into a D-wide accumulator is computed as a
   one-hot contraction ``vals · onehot(idx)`` so it maps onto the MXU instead
   of a serial scatter (TPUs have no fast in-kernel scatter).
+* **D-tiling**: when the embedding dim exceeds ``D_TILE`` (128, one MXU
+  lane-width) and divides evenly, the grid gains a D-tile dimension and each
+  step materializes only a (…, D_TILE) slice of the one-hot — ``hidden >
+  128`` no longer forces whole-array VMEM residency of the accumulator.
 * Accumulation is fp32 in VMEM regardless of input dtype.
 
 Validated with ``interpret=True`` on CPU against kernels/ref.py; on real TPU
@@ -30,39 +44,77 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.graphs.ell import ELLBucket, ROW_BLOCK
+from repro.graphs.ell import ELLBucket, FusedELL, ROW_BLOCK, EDGE_CHUNK
 
 # CPU has no Mosaic backend: interpret the kernel bodies.  On TPU this flips
 # to False automatically and the kernels compile natively.
 INTERPRET = jax.default_backend() != "tpu"
 
+# One MXU lane-width: D-tiling granularity for wide embeddings.
+D_TILE = 128
+
+
+def _d_tiling(dim: int) -> tuple:
+    """(tile, n_tiles): tile the D axis at 128 when it divides evenly."""
+    if dim > D_TILE and dim % D_TILE == 0:
+        return D_TILE, dim // D_TILE
+    return dim, 1
+
+
+def _chunked_reduce(nbr, w, contrib, acc, chunk: int):
+    """acc + Σ_chunks contrib(nbr_chunk, w_chunk) with O(1) trace size.
+
+    Full chunks run under a fori_loop with dynamic slices (one traced body
+    regardless of slab width — evil-row buckets don't inflate the jaxpr);
+    the partial tail chunk, whose width is static, is added unrolled."""
+    e_width = nbr.shape[1]
+    n_full, rem = divmod(e_width, chunk)
+    if n_full:
+        def body(ci, a):
+            nb = jax.lax.dynamic_slice_in_dim(nbr, ci * chunk, chunk, axis=1)
+            wc = jax.lax.dynamic_slice_in_dim(w, ci * chunk, chunk, axis=1)
+            return a + contrib(nb, wc)
+        acc = jax.lax.fori_loop(0, n_full, body, acc)
+    if rem:
+        acc = acc + contrib(nbr[:, n_full * chunk:], w[:, n_full * chunk:])
+    return acc
+
 
 # ---------------------------------------------------------------------------
-# forward
+# per-bucket forward (reference path)
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(nbr_ref, w_ref, xv_ref, xi_ref, out_ref, *, dim: int):
-    """One row-block: aggregate E neighbors' CBSR rows into (BR, D) output."""
+def _fwd_kernel(nbr_ref, w_ref, xv_ref, xi_ref, out_ref, *, d_tile: int,
+                chunk: int):
+    """One row-block: aggregate E neighbors' CBSR rows into (BR, DT) output.
+
+    The neighbor axis is walked in Ec-chunks; each chunk is one
+    (BR, Ec·k) × (BR, Ec·k, DT) one-hot contraction on the MXU.
+    """
     nbr = nbr_ref[...]            # (BR, E) int32
     w = w_ref[...]                # (BR, E)
     xv = xv_ref[...]              # (N, k)
     xi = xi_ref[...]              # (N, k) int32
     br, e_width = nbr.shape
+    k = xv.shape[1]
 
-    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, dim), 2)
+    d_base = pl.program_id(1) * d_tile
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, d_tile), 2) + d_base
 
-    def body(e, acc):
-        j = nbr[:, e]                             # (BR,)
-        v = jnp.take(xv, j, axis=0)               # (BR, k) gather from VMEM
-        c = jnp.take(xi, j, axis=0)               # (BR, k)
-        onehot = (c[:, :, None] == iota_d).astype(acc.dtype)   # (BR, k, D)
-        # MXU contraction: scatter-as-matmul over the k axis.
-        contrib = jnp.einsum("bk,bkd->bd", v.astype(acc.dtype), onehot)
-        return acc + w[:, e].astype(acc.dtype)[:, None] * contrib
+    def contrib(nb, wc):                              # (BR, Ec) chunk
+        ec = nb.shape[1]
+        flat = nb.reshape(-1)
+        v = jnp.take(xv, flat, axis=0).reshape(br, ec, k)
+        col = jnp.take(xi, flat, axis=0).reshape(br, ec * k)
+        vw = (v.astype(jnp.float32)
+              * wc.astype(jnp.float32)[..., None]).reshape(br, ec * k)
+        onehot = (col[:, :, None] == iota_d).astype(jnp.float32)
+        return jnp.einsum("bm,bmd->bd", vw, onehot)
 
-    acc = jax.lax.fori_loop(0, e_width, body,
-                            jnp.zeros((br, dim), jnp.float32))
+    acc = _chunked_reduce(nbr, w, contrib,
+                          jnp.zeros((br, d_tile), jnp.float32), chunk)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -74,32 +126,33 @@ def drspmm_fwd_bucket(bucket: ELLBucket, x_vals: jax.Array, x_idx: jax.Array,
     r, e = bucket.nbr.shape
     n, k = x_vals.shape
     br = min(ROW_BLOCK, r)
-    grid = (r // br,)
+    dt, ndt = _d_tiling(dim)
+    grid = (r // br, ndt)
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, dim=dim),
+        functools.partial(_fwd_kernel, d_tile=dt, chunk=EDGE_CHUNK),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((br, e), lambda i: (i, 0)),          # nbr row-block
-            pl.BlockSpec((br, e), lambda i: (i, 0)),          # w   row-block
-            pl.BlockSpec((n, k), lambda i: (0, 0)),           # x_vals (whole)
-            pl.BlockSpec((n, k), lambda i: (0, 0)),           # x_idx  (whole)
+            pl.BlockSpec((br, e), lambda i, j: (i, 0)),       # nbr row-block
+            pl.BlockSpec((br, e), lambda i, j: (i, 0)),       # w   row-block
+            pl.BlockSpec((n, k), lambda i, j: (0, 0)),        # x_vals (whole)
+            pl.BlockSpec((n, k), lambda i, j: (0, 0)),        # x_idx  (whole)
         ],
-        out_specs=pl.BlockSpec((br, dim), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((br, dt), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, dim), x_vals.dtype),
         interpret=interpret,
     )(bucket.nbr, bucket.w, x_vals, x_idx)
 
 
 # ---------------------------------------------------------------------------
-# backward (SSpMM): gradients sampled at the forward's CBSR indices
+# per-bucket backward (SSpMM): gradients sampled at the forward's CBSR indices
 # ---------------------------------------------------------------------------
 
-def _bwd_kernel(tnbr_ref, tw_ref, gy_ref, xi_ref, out_ref):
+def _bwd_kernel(tnbr_ref, tw_ref, gy_ref, xi_ref, out_ref, *, chunk: int):
     """One source-row-block: dV[j, t] = Σ_i w_ij · dY[i, idx[j, t]].
 
     ``tnbr``/``tw`` come from the *transposed* ELL packing, so each source row
     j is owned by exactly one grid cell — accumulation is a private VMEM
-    reduction, no atomics (DESIGN.md §2).
+    reduction, no atomics (DESIGN.md §2).  Targets are gathered Ec at a time.
     """
     tnbr = tnbr_ref[...]          # (BR, E) target ids i ∈ N(j)
     tw = tw_ref[...]              # (BR, E)
@@ -108,14 +161,16 @@ def _bwd_kernel(tnbr_ref, tw_ref, gy_ref, xi_ref, out_ref):
     br, e_width = tnbr.shape
     k = xi.shape[1]
 
-    def body(e, acc):
-        i = tnbr[:, e]                                  # (BR,)
-        g = jnp.take(gy, i, axis=0)                     # (BR, D)
-        sampled = jnp.take_along_axis(g, xi, axis=1)    # (BR, k) — SSpMM
-        return acc + tw[:, e].astype(acc.dtype)[:, None] * sampled.astype(acc.dtype)
+    def contrib(ic, wc):                              # (BR, Ec) chunk
+        ec = ic.shape[1]
+        g = jnp.take(gy, ic.reshape(-1), axis=0).reshape(br, ec, -1)
+        idx = jnp.broadcast_to(xi[:, None, :], (br, ec, k))
+        sampled = jnp.take_along_axis(g, idx, axis=2)  # (BR, Ec, k) — SSpMM
+        return jnp.einsum("be,bek->bk", wc.astype(jnp.float32),
+                          sampled.astype(jnp.float32))
 
-    acc = jax.lax.fori_loop(0, e_width, body,
-                            jnp.zeros((br, k), jnp.float32))
+    acc = _chunked_reduce(tnbr, tw, contrib,
+                          jnp.zeros((br, k), jnp.float32), chunk)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -133,7 +188,7 @@ def drspmm_bwd_bucket(bucket: ELLBucket, gy: jax.Array, xi_rows: jax.Array,
     br = min(ROW_BLOCK, r)
     grid = (r // br,)
     return pl.pallas_call(
-        _bwd_kernel,
+        functools.partial(_bwd_kernel, chunk=EDGE_CHUNK),
         grid=grid,
         in_specs=[
             pl.BlockSpec((br, e), lambda i: (i, 0)),
@@ -148,25 +203,27 @@ def drspmm_bwd_bucket(bucket: ELLBucket, gy: jax.Array, xi_rows: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# dense-operand SpMM kernel (baseline, cuSPARSE-analogue) — same bucketed ELL
-# traversal but the operand is a full (N, D) matrix; lets benchmarks compare
-# the CBSR gather traffic (N·k) against the dense gather traffic (N·D) under
-# identical scheduling.
+# per-bucket dense-operand SpMM kernel (baseline, cuSPARSE-analogue) — same
+# bucketed ELL traversal but the operand is a full (N, D) matrix; lets
+# benchmarks compare the CBSR gather traffic (N·k) against the dense gather
+# traffic (N·D) under identical scheduling.
 # ---------------------------------------------------------------------------
 
-def _dense_kernel(nbr_ref, w_ref, x_ref, out_ref):
+def _dense_kernel(nbr_ref, w_ref, x_ref, out_ref, *, chunk: int):
     nbr = nbr_ref[...]
     w = w_ref[...]
-    x = x_ref[...]
+    x = x_ref[...]                # (N, DT) — D-tiled slice
     br, e_width = nbr.shape
+    d = x.shape[1]
 
-    def body(e, acc):
-        j = nbr[:, e]
-        rows = jnp.take(x, j, axis=0).astype(acc.dtype)       # (BR, D)
-        return acc + w[:, e].astype(acc.dtype)[:, None] * rows
+    def contrib(nb, wc):                              # (BR, Ec) chunk
+        ec = nb.shape[1]
+        rows = jnp.take(x, nb.reshape(-1), axis=0).reshape(br, ec, d)
+        return jnp.einsum("be,bed->bd", wc.astype(jnp.float32),
+                          rows.astype(jnp.float32))
 
-    acc = jax.lax.fori_loop(0, e_width, body,
-                            jnp.zeros((br, x.shape[1]), jnp.float32))
+    acc = _chunked_reduce(nbr, w, contrib,
+                          jnp.zeros((br, d), jnp.float32), chunk)
     out_ref[...] = acc.astype(out_ref.dtype)
 
 
@@ -177,15 +234,182 @@ def spmm_dense_bucket(bucket: ELLBucket, x: jax.Array,
     r, e = bucket.nbr.shape
     n, d = x.shape
     br = min(ROW_BLOCK, r)
+    dt, ndt = _d_tiling(d)
     return pl.pallas_call(
-        _dense_kernel,
-        grid=(r // br,),
+        functools.partial(_dense_kernel, chunk=EDGE_CHUNK),
+        grid=(r // br, ndt),
         in_specs=[
-            pl.BlockSpec((br, e), lambda i: (i, 0)),
-            pl.BlockSpec((br, e), lambda i: (i, 0)),
-            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, e), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, e), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, dt), lambda i, j: (0, j)),       # D-tiled operand
         ],
-        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((br, dt), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r, d), x.dtype),
         interpret=interpret,
     )(bucket.nbr, bucket.w, x)
+
+
+# ---------------------------------------------------------------------------
+# fused single-dispatch executors — ONE pallas_call for ALL buckets
+# ---------------------------------------------------------------------------
+#
+# Grid = (D-tiles, chunks).  Chunks of the same output row-block are
+# consecutive in the arena, so the output BlockSpec's scalar-prefetch index
+# map (blk[c]) revisits each block in an unbroken run: the block stays
+# VMEM-resident across its chunks and is zero-initialized by the chunk whose
+# ``start`` flag is set.  See DESIGN.md §1.
+
+def _fused_fwd_kernel(blk_ref, st_ref, nbr_ref, w_ref, xv_ref, xi_ref,
+                      out_ref, *, d_tile: int):
+    c = pl.program_id(1)
+
+    @pl.when(st_ref[c] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbr = nbr_ref[0]              # (BR, Ec)
+    w = w_ref[0].astype(jnp.float32)
+    xv = xv_ref[...]              # (N, k)
+    xi = xi_ref[...]
+    br, ec = nbr.shape
+    k = xv.shape[1]
+
+    d_base = pl.program_id(0) * d_tile
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, d_tile), 2) + d_base
+
+    flat = nbr.reshape(-1)
+    v = jnp.take(xv, flat, axis=0).reshape(br, ec, k)
+    col = jnp.take(xi, flat, axis=0).reshape(br, ec * k)
+    vw = (v.astype(jnp.float32) * w[..., None]).reshape(br, ec * k)
+    onehot = (col[:, :, None] == iota_d).astype(jnp.float32)
+    out_ref[...] += jnp.einsum("bm,bmd->bd", vw, onehot).astype(out_ref.dtype)
+
+
+def drspmm_fwd_fused(fused: FusedELL, x_vals: jax.Array, x_idx: jax.Array,
+                     dim: int, *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered Y (R_arena, dim) in ONE kernel launch.
+
+    Read the caller-ordered output with ``jnp.take(y, fused.gather, 0)``.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    c, br, ec = fused.nbr.shape
+    n, k = x_vals.shape
+    dt, ndt = _d_tiling(dim)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndt, c),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda d, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((1, br, ec), lambda d, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((n, k), lambda d, i, blk, st: (0, 0)),
+            pl.BlockSpec((n, k), lambda d, i, blk, st: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, dt), lambda d, i, blk, st: (blk[i], d)),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_fwd_kernel, d_tile=dt),
+        grid_spec=grid_spec,
+        # fp32 accumulator arena regardless of input dtype (chunk revisits
+        # accumulate in the out buffer); the op wrapper casts after gather.
+        out_shape=jax.ShapeDtypeStruct((fused.n_arena_rows, dim),
+                                       jnp.float32),
+        interpret=interpret,
+    )(fused.block_of, fused.start, fused.nbr, fused.w, x_vals, x_idx)
+
+
+def _fused_bwd_kernel(blk_ref, st_ref, tnbr_ref, tw_ref, gy_ref, xi_ref,
+                      out_ref):
+    c = pl.program_id(0)
+
+    @pl.when(st_ref[c] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tnbr = tnbr_ref[0]            # (BR, Ec)
+    tw = tw_ref[0].astype(jnp.float32)
+    gy = gy_ref[...]              # (M, D)
+    xi = xi_ref[...]              # (BR, k) — this arena block's CBSR indices
+    br, ec = tnbr.shape
+    k = xi.shape[1]
+
+    g = jnp.take(gy, tnbr.reshape(-1), axis=0).reshape(br, ec, -1)
+    idx = jnp.broadcast_to(xi[:, None, :], (br, ec, k))
+    sampled = jnp.take_along_axis(g, idx, axis=2)      # (BR, Ec, k) — SSpMM
+    out_ref[...] += jnp.einsum("be,bek->bk", tw,
+                               sampled.astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def drspmm_bwd_fused(fused_t: FusedELL, gy: jax.Array, xi_arena: jax.Array,
+                     *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered dV (R_arena, k) in ONE kernel launch.
+
+    ``fused_t`` is the fused *transposed* packing; ``xi_arena`` is x_idx
+    gathered at ``fused_t.rows`` (arena source order), shape (R_arena, k).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    c, br, ec = fused_t.nbr.shape
+    m, d = gy.shape
+    k = xi_arena.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((1, br, ec), lambda i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((m, d), lambda i, blk, st: (0, 0)),
+            pl.BlockSpec((br, k), lambda i, blk, st: (blk[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i, blk, st: (blk[i], 0)),
+    )
+    return pl.pallas_call(
+        _fused_bwd_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((fused_t.n_arena_rows, k),
+                                       jnp.float32),
+        interpret=interpret,
+    )(fused_t.block_of, fused_t.start, fused_t.nbr, fused_t.w, gy, xi_arena)
+
+
+def _fused_dense_kernel(blk_ref, st_ref, nbr_ref, w_ref, x_ref, out_ref):
+    c = pl.program_id(1)
+
+    @pl.when(st_ref[c] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbr = nbr_ref[0]
+    w = w_ref[0].astype(jnp.float32)
+    x = x_ref[...]                # (N, DT) — D-tiled slice
+    br, ec = nbr.shape
+    d = x.shape[1]
+    rows = jnp.take(x, nbr.reshape(-1), axis=0).reshape(br, ec, d)
+    out_ref[...] += jnp.einsum("be,bed->bd", w,
+                               rows.astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def spmm_dense_fused(fused: FusedELL, x: jax.Array,
+                     *, interpret: bool | None = None) -> jax.Array:
+    """Dense-operand SpMM over the fused arena — ONE kernel launch."""
+    if interpret is None:
+        interpret = INTERPRET
+    c, br, ec = fused.nbr.shape
+    n, d = x.shape
+    dt, ndt = _d_tiling(d)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndt, c),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda dd, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((1, br, ec), lambda dd, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((n, dt), lambda dd, i, blk, st: (0, dd)),
+        ],
+        out_specs=pl.BlockSpec((br, dt), lambda dd, i, blk, st: (blk[i], dd)),
+    )
+    return pl.pallas_call(
+        _fused_dense_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((fused.n_arena_rows, d), jnp.float32),
+        interpret=interpret,
+    )(fused.block_of, fused.start, fused.nbr, fused.w, x)

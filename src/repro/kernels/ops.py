@@ -5,10 +5,25 @@ custom VJP that runs the sampled backward kernel (SSpMM) over the transposed
 ELL packing, exactly as Alg. 2 reuses the forward's CBSR indices.
 
 ``backend`` selects the execution path:
-  * "pallas"   — the Pallas kernels (interpret-mode on CPU, native on TPU);
-  * "xla"      — same bucketed math in pure jnp (gather/one-hot), useful when
-                 interpret-mode tracing is too slow for large sweeps;
+  * "pallas_fused" — ONE Pallas dispatch per edge-type direction: all degree
+                 buckets run in a single kernel over the FusedELL arena and
+                 the per-bucket ``y.at[rows].add`` combine collapses to one
+                 gather (DESIGN.md §1).  Default on TPU.
+  * "xla_fused" — the SAME fused arena layout executed in plain jnp
+                 (gather + one scatter / segment-sum, no per-bucket loop).
+                 Default on CPU, where Pallas only interprets: it keeps the
+                 fused packing's adaptive-chunk slot reduction and its
+                 single-combine structure at real XLA wall-clock.
+  * "pallas"   — the per-bucket Pallas kernels, one dispatch per degree
+                 bucket (interpret-mode on CPU, native on TPU); kept as the
+                 reference for the fused path;
+  * "xla"      — same bucketed math in pure jnp (gather/one-hot), the
+                 per-bucket reference at XLA wall-clock;
   * "dense"    — fully dense oracle (kernels/ref.py), the cuSPARSE-analogue.
+
+Fused packings are derived lazily from the BucketedELL arguments via
+``fuse_bucketed`` (host-side, memoized per packing), so every caller of the
+bucketed API gets the single-dispatch path by flipping ``backend`` alone.
 """
 
 from __future__ import annotations
@@ -19,12 +34,37 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.ell import BucketedELL
+from repro.graphs.ell import BucketedELL, FusedELL, fuse_bucketed
 from repro.kernels import drspmm as _k
 from repro.kernels import ref as _ref
 
-Backend = Literal["pallas", "xla", "dense"]
-DEFAULT_BACKEND: Backend = "xla"
+Backend = Literal["pallas_fused", "xla_fused", "pallas", "xla", "dense"]
+# The fused single-dispatch executor is the paper-faithful hot path on real
+# hardware; on CPU the Pallas kernels only run in interpret mode (not
+# wall-clock-representative), so the same fused arena layout executed in
+# plain XLA is the default there.
+DEFAULT_BACKEND: Backend = (
+    "pallas_fused" if jax.default_backend() == "tpu" else "xla_fused")
+
+
+def _fused_of(adj) -> FusedELL:
+    if isinstance(adj, FusedELL):
+        return adj
+    return fuse_bucketed(adj)
+
+
+def _effective_backend(adj, backend: Backend) -> Backend:
+    """Fused packing is host-side preprocessing: it needs concrete arrays.
+    When the adjacency arrives as a *traced jit argument* (e.g. a step
+    function that takes the graph as a parameter), fall back to the
+    per-bucket path of the same executor family — numerically identical
+    (see tests/test_fused.py), just bucket-granular dispatch.  Callers who
+    want the fused path inside jit should close over the graph (it is
+    static per design) or pre-fuse with ``fuse_bucketed``."""
+    if backend in ("pallas_fused", "xla_fused") and not isinstance(adj, FusedELL):
+        if any(isinstance(b.nbr, jax.core.Tracer) for b in adj.buckets):
+            return "pallas" if backend == "pallas_fused" else "xla"
+    return backend
 
 
 def _fwd_bucket_xla(bucket, x_vals, x_idx, dim):
@@ -47,9 +87,68 @@ def _bwd_bucket_xla(bucket, gy, xi_rows):
     return jnp.sum(sampled * bucket.w[..., None], axis=1)
 
 
+# ----- fused arena executed in plain XLA (CPU hot path; same layout the
+# ----- Pallas fused kernels consume, so the adaptive chunk packing's
+# ----- ~2× slot reduction and the scatter-free combine carry over) -------
+
+def _arena_rows(f: FusedELL):
+    """(C, BR) arena row id of each chunk slot row."""
+    return (jnp.asarray(f.block_of)[:, None] * f.row_block
+            + jnp.arange(f.row_block, dtype=jnp.int32)[None, :])
+
+
+def _fwd_fused_xla(f: FusedELL, x_vals, x_idx, dim: int):
+    nbr = jnp.asarray(f.nbr)                          # (C, BR, Ec)
+    w = jnp.asarray(f.w)
+    v = jnp.take(x_vals, nbr, axis=0)                 # (C, BR, Ec, k)
+    cols = jnp.take(x_idx, nbr, axis=0)
+    vw = v * w[..., None]
+    rows = _arena_rows(f)                             # (C, BR)
+    y = jnp.zeros((f.n_arena_rows, dim), x_vals.dtype)
+    y = y.at[jnp.broadcast_to(rows[:, :, None, None], cols.shape),
+             cols].add(vw)
+    return jnp.take(y, jnp.asarray(f.gather), axis=0)
+
+
+def _bwd_fused_xla(ft: FusedELL, gy, x_idx):
+    tnbr = jnp.asarray(ft.nbr)                        # (C, BR, Ec) targets
+    tw = jnp.asarray(ft.w)
+    k = x_idx.shape[1]
+    g = jnp.take(gy, tnbr, axis=0)                    # (C, BR, Ec, D)
+    xi_arena = jnp.take(x_idx, jnp.asarray(ft.rows), axis=0)  # (R_arena, k)
+    xi_blocks = jnp.take(xi_arena, _arena_rows(ft), axis=0)   # (C, BR, k)
+    sampled = jnp.take_along_axis(
+        g, jnp.broadcast_to(xi_blocks[:, :, None, :], g.shape[:3] + (k,)),
+        axis=3)                                       # (C, BR, Ec, k) — SSpMM
+    contrib = jnp.sum(sampled * tw[..., None], axis=2)         # (C, BR, k)
+    n_blocks = ft.n_arena_rows // ft.row_block
+    dv = jax.ops.segment_sum(contrib, jnp.asarray(ft.block_of),
+                             num_segments=n_blocks)
+    dv = dv.reshape(ft.n_arena_rows, k)
+    return jnp.take(dv, jnp.asarray(ft.gather), axis=0)
+
+
+def _spmm_fused_xla(f: FusedELL, x):
+    nbr = jnp.asarray(f.nbr)
+    w = jnp.asarray(f.w)
+    rows_x = jnp.take(x, nbr, axis=0)                 # (C, BR, Ec, D)
+    contrib = jnp.sum(rows_x * w[..., None], axis=2)  # (C, BR, D)
+    n_blocks = f.n_arena_rows // f.row_block
+    y = jax.ops.segment_sum(contrib, jnp.asarray(f.block_of),
+                            num_segments=n_blocks)
+    y = y.reshape(f.n_arena_rows, x.shape[1])
+    return jnp.take(y, jnp.asarray(f.gather), axis=0)
+
+
 def _fwd_impl(adj: BucketedELL, x_vals, x_idx, dim: int, backend: Backend):
     if backend == "dense":
         return _ref.drspmm_fwd_ref(adj, x_vals, x_idx, dim)
+    if backend == "xla_fused":
+        return _fwd_fused_xla(_fused_of(adj), x_vals, x_idx, dim)
+    if backend == "pallas_fused":
+        f = _fused_of(adj)
+        ya = _k.drspmm_fwd_fused(f, x_vals, x_idx, dim)   # fp32 arena
+        return jnp.take(ya, f.gather, axis=0).astype(x_vals.dtype)
     y = jnp.zeros((adj.n_dst, dim), x_vals.dtype)
     for b in adj.buckets:
         if backend == "pallas":
@@ -64,6 +163,13 @@ def _bwd_impl(adj_t: BucketedELL, gy, x_idx, backend: Backend):
     if backend == "dense":
         return _ref.drspmm_bwd_ref(adj_t, gy, x_idx)
     n, k = x_idx.shape
+    if backend == "xla_fused":
+        return _bwd_fused_xla(_fused_of(adj_t), gy, x_idx)
+    if backend == "pallas_fused":
+        ft = _fused_of(adj_t)
+        xi_arena = jnp.take(x_idx, ft.rows, axis=0)   # (R_arena, k)
+        ga = _k.drspmm_bwd_fused(ft, gy, xi_arena)    # fp32 arena
+        return jnp.take(ga, ft.gather, axis=0).astype(gy.dtype)
     gv = jnp.zeros((n, k), gy.dtype)
     for b in adj_t.buckets:
         xi_rows = jnp.take(x_idx, b.rows, axis=0)     # (R, k)
@@ -80,6 +186,8 @@ def drspmm(adj: BucketedELL, adj_t: BucketedELL, x_vals: jax.Array,
            backend: Backend = DEFAULT_BACKEND) -> jax.Array:
     """Differentiable DR-SpMM.  Gradient flows to ``x_vals`` only; the
     adjacency and the CBSR indices are structural."""
+
+    backend = _effective_backend(adj, backend)
 
     @jax.custom_vjp
     def f(xv):
@@ -99,6 +207,8 @@ def spmm(adj: BucketedELL, adj_t: BucketedELL, x: jax.Array, *,
          backend: Backend = DEFAULT_BACKEND) -> jax.Array:
     """Dense-operand SpMM baseline with full (not sampled) backward."""
 
+    backend = _effective_backend(adj, backend)
+
     @jax.custom_vjp
     def f(xd):
         return _spmm_fwd(adj, xd, backend)
@@ -116,6 +226,12 @@ def spmm(adj: BucketedELL, adj_t: BucketedELL, x: jax.Array, *,
 def _spmm_fwd(adj: BucketedELL, x, backend: Backend):
     if backend == "dense":
         return _ref.spmm_dense_ref(adj, x)
+    if backend == "xla_fused":
+        return _spmm_fused_xla(_fused_of(adj), x)
+    if backend == "pallas_fused":
+        f = _fused_of(adj)
+        ya = _k.spmm_dense_fused(f, x)                # fp32 arena
+        return jnp.take(ya, f.gather, axis=0).astype(x.dtype)
     y = jnp.zeros((adj.n_dst, x.shape[1]), x.dtype)
     for b in adj.buckets:
         if backend == "pallas":

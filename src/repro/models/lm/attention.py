@@ -236,8 +236,10 @@ def decode_attention(q, k_cache, v_cache, pos, new_k, new_v):
     q_spec = P(bspec, None, None, None)
     new_spec = P(bspec, None, None, None)
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
+    from repro.sharding.specs import shard_map_compat
+
+    @shard_map_compat(
+        mesh=mesh,
         in_specs=(q_spec, cache_spec, cache_spec, P(), new_spec, new_spec),
         out_specs=(q_spec, cache_spec, cache_spec),
         check_vma=False)

@@ -30,6 +30,9 @@ from repro.sharding.specs import (batch_axes, constrain, get_mesh,
                                   manual_axes)
 
 
+from repro.sharding.specs import shard_map_compat as _shard_map
+
+
 def swiglu_ffn(x, w_gate, w_up, w_down, drelu_k: int = 0,
                drelu_groups: int = 1):
     """(B,S,d) -> (B,S,d).  ``drelu_k`` > 0 sparsifies the hidden row-wise
@@ -83,8 +86,7 @@ def _drelu_sharded(h, k: int, groups: int):
         bspec = None
     spec = P(bspec, None, "model", None)
 
-    @functools.partial(jax.shard_map, mesh=mesh,
-                       in_specs=spec, out_specs=spec, check_vma=False)
+    @_shard_map(mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False)
     def local_topk(x):
         return _drelu_dense(x, k // groups)
 
@@ -207,10 +209,9 @@ def moe_ffn(x, router_w, w_gate, w_up, w_down, *, n_experts: int,
     x_spec = P(bspec, "model", None)
     w_spec = P("model", None, None)
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
-        out_specs=x_spec, check_vma=False)
+    @_shard_map(mesh=mesh,
+                in_specs=(x_spec, P(None, None), w_spec, w_spec, w_spec),
+                out_specs=x_spec, check_vma=False)
     def shmap_moe(x_l, rw, wg_l, wu_l, wd_l):
         shard = jax.lax.axis_index("model")
         # recover the full sequence on each model shard (SP boundary gather)

@@ -52,8 +52,10 @@ def compressed_pod_psum(grads: Any, mesh) -> Any:
     def one(g):
         spec = P(*([None] * g.ndim))
 
-        @functools.partial(jax.shard_map, mesh=mesh,
-                           in_specs=spec, out_specs=spec, check_vma=False)
+        from repro.sharding.specs import shard_map_compat
+
+        @shard_map_compat(mesh=mesh,
+                          in_specs=spec, out_specs=spec, check_vma=False)
         def ar(g_l):
             return int8_allreduce_sum(g_l, "pod") / n_pod
 

@@ -50,8 +50,10 @@ def pipeline_apply(mesh: Mesh, stage_fn: Callable, stage_params,
 
     p_spec = jax.tree.map(lambda _: P(axis), stage_params)
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh, axis_names={axis},
+    from repro.sharding.specs import shard_map_compat
+
+    @shard_map_compat(
+        mesh=mesh, axis_names={axis},
         in_specs=(p_spec, P()), out_specs=P(), check_vma=False)
     def run(params_l, mbs):
         sid = jax.lax.axis_index(axis)

@@ -86,7 +86,16 @@ def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
     if mesh is None or mesh.size == 1 or manual_axes():
         return x
     spec = make_pspec(x.shape, axes, mesh)
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except ValueError as e:
+        # Inside a partial-manual shard_map on jax versions where
+        # manual-mode detection (manual_axes) is unavailable, constraining
+        # a manual axis raises; the shard_map specs govern there — no-op.
+        # Any other invalid spec must still fail loudly.
+        if "manual" in str(e).lower():
+            return x
+        raise
 
 
 def param_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
@@ -99,15 +108,36 @@ def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if mesh and a in mesh.axis_names)
 
 
+def shard_map_compat(**kw):
+    """Decorator factory over jax.shard_map that also runs on older jax
+    releases, where shard_map lives in jax.experimental.shard_map and takes
+    ``check_rep`` / ``auto`` instead of ``check_vma`` / ``axis_names``."""
+    import functools
+    sm = getattr(jax, "shard_map", None)
+    if sm is None:
+        from jax.experimental.shard_map import shard_map as sm
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+        if "axis_names" in kw:
+            manual = set(kw.pop("axis_names"))
+            kw["auto"] = frozenset(kw["mesh"].axis_names) - manual
+    return functools.partial(sm, **kw)
+
+
 def manual_axes() -> Tuple[str, ...]:
     """Mesh axes already in Manual mode (i.e. we are inside a shard_map).
     Nested full-manual shard_maps over a mismatched mesh are rejected by
     JAX, so callers fall back to plain jnp in that case."""
     try:
         m = jax.sharding.get_abstract_mesh()
-        if m is None or not m.axis_names:
-            return ()
-        return tuple(n for n, t in zip(m.axis_names, m.axis_types)
-                     if "Manual" in str(t))
+        if m is not None and m.axis_names:
+            return tuple(n for n, t in zip(m.axis_names, m.axis_types)
+                         if "Manual" in str(t))
+    except Exception:
+        pass
+    try:
+        # jax 0.4.x: shard_map binds its manual axes in the core axis env.
+        from jax._src import core as _core
+        return tuple(_core.get_axis_env().axis_sizes)
     except Exception:
         return ()

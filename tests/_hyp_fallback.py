@@ -1,0 +1,89 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must run green on a bare interpreter (the container only
+guarantees numpy/jax/pytest).  Test modules import through here::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hyp_fallback import given, settings, strategies as st
+
+With real hypothesis absent, ``@given`` degrades to a deterministic sweep of
+``max_examples`` seeded-random draws — no shrinking, no database, but the
+same property bodies execute over the same kind of input distribution.
+
+Only the strategy surface the repo's tests use is implemented: ``integers``,
+``just``, ``tuples``, ``sampled_from``, ``flatmap``/``map``.
+"""
+
+from __future__ import annotations
+
+import types
+
+import numpy as np
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def flatmap(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng))._draw(rng))
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+def _integers(lo, hi):
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def _just(value):
+    return _Strategy(lambda rng: value)
+
+
+def _tuples(*strats):
+    return _Strategy(lambda rng: tuple(s._draw(rng) for s in strats))
+
+
+def _sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers, just=_just, tuples=_tuples,
+    sampled_from=_sampled_from)
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' API
+    _profiles = {"default": 25}
+    _max_examples = 25
+
+    def __init__(self, *_, **__):
+        pass
+
+    @classmethod
+    def register_profile(cls, name, max_examples=25, **_):
+        cls._profiles[name] = max_examples
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._max_examples = cls._profiles.get(name, 25)
+
+
+def given(*strats):
+    def deco(test_fn):
+        # NB: the wrapper must expose a ZERO-arg signature — pytest resolves
+        # named parameters as fixtures, and the drawn arguments are supplied
+        # here, not by pytest.  (functools.wraps would leak the original
+        # signature via __wrapped__.)
+        def wrapper():
+            rng = np.random.default_rng(0)
+            for _ in range(settings._max_examples):
+                drawn = tuple(s._draw(rng) for s in strats)
+                test_fn(*drawn)
+        wrapper.__name__ = test_fn.__name__
+        wrapper.__doc__ = test_fn.__doc__
+        return wrapper
+    return deco

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare container: seeded fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.cbsr import CBSR, cbsr_from_dense, cbsr_mask, sample_dense
 from repro.core.drelu import (candidate_ks, drelu, drelu_grouped,

@@ -1,7 +1,10 @@
 """Degree-bucketed ELL packing properties (hypothesis)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare container: seeded fallback
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.graphs.ell import BucketedELL, pack_ell, pack_ell_pair, ROW_BLOCK
 

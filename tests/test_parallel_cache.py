@@ -1,0 +1,47 @@
+"""The parallel scheduler must not retrace/recompile its module closures on
+every invocation (the seed re-wrapped with a fresh ``jax.jit`` per call)."""
+
+import jax.numpy as jnp
+
+from repro.core.parallel import run_fused, run_sequential
+
+
+def test_run_fused_no_retrace_on_second_call():
+    traces = []
+
+    def f(x):
+        traces.append(1)          # executes only while tracing
+        return x * 2.0
+
+    x = jnp.ones((4,))
+    a = run_fused((f,), ((x,),))
+    b = run_fused((f,), ((x,),))
+    assert len(traces) == 1, "second run_fused call retraced the closure"
+    assert jnp.allclose(a[0], b[0])
+
+
+def test_run_sequential_no_retrace_on_second_call():
+    traces = []
+
+    def f(x):
+        traces.append(1)
+        return x + 1.0
+
+    x = jnp.zeros((3,))
+    run_sequential((f,), ((x,),))
+    run_sequential((f,), ((x,),))
+    assert len(traces) == 1, "second run_sequential call retraced the closure"
+
+
+def test_run_fused_matches_sequential():
+    def f(x):
+        return x * 3.0
+
+    def g(x):
+        return x - 1.0
+
+    x = jnp.arange(4.0)
+    a = run_fused((f, g), ((x,), (x,)))
+    b = run_sequential((f, g), ((x,), (x,)))
+    for ya, yb in zip(a, b):
+        assert jnp.allclose(ya, yb)
