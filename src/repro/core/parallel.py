@@ -24,7 +24,9 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Callable, Dict, Sequence
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, Iterable, Iterator, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +66,31 @@ def run_sequential(fns: Sequence[Callable], args: Sequence[tuple]):
         jax.block_until_ready(o)
         outs.append(o)
     return tuple(outs)
+
+
+def prefetch(items: Iterable, prepare: Callable, *, depth: int = 1,
+             n_threads: int = 3) -> Iterator:
+    """Host-side prepare/device-execute overlap at batch granularity.
+
+    ``prepare(item)`` (packing, padding, ``jax.device_put``) runs on a
+    worker thread up to ``depth`` items ahead of the consumer, so while the
+    device executes batch i the pool is already packing and transferring
+    batch i+1 — the JAX analogue of the paper's CPU-init-thread +
+    multi-stream overlap (Sec. 3.4), moved from subgraph to batch
+    granularity.  ``jax.device_put`` dispatches the H2D copy
+    asynchronously, so the transfer itself also overlaps.
+
+    Yields ``prepare``'s results in input order.
+    """
+    it = iter(items)
+    with ThreadPoolExecutor(max_workers=n_threads) as pool:
+        futs: deque = deque()
+        for x in it:
+            futs.append(pool.submit(prepare, x))
+            if len(futs) > depth:
+                yield futs.popleft().result()
+        while futs:
+            yield futs.popleft().result()
 
 
 def benchmark_modes(fns, args, iters: int = 20) -> Dict[str, float]:

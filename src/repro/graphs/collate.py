@@ -1,0 +1,309 @@
+"""Block-diagonal collation: N CircuitGraphs → ONE CircuitGraph per batch.
+
+The serve/train hot path dispatches the HGNN once per *batch* instead of
+once per graph.  Member graphs are laid out block-diagonally in a shared
+node space per node type:
+
+    cell ids of member i live in [cell_off_i, cell_off_i + n_cell_i)
+    net  ids of member i live in [net_off_i,  net_off_i  + n_net_i)
+
+Edges never cross members, so every aggregation over the collated graph is
+exactly the direct sum of the members' aggregations — batched forward and
+gradients match the per-graph loop bit-for-bit up to f32 summation order
+(tests/test_collate.py).
+
+Compile-once comes from **shape quantization** (the HOGA/GSR-GNN-motivated
+move): member node counts are padded up to a small geometric bucket grid,
+and the fused arenas' chunk/row counts are padded the same way, so the
+jitted forward — which takes the collated graph as a *traced argument* —
+compiles once per shape bucket instead of once per graph.  Padding is inert
+by construction: padded node rows carry zero features and no edges, and
+padded arena chunks carry zero weights routed into rows the output gather
+never reads.
+
+Member edges are recovered host-side from their ELL packings
+(``ell_to_coo``), offset, and re-packed in one fused-arena repack per edge
+type (``pack_fused_pair``'s two directions).  Member weights (already
+row-normalized per member) are carried through unchanged — block-diagonal
+row norms are member-local, so no renormalization is needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.circuit import (CircuitGraph, EDGE_SCHEMA, EDGE_TYPES,
+                                  EdgeSet)
+from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, ell_to_coo,
+                              pack_ell_pair, pack_fused, _round_up)
+
+# Default bucket-grid resolutions (mantissa bits of the geometric grid):
+# node slabs pay padding linearly (features, gather), so they get a finer
+# grid; arena chunk counts only pay inert zero-weight chunks, so a coarser
+# grid buys fewer shape buckets (= fewer compiles) cheaply.
+NODE_GRID_BITS = 2     # grid {m·2^e : m ∈ [4, 8)} — ≤ ~25% padding
+ARENA_GRID_BITS = 1    # grid {m·2^e : m ∈ [2, 4)} — ≤ ~50% padding
+# Chunk-count headroom applied when a bucket's layout is FIRST recorded:
+# later batches whose chunk count stays within this factor of the first
+# batch's reuse its signature (batch-to-batch jitter shrinks ~1/√B, so 15%
+# covers typical mixed streams); growth beyond it costs one extra compile
+# and raises the bucket's floor.
+ARENA_HEADROOM = 1.15
+
+
+def quantize_up(n: int, mantissa_bits: int = NODE_GRID_BITS,
+                minimum: int = 8) -> int:
+    """Round ``n`` up to the next point of a geometric grid with
+    ``2**mantissa_bits`` points per octave.  Max relative padding is
+    ``2**-mantissa_bits``; the grid is what bounds the number of distinct
+    compiled shapes to O(log total-size-range)."""
+    n = max(int(n), minimum)
+    if n <= minimum:
+        return minimum
+    e = n.bit_length() - 1 - mantissa_bits
+    if e <= 0:
+        return n
+    step = 1 << e
+    return _round_up(n, step)
+
+
+@dataclasses.dataclass
+class BucketLayout:
+    """Per-shape-bucket fused-arena layout record (owned by the serve
+    engine, one per request bucket).  The first batch of a bucket pins the
+    chunk width per edge-type direction; chunk counts only grow (and only
+    to quantized values), so batch signatures within a bucket converge —
+    typically on the very first batch, worst-case after a few early growth
+    steps, each of which is one extra compile."""
+
+    chunk: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)        # (etype, "fwd"|"bwd") -> Ec
+    min_chunks: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)        # (etype, "fwd"|"bwd") -> padded C
+
+
+def _arena_row_cap(n_dst: int, bounds: Sequence[int], row_block: int) -> int:
+    """Deterministic upper bound on a fused arena's row count: every
+    non-empty destination row occupies exactly one arena row, each of the
+    ≤ len(bounds)+1 degree buckets rounds its row count up to the row
+    block, and the sentinel adds one more block.  It depends only on the
+    *padded node count*, so every batch of a shape bucket pads its arenas
+    to the same row count — node-quantization alone fixes this dimension.
+    """
+    return _round_up(max(n_dst, 1), row_block) + (len(bounds) + 2) * row_block
+
+
+@dataclasses.dataclass(frozen=True)
+class MemberSlice:
+    """Where one member graph lives inside the collated node spaces."""
+    cell_off: int
+    n_cell: int
+    net_off: int
+    n_net: int
+
+
+@dataclasses.dataclass
+class CollatedBatch:
+    """One collated dispatch unit.
+
+    ``graph`` is a regular :class:`CircuitGraph` (padded sizes); with
+    ``fused=True`` its edge sets hold pre-packed :class:`FusedELL` arenas so
+    the fused executors run even when the graph is a traced jit argument.
+    ``cell_weight`` holds 1/(n_real·n_cell_i) on member i's rows and 0 on
+    padding — ``Σ w·(pred−y)²`` over the batch equals the mean of per-graph
+    mean-MSE losses, so batched gradients match the per-graph loop.
+    """
+
+    graph: CircuitGraph
+    members: Tuple[MemberSlice, ...]
+    cell_weight: jax.Array          # (n_cell_pad,)
+    n_real: int                     # members that carry real requests
+
+    def split_cell(self, y_cell) -> List[jax.Array]:
+        """Per-real-member views of a per-cell output of the batched model."""
+        return [y_cell[m.cell_off:m.cell_off + m.n_cell]
+                for m in self.members[: self.n_real]]
+
+    def split_net(self, y_net) -> List[jax.Array]:
+        return [y_net[m.net_off:m.net_off + m.n_net]
+                for m in self.members[: self.n_real]]
+
+    @property
+    def signature(self) -> tuple:
+        return graph_signature(self.graph)
+
+
+def graph_signature(graph: CircuitGraph) -> tuple:
+    """Hashable padded-shape signature: the pytree structure (which carries
+    the static fields) plus every leaf's shape/dtype.  Two graphs with equal
+    signatures hit the same jit-compiled executable when passed as traced
+    arguments — this is exactly jit's cache key restricted to shapes."""
+    leaves, treedef = jax.tree_util.tree_flatten(graph)
+    return (treedef,
+            tuple((tuple(l.shape), np.dtype(l.dtype).name) for l in leaves))
+
+
+def _pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
+    """Pad a fused arena to (n_chunks, ·, ·) chunks / n_rows arena rows.
+
+    Padding chunks carry zero weights and extend the run of the arena's
+    LAST block — the all-zero sentinel ``fuse_bucketed`` always emits last —
+    with ``start=0``, so the grouped-matmul revisit invariant (unbroken
+    chunk run per block, DESIGN.md §1) holds and the sentinel stays zero.
+    Padding rows are simply appended: no chunk references them and the
+    output gather never reads them, so they need no initializing chunk.
+    ``nnz`` is reset to −1 (unknown): batches of one shape bucket differ in
+    nnz, and a static nnz would split the jit cache per batch.
+    """
+    c, br, ec = f.nbr.shape
+    r = f.n_arena_rows
+    assert n_rows % br == 0 and n_rows >= r and n_chunks >= c
+    pad_chunks = n_chunks - c
+    sentinel = r // br - 1
+    zpad = lambda a, n, dt: np.concatenate(
+        [np.asarray(a), np.zeros((n,) + np.asarray(a).shape[1:], dt)])
+    return FusedELL(
+        nbr=zpad(f.nbr, pad_chunks, np.int32),
+        w=zpad(f.w, pad_chunks, np.float32),
+        block_of=np.concatenate([np.asarray(f.block_of),
+                                 np.full(pad_chunks, sentinel, np.int32)]),
+        start=np.concatenate([np.asarray(f.start),
+                              np.zeros(pad_chunks, np.int32)]),
+        rows=zpad(f.rows, n_rows - r, np.int32),
+        gather=np.asarray(f.gather),
+        n_dst=f.n_dst, n_src=f.n_src, nnz=-1,
+        row_block=f.row_block, chunk=f.chunk)
+
+
+def _chunk_for(chunk, etype: str) -> Optional[int]:
+    if isinstance(chunk, dict):
+        return chunk.get(etype)
+    return chunk
+
+
+def collate_graphs(graphs: Sequence[CircuitGraph], *,
+                   fused: bool = True,
+                   quantize: bool = True,
+                   node_bits: int = NODE_GRID_BITS,
+                   arena_bits: int = ARENA_GRID_BITS,
+                   chunk: Union[None, int, Dict[str, int]] = None,
+                   layout: Optional[BucketLayout] = None,
+                   n_real: Optional[int] = None,
+                   bounds: Sequence[int] = DEFAULT_BOUNDS) -> CollatedBatch:
+    """Merge member graphs into one block-diagonal :class:`CircuitGraph`.
+
+    Parameters
+    ----------
+    fused : pre-pack each edge-type direction as a :class:`FusedELL` arena
+        (the serve/train hot path — fused executors run with the graph
+        traced).  ``False`` packs plain :class:`BucketedELL` pairs: the
+        exact block-diagonal graph, usable under every backend (parity
+        tests).
+    quantize : pad member node slabs and (with ``fused``) arena dims up the
+        bucket grid; ``False`` gives the exact-size collation.
+    chunk : pin the fused arenas' chunk width (int, or per-edge-type dict);
+        ``None`` lets ``fuse_bucketed`` pick per packing from the degree
+        histogram.
+    layout : mutable per-shape-bucket record (:class:`BucketLayout`): pins
+        chunk widths to the bucket's first batch and floors chunk counts at
+        the bucket's running max, so same-bucket batches share a signature.
+    n_real : members that carry real requests; trailing members are filler
+        (their outputs are dropped and their loss weight is zero).
+    """
+    assert graphs, "collate_graphs needs at least one member"
+    n_real = len(graphs) if n_real is None else n_real
+    f_cell = graphs[0].x_cell.shape[1]
+    f_net = graphs[0].x_net.shape[1]
+    assert all(g.x_cell.shape[1] == f_cell and g.x_net.shape[1] == f_net
+               for g in graphs), "members must share feature widths"
+
+    # --- member slabs (per-member padding keeps offsets deterministic
+    # within a shape bucket: the batch signature depends only on the
+    # members' quantized sizes, not their exact ones) ---
+    members, cell_off, net_off = [], 0, 0
+    for g in graphs:
+        members.append(MemberSlice(cell_off=cell_off, n_cell=g.n_cell,
+                                   net_off=net_off, n_net=g.n_net))
+        cell_off += quantize_up(g.n_cell, node_bits) if quantize else g.n_cell
+        net_off += quantize_up(g.n_net, node_bits) if quantize else g.n_net
+    n_cell_pad, n_net_pad = cell_off, net_off
+    sizes_pad = {"cell": n_cell_pad, "net": n_net_pad}
+
+    # --- features / labels / loss weights ---
+    x_cell = np.zeros((n_cell_pad, f_cell), np.float32)
+    x_net = np.zeros((n_net_pad, f_net), np.float32)
+    y_cell = np.zeros(n_cell_pad, np.float32)
+    w_cell = np.zeros(n_cell_pad, np.float32)
+    for i, (g, m) in enumerate(zip(graphs, members)):
+        x_cell[m.cell_off:m.cell_off + m.n_cell] = np.asarray(g.x_cell)
+        x_net[m.net_off:m.net_off + m.n_net] = np.asarray(g.x_net)
+        y_cell[m.cell_off:m.cell_off + m.n_cell] = np.asarray(g.y_cell)
+        if i < n_real:
+            w_cell[m.cell_off:m.cell_off + m.n_cell] = \
+                1.0 / (n_real * m.n_cell)
+
+    # --- merged COO per edge type, member weights carried through ---
+    off_of = {"cell": [m.cell_off for m in members],
+              "net": [m.net_off for m in members]}
+    edges = {}
+    for et in EDGE_TYPES:
+        s_t, d_t = EDGE_SCHEMA[et]
+        ds, ss, ws = [], [], []
+        for i, g in enumerate(graphs):
+            dst, src, w = ell_to_coo(g.edges[et].adj)
+            ds.append(dst + off_of[d_t][i])
+            ss.append(src + off_of[s_t][i])
+            ws.append(w)
+        dst = np.concatenate(ds)
+        src = np.concatenate(ss)
+        w = np.concatenate(ws)
+        n_dst, n_src = sizes_pad[d_t], sizes_pad[s_t]
+        if fused:
+            packed = {}
+            for dname, (d_, s_, nd, ns) in {
+                    "fwd": (dst, src, n_dst, n_src),
+                    "bwd": (src, dst, n_src, n_dst)}.items():
+                ck = layout.chunk.get((et, dname)) if layout else None
+                if ck is None:
+                    ck = _chunk_for(chunk, et)
+                a = pack_fused(d_, s_, w, nd, ns, bounds, chunk=ck)
+                if layout is not None:
+                    layout.chunk.setdefault((et, dname), a.chunk)
+                if quantize:
+                    a = _quantize_arena(a, arena_bits, bounds, layout,
+                                        (et, dname))
+                packed[dname] = a
+            adj, adj_t = packed["fwd"], packed["bwd"]
+        else:
+            adj, adj_t = pack_ell_pair(dst, src, w, n_dst, n_src, bounds)
+        edges[et] = EdgeSet(adj=adj, adj_t=adj_t)
+
+    graph = CircuitGraph(n_cell=n_cell_pad, n_net=n_net_pad, edges=edges,
+                         x_cell=jnp.asarray(x_cell), x_net=jnp.asarray(x_net),
+                         y_cell=jnp.asarray(y_cell))
+    return CollatedBatch(graph=graph, members=tuple(members),
+                         cell_weight=jnp.asarray(w_cell), n_real=n_real)
+
+
+def _quantize_arena(f: FusedELL, arena_bits: int, bounds: Sequence[int],
+                    layout: Optional[BucketLayout],
+                    key: Tuple[str, str]) -> FusedELL:
+    """Pad the arena to shape-bucket-stable dims: rows to the deterministic
+    cap (a function of the padded node count alone), chunks up the bucket
+    grid, floored at the bucket's running max when a layout is tracking."""
+    r_cap = _arena_row_cap(f.n_dst, bounds, f.row_block)
+    assert f.n_arena_rows <= r_cap, (f.n_arena_rows, r_cap)
+    c_pad = quantize_up(f.n_chunks, arena_bits, minimum=1)
+    if layout is not None:
+        floor = layout.min_chunks.get(key)
+        if floor is None:       # first batch of the bucket: add headroom
+            floor = quantize_up(int(np.ceil(f.n_chunks * ARENA_HEADROOM)),
+                                arena_bits, minimum=1)
+        c_pad = max(c_pad, floor)
+        layout.min_chunks[key] = c_pad
+    return _pad_fused_arena(f, c_pad, r_cap)

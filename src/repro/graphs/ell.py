@@ -40,7 +40,13 @@ DEFAULT_BOUNDS = (4, 16, 64, 256)
 # EDGE_CHUNK neighbors at once (an (BR, Ec·k) × (BR, Ec·k, D) MXU issue).
 # 8 × k=16 = 128 = one MXU contraction dim; small enough that narrow rows
 # (pin/pinned fan-outs of 2–6) waste at most one chunk of padding.
+# This is the *fallback* width: ``fuse_bucketed`` picks the slot-minimizing
+# width per packing from its degree histogram (``pick_chunk``) unless the
+# caller pins one explicitly.
 EDGE_CHUNK = 8
+# Candidate chunk widths ``pick_chunk`` chooses between.  Powers of two so
+# Ec·k stays MXU-aligned for the usual k ∈ {8, 16, 32}.
+CHUNK_CANDIDATES = (4, 8, 16)
 # Row-block height of the fused arena.  Kept at the Pallas grid granularity:
 # the degree-sort makes a block's chunk count track the max width of just
 # these 8 rows, so smaller blocks mean tighter adaptive widths.
@@ -210,6 +216,28 @@ def degree_stats(dst: np.ndarray, n_dst: int) -> dict:
                 mean=float(deg.mean()) if deg.size else 0.0)
 
 
+def ell_to_coo(adj: BucketedELL) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side inverse of :func:`pack_ell`: (dst, src, w) of the non-zero
+    slots.  Zero-weight slots are padding by construction, so the round trip
+    preserves exactly the ``nnz`` edges the packing represents.  Used by the
+    block-diagonal collator (graphs/collate.py), which re-packs member
+    graphs' edges with per-member node-id offsets."""
+    ds, ss, ws = [], [], []
+    for b in adj.buckets:
+        w = np.asarray(b.w, np.float32)
+        mask = w != 0
+        if not mask.any():
+            continue
+        rows = np.broadcast_to(np.asarray(b.rows, np.int64)[:, None], w.shape)
+        ds.append(rows[mask])
+        ss.append(np.asarray(b.nbr, np.int64)[mask])
+        ws.append(w[mask])
+    if not ds:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32))
+    return np.concatenate(ds), np.concatenate(ss), np.concatenate(ws)
+
+
 # ---------------------------------------------------------------------------
 # FusedELL — single-dispatch arena packing (DESIGN.md §1)
 # ---------------------------------------------------------------------------
@@ -274,21 +302,71 @@ class FusedELL:
 _FUSE_CACHE: Dict[tuple, tuple] = {}
 
 
+def _effective_widths(w: np.ndarray) -> np.ndarray:
+    """Per-row count of slots up to the last non-zero one (pack_ell fills
+    rows left-to-right, so this is the row's effective degree)."""
+    nz = w != 0
+    e = w.shape[1]
+    return np.where(nz.any(axis=1), e - np.argmax(nz[:, ::-1], axis=1), 0)
+
+
+def _block_widths(adj: BucketedELL, row_block: int) -> list:
+    """Max effective width of each fused row-block, after the descending
+    degree sort each bucket undergoes inside :func:`fuse_bucketed` — i.e.
+    exactly the widths the arena's chunk counts are derived from."""
+    bws = []
+    for b in adj.buckets:
+        width_r = np.sort(_effective_widths(np.asarray(b.w, np.float32)))[::-1]
+        rpad = _round_up(max(width_r.size, 1), row_block)
+        width_r = np.concatenate(
+            [width_r, np.zeros(rpad - width_r.size, np.int64)])
+        for t in range(rpad // row_block):
+            bws.append(int(width_r[t * row_block:(t + 1) * row_block]
+                           .max(initial=0)))
+    return bws
+
+
+def pick_chunk(adj: BucketedELL, row_block: int = None,
+               candidates: Sequence[int] = CHUNK_CANDIDATES) -> int:
+    """Slot-minimizing arena chunk width for this packing (ROADMAP item).
+
+    ``EDGE_CHUNK = 8`` is tuned for the heavy-tailed ``near`` degrees; the
+    narrow ``pin``/``pinned`` fan-outs (2–6) pay up to 2× slot padding at
+    width 8.  This picks, from the packing's own degree histogram, the
+    candidate minimizing total arena slots Σ_blocks BR·Ec·ceil(bw/Ec); ties
+    go to the wider chunk (fewer grid steps, bigger MXU contractions).
+    """
+    if row_block is None:
+        row_block = FUSED_ROW_BLOCK
+    bws = _block_widths(adj, row_block)
+
+    def slots(c):
+        return sum(row_block * c * max(1, -(-bw // c)) for bw in bws)
+
+    return min(candidates, key=lambda c: (slots(c), -c))
+
+
 def fuse_bucketed(adj: BucketedELL, row_block: int = None,
                   chunk: int = None) -> FusedELL:
     """Re-pack a :class:`BucketedELL` into the single-dispatch fused arena.
+
+    ``chunk=None`` picks the slot-minimizing width from the packing's degree
+    histogram (:func:`pick_chunk`); pass an int to pin the layout (the
+    collator does, so batches of the same shape bucket share a signature).
 
     Pure host-side preprocessing; results are memoized per (packing, layout)
     so jit re-traces and repeated layer calls never re-pack.
     """
     if row_block is None:
         row_block = FUSED_ROW_BLOCK
-    if chunk is None:
-        chunk = EDGE_CHUNK
+    # chunk=None is memoized under the None key, so a cache hit skips even
+    # the pick_chunk histogram scan.
     key = (id(adj), row_block, chunk)
     hit = _FUSE_CACHE.get(key)
     if hit is not None and hit[0]() is adj:
         return hit[1]
+    if chunk is None:
+        chunk = pick_chunk(adj, row_block)
 
     nbr_chunks, w_chunks, block_of, start = [], [], [], []
     rows_parts = []

@@ -60,8 +60,20 @@ def _effective_backend(adj, backend: Backend) -> Backend:
     per-bucket path of the same executor family — numerically identical
     (see tests/test_fused.py), just bucket-granular dispatch.  Callers who
     want the fused path inside jit should close over the graph (it is
-    static per design) or pre-fuse with ``fuse_bucketed``."""
-    if backend in ("pallas_fused", "xla_fused") and not isinstance(adj, FusedELL):
+    static per design) or pre-fuse with ``fuse_bucketed``.
+
+    A pre-fused adjacency (:class:`FusedELL`, e.g. a collated serve batch —
+    graphs/collate.py) has no bucket slabs to fall back to, so the
+    per-bucket/dense backend names are upgraded to the fused executor of the
+    matching family (numerically interchangeable, tests/test_fused.py).
+    Crucially this works **inside jit with the graph traced**: the arena is
+    already packed, so batches sharing a padded shape signature reuse one
+    compiled executable."""
+    if isinstance(adj, FusedELL):
+        if backend in ("pallas", "pallas_fused"):
+            return "pallas_fused"
+        return "xla_fused"
+    if backend in ("pallas_fused", "xla_fused"):
         if any(isinstance(b.nbr, jax.core.Tracer) for b in adj.buckets):
             return "pallas" if backend == "pallas_fused" else "xla"
     return backend

@@ -70,6 +70,16 @@ def loss_fn(params, graph, cfg) -> jax.Array:
     return jnp.mean((pred - graph.y_cell) ** 2)
 
 
+def batched_loss_fn(params, graph, cell_weight, cfg) -> jax.Array:
+    """Loss over a block-diagonal collated batch (graphs/collate.py).
+
+    ``cell_weight`` is 1/(n_members·n_cell_i) on member i's cells and 0 on
+    padding, so this equals the mean of the members' per-graph ``loss_fn``
+    values — batched gradients match the per-graph loop exactly."""
+    pred = drcircuitgnn_forward(params, graph, cfg)
+    return jnp.sum(cell_weight * (pred - graph.y_cell) ** 2)
+
+
 # ---------------------------------------------------------------------------
 # Homogeneous baselines (GCN / SAGE / GAT) on the homogenized graph
 # ---------------------------------------------------------------------------
@@ -146,7 +156,8 @@ def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
 
 
 def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
-                 kind: str = "gcn", backend: ops.Backend = "xla") -> jax.Array:
+                 kind: str = "gcn",
+                 backend: ops.Backend = ops.DEFAULT_BACKEND) -> jax.Array:
     h = x @ params.w_in
     for lw in params.w_layers:
         if kind == "sage":

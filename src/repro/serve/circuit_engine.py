@@ -1,0 +1,233 @@
+"""Circuit serve engine: compile-once batched HGNN congestion inference.
+
+The LM engine (serve/engine.py) batches *tokens* into fixed slots; circuit
+graphs have no such fixed shape, so this engine batches *graphs* via
+block-diagonal collation (graphs/collate.py) instead:
+
+* **request queue** — each request is one packed :class:`CircuitGraph`;
+* **micro-batcher** — the FIFO head defines a shape bucket (quantized node
+  counts + feature widths); the queue is scanned for up to ``max_batch``
+  bucket-compatible requests, which collate into ONE padded graph and ONE
+  fused-executor dispatch.  Partial batches are filled with replicas of the
+  last member (inert: filler outputs are dropped) so member count never
+  splits the compile cache;
+* **executor cache** — the jitted forward takes the collated graph as a
+  *traced argument*; its compile cache is keyed by the padded shape
+  signature, so a mixed-size stream compiles once per bucket, not once per
+  graph (the HOGA-motivated property).  The engine counts distinct
+  signatures as ``compiles`` and asserts them against jit's own cache when
+  available;
+* **packing pool** — ``core.parallel.prefetch`` packs/pads/``device_put``s
+  batch i+1 on host threads while batch i runs on device — the paper's
+  CPU-thread + stream overlap (Sec. 3.4) at batch granularity.
+
+Throughput/latency stats (graphs/s, p50/p95 ms, compiles) are kept per run
+for benchmarks/bench_serve_circuit.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Deque, Dict, List, Optional, Union
+
+import numpy as np
+import jax
+
+from repro.core.hetero_mp import HeteroMPConfig
+from repro.core.parallel import prefetch
+from repro.graphs.circuit import CircuitGraph
+from repro.graphs.collate import (ARENA_GRID_BITS, BucketLayout,
+                                  collate_graphs, quantize_up)
+from repro.models.hgnn import drcircuitgnn_forward
+
+
+def percentile(sorted_values, p: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 for empty input).
+    Shared by the engine's stats and benchmarks/bench_serve_circuit.py."""
+    if not sorted_values:
+        return 0.0
+    i = min(int(p * (len(sorted_values) - 1)), len(sorted_values) - 1)
+    return sorted_values[i]
+
+
+@dataclasses.dataclass
+class CircuitRequest:
+    rid: int
+    graph: CircuitGraph
+    t_submit: float
+    t_done: float = 0.0
+    pred: Optional[np.ndarray] = None     # (n_cell,) congestion in [0, 1]
+
+    @property
+    def latency_ms(self) -> float:
+        return (self.t_done - self.t_submit) * 1e3
+
+
+class CircuitServeEngine:
+    """Micro-batching congestion-prediction server over a fixed model."""
+
+    # Serving wants FEW shape buckets more than tight padding: one mantissa
+    # bit (grid {2^e, 3·2^(e-1)}) collapses a size class with ±10% jitter
+    # into one bucket at ≤50% worst-case node padding.  Training keeps the
+    # finer NODE_GRID_BITS default — its batch membership is fixed, so
+    # signatures are stable regardless.
+    SERVE_NODE_BITS = 1
+
+    def __init__(self, params, mp_cfg: HeteroMPConfig, *,
+                 max_batch: int = 8,
+                 n_pack_threads: int = 3,
+                 node_bits: int = SERVE_NODE_BITS,
+                 arena_bits: int = ARENA_GRID_BITS,
+                 chunk: Union[None, int, Dict[str, int]] = None,
+                 pad_to_full: bool = True):
+        self.params = params
+        self.mp_cfg = mp_cfg
+        self.b = max_batch
+        self.n_pack_threads = n_pack_threads
+        self.node_bits = node_bits
+        self.arena_bits = arena_bits
+        self.chunk = chunk
+        self.pad_to_full = pad_to_full
+        self.queue: Deque[CircuitRequest] = deque()
+        self.finished: Dict[int, CircuitRequest] = {}
+        self._rid = itertools.count()
+        self._seen_sigs = set()
+        self._layouts: Dict[tuple, BucketLayout] = {}
+        self._bucket_locks: Dict[tuple, threading.Lock] = {}
+        self._layout_lock = threading.Lock()     # guards the two dicts
+        self._counters = dict(batches=0, requests=0, real_cells=0,
+                              padded_cells=0, wall_s=0.0)
+        self._fwd = jax.jit(
+            lambda p, g: drcircuitgnn_forward(p, g, mp_cfg))
+
+    # ------------------------------------------------------------- intake
+
+    def submit(self, graph: CircuitGraph) -> int:
+        rid = next(self._rid)
+        self.queue.append(CircuitRequest(rid=rid, graph=graph,
+                                         t_submit=time.perf_counter()))
+        return rid
+
+    def _group_key(self, g: CircuitGraph) -> tuple:
+        """Per-request shape bucket: requests sharing it collate into one
+        signature-stable batch."""
+        return (quantize_up(g.n_cell, self.node_bits),
+                quantize_up(g.n_net, self.node_bits),
+                g.x_cell.shape[1], g.x_net.shape[1])
+
+    def _take_batch(self) -> Optional[List[CircuitRequest]]:
+        """Micro-batcher: FIFO head defines the bucket; scan the queue for
+        up to ``max_batch`` bucket-compatible requests (others keep their
+        positions)."""
+        if not self.queue:
+            return None
+        key = self._group_key(self.queue[0].graph)
+        batch: List[CircuitRequest] = []
+        # Rotate the deque in place (never rebind self.queue): a submit()
+        # from another thread during the scan appends to the live deque and
+        # cannot be lost.  Non-matching requests keep their relative order.
+        for _ in range(len(self.queue)):
+            r = self.queue.popleft()
+            if len(batch) < self.b and self._group_key(r.graph) == key:
+                batch.append(r)
+            else:
+                self.queue.append(r)
+        return batch
+
+    # ---------------------------------------------------------- pipeline
+
+    def _prepare(self, reqs: List[CircuitRequest]):
+        """Host side (runs on the packing pool): collate, pad, transfer."""
+        graphs = [r.graph for r in reqs]
+        n_real = len(graphs)
+        if self.pad_to_full and n_real < self.b:
+            # replicate the last member as filler so partial batches keep
+            # the full-batch signature (outputs dropped, loss weight zero)
+            graphs = graphs + [graphs[-1]] * (self.b - n_real)
+        # The bucket layout pins chunk widths and floors chunk counts so
+        # same-bucket batches share a signature.  Locking is per bucket:
+        # prepares of different buckets (the common in-flight pair for an
+        # interleaved stream) pack concurrently; only the rare same-bucket
+        # pair serializes on its layout.
+        key = self._group_key(reqs[0].graph)
+        with self._layout_lock:
+            layout = self._layouts.setdefault(key, BucketLayout())
+            lock = self._bucket_locks.setdefault(key, threading.Lock())
+        with lock:
+            batch = collate_graphs(graphs, fused=True, quantize=True,
+                                   node_bits=self.node_bits,
+                                   arena_bits=self.arena_bits,
+                                   chunk=self.chunk, layout=layout,
+                                   n_real=n_real)
+        graph = jax.device_put(batch.graph)
+        return reqs, batch, graph
+
+    def _dispatch(self, prepared):
+        reqs, batch, graph = prepared
+        sig = batch.signature
+        if sig not in self._seen_sigs:
+            self._seen_sigs.add(sig)
+        out = self._fwd(self.params, graph)         # async dispatch
+        return reqs, batch, out
+
+    def _complete(self, inflight):
+        reqs, batch, out = inflight
+        preds = np.asarray(out)                     # device barrier
+        now = time.perf_counter()
+        for r, m in zip(reqs, batch.members):
+            r.pred = preds[m.cell_off:m.cell_off + m.n_cell]
+            r.t_done = now
+            self.finished[r.rid] = r
+        c = self._counters
+        c["batches"] += 1
+        c["requests"] += len(reqs)
+        c["real_cells"] += sum(m.n_cell for m in batch.members[:batch.n_real])
+        c["padded_cells"] += batch.graph.n_cell
+
+    def run(self) -> Dict[int, CircuitRequest]:
+        """Drain the queue: collate-compatible micro-batches flow through a
+        prefetch pipeline — the pool packs batch i+1 while the device runs
+        batch i, and batch i+1 is dispatched before batch i's results are
+        fetched (two batches in flight)."""
+        batches = []
+        while self.queue:
+            batches.append(self._take_batch())
+        t0 = time.perf_counter()
+        inflight = None
+        for prepared in prefetch(batches, self._prepare,
+                                 n_threads=self.n_pack_threads):
+            nxt = self._dispatch(prepared)
+            if inflight is not None:
+                self._complete(inflight)
+            inflight = nxt
+        if inflight is not None:
+            self._complete(inflight)
+        self._counters["wall_s"] += time.perf_counter() - t0
+        return self.finished
+
+    # ------------------------------------------------------------- stats
+
+    @property
+    def compiles(self) -> int:
+        """Distinct padded-shape signatures dispatched (== jit compiles of
+        the forward; cross-checked in stats() when jit exposes its cache)."""
+        return len(self._seen_sigs)
+
+    def stats(self) -> Dict[str, float]:
+        lat = sorted(r.latency_ms for r in self.finished.values())
+        c = self._counters
+        out = dict(requests=c["requests"], batches=c["batches"],
+                   compiles=self.compiles,
+                   graphs_per_s=c["requests"] / max(c["wall_s"], 1e-9),
+                   p50_ms=percentile(lat, 0.50), p95_ms=percentile(lat, 0.95),
+                   wall_s=c["wall_s"],
+                   cell_padding_ratio=(c["padded_cells"]
+                                       / max(c["real_cells"], 1)))
+        cache_size = getattr(self._fwd, "_cache_size", None)
+        if callable(cache_size):
+            out["jit_cache_size"] = cache_size()
+        return out

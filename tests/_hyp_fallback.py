@@ -13,7 +13,7 @@ With real hypothesis absent, ``@given`` degrades to a deterministic sweep of
 same property bodies execute over the same kind of input distribution.
 
 Only the strategy surface the repo's tests use is implemented: ``integers``,
-``just``, ``tuples``, ``sampled_from``, ``flatmap``/``map``.
+``just``, ``tuples``, ``sampled_from``, ``booleans``, ``flatmap``/``map``.
 """
 
 from __future__ import annotations
@@ -51,9 +51,13 @@ def _sampled_from(seq):
     return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
 
 
+def _booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
 strategies = types.SimpleNamespace(
     integers=_integers, just=_just, tuples=_tuples,
-    sampled_from=_sampled_from)
+    sampled_from=_sampled_from, booleans=_booleans)
 
 
 class settings:  # noqa: N801 — mirrors hypothesis' API
