@@ -1,25 +1,33 @@
-"""Batched collated dispatch vs per-graph sequential dispatch for circuit
-congestion serving (the ISSUE-2 acceptance benchmark).
+"""Sequential vs batched vs online multi-device circuit serving (the
+ISSUE-2/ISSUE-3 acceptance benchmark).
 
 The stream is the adversarial serving case: many small designs whose sizes
-jitter within two size classes, interleaved.  The sequential baseline is
-the natural per-graph path — one jitted forward taking each graph as a
-traced argument, so every distinct graph shape compiles and every graph is
-its own dispatch (the HOGA-motivated pathology).  The batched path is the
-:class:`CircuitServeEngine`: block-diagonal collation into quantized shape
-buckets, one fused dispatch per micro-batch, host packing of batch i+1
-overlapped with device execution of batch i.
+jitter within two size classes, interleaved.  Three modes:
+
+* **sequential** — the natural per-graph path: one jitted forward taking
+  each graph as a traced argument, so every distinct graph shape compiles
+  and every graph is its own dispatch (the HOGA-motivated pathology);
+* **batched** — :class:`CircuitServeEngine.run`: block-diagonal collation
+  into quantized shape buckets, one fused dispatch per micro-batch, host
+  packing of batch i+1 overlapped with device execution of batch i (pinned
+  to one device so the row stays comparable across PRs);
+* **online** — ``serve_forever()`` fed from a producer thread: continuous
+  intake, deadline batching, and round-robin dispatch over every available
+  device (2+ under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
 
 Reported per mode: aggregate graphs/s over the cold stream (compiles
 included — that IS serving cost for a mixed stream), steady-state graphs/s
-over a warm second pass, p50/p95 request latency, and compile count.
-Appended to ``BENCH_serve.json`` so the serving-perf trajectory is recorded
-across PRs.
+over a warm second pass, p50/p95 request latency, and compile count; the
+online row adds per-device dispatch counts and deadline flushes.  Appended
+to ``BENCH_serve.json`` so the serving-perf trajectory is recorded across
+PRs.  (Interpret-mode caveat: on CPU the timed backends are the XLA-path
+ones — see DESIGN.md §4/§7 — so these numbers track real wall-clock.)
 """
 
 from __future__ import annotations
 
 import sys
+import threading
 import time
 
 import jax
@@ -30,7 +38,7 @@ from repro.core.hetero_mp import HeteroMPConfig
 from repro.graphs.generator import generate_partition, pack_graph_parallel
 from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
 from repro.serve import CircuitServeEngine
-from repro.serve.circuit_engine import percentile
+from repro.train.metrics import percentile
 
 
 def make_stream(rng, n_per_class: int, classes=((220, 110), (430, 215)),
@@ -70,8 +78,43 @@ def bench_sequential(params, cfg, stream):
                 p50_ms=p50, p95_ms=p95, compiles=compiles)
 
 
+def bench_online(params, cfg, stream, max_batch: int,
+                 max_wait_ms: float = 25.0):
+    """serve_forever() fed by this (producer) thread; every local device."""
+    eng = CircuitServeEngine(params, cfg, max_batch=max_batch,
+                             max_wait_ms=max_wait_ms)
+    server = threading.Thread(target=eng.serve_forever)
+    server.start()
+    for g in stream:
+        eng.submit(g)
+    eng.stop()
+    server.join()
+    cold = eng.stats()
+    server = threading.Thread(target=eng.serve_forever)
+    server.start()
+    for g in stream:                       # warm pass: buckets already built
+        eng.submit(g)
+    eng.stop()
+    server.join()
+    warm = eng.stats()
+    warm_gps = ((warm["requests"] - cold["requests"])
+                / max(warm["wall_s"] - cold["wall_s"], 1e-9))
+    # cold-pass numbers throughout so the row is internally consistent
+    # (sum(dispatches_per_device) == batches)
+    return dict(graphs_per_s=cold["requests"] / max(cold["wall_s"], 1e-9),
+                warm_graphs_per_s=warm_gps,
+                p50_ms=cold["p50_ms"], p95_ms=cold["p95_ms"],
+                compiles=cold["compiles"], batches=cold["batches"],
+                devices=cold["devices"],
+                dispatches_per_device=cold["dispatches_per_device"],
+                deadline_flushes=cold["deadline_flushes"])
+
+
 def bench_batched(params, cfg, stream, max_batch: int):
-    eng = CircuitServeEngine(params, cfg, max_batch=max_batch)
+    # pinned to one device so the row stays comparable across PRs (the
+    # multi-device path gets its own `online` row)
+    eng = CircuitServeEngine(params, cfg, max_batch=max_batch,
+                             devices=jax.local_devices()[:1])
     for g in stream:
         eng.submit(g)
     eng.run()
@@ -101,10 +144,13 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
 
     seq = bench_sequential(params, cfg, stream)
     bat = bench_batched(params, cfg, stream, max_batch)
+    onl = bench_online(params, cfg, stream, max_batch)
 
     speedup = bat["graphs_per_s"] / max(seq["graphs_per_s"], 1e-9)
     warm_speedup = (bat["warm_graphs_per_s"]
                     / max(seq["warm_graphs_per_s"], 1e-9))
+    online_warm_speedup = (onl["warm_graphs_per_s"]
+                           / max(seq["warm_graphs_per_s"], 1e-9))
     emit("serve/sequential", 1e6 / max(seq["graphs_per_s"], 1e-9),
          f"graphs_per_s={seq['graphs_per_s']:.2f};"
          f"compiles={seq['compiles']}")
@@ -112,12 +158,17 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
          f"graphs_per_s={bat['graphs_per_s']:.2f};"
          f"compiles={bat['compiles']};speedup={speedup:.2f}x;"
          f"warm_speedup={warm_speedup:.2f}x")
+    emit("serve/online", 1e6 / max(onl["graphs_per_s"], 1e-9),
+         f"graphs_per_s={onl['graphs_per_s']:.2f};"
+         f"devices={onl['devices']};compiles={onl['compiles']};"
+         f"warm_speedup={online_warm_speedup:.2f}x")
     record = dict(ts=time.time(), kind="serve_circuit",
                   backend=jax.default_backend(),
                   n_graphs=len(stream), max_batch=max_batch, hidden=hidden,
                   classes=list(map(list, classes)),
-                  sequential=seq, batched=bat,
-                  speedup=speedup, warm_speedup=warm_speedup)
+                  sequential=seq, batched=bat, online=onl,
+                  speedup=speedup, warm_speedup=warm_speedup,
+                  online_warm_speedup=online_warm_speedup)
     append_json(out_json, record)
     return record
 
@@ -133,3 +184,9 @@ if __name__ == "__main__":
           f"{r['warm_speedup']:.2f}x warm "
           f"({r['batched']['compiles']} vs {r['sequential']['compiles']} "
           f"compiles)")
+    o = r["online"]
+    print(f"[serve] online x{o['devices']} devices: "
+          f"{o['graphs_per_s']:.2f} graphs/s cold, "
+          f"{r['online_warm_speedup']:.2f}x sequential warm, "
+          f"dispatches/device={o['dispatches_per_device']}, "
+          f"{o['deadline_flushes']} deadline flushes")

@@ -6,15 +6,25 @@ block-diagonal micro-batches, one fused dispatch per batch, host packing of
 the next batch overlapped with device execution of the current one.
 
     PYTHONPATH=src python examples/serve_circuit.py \
-        [--n-designs 4] [--scale 0.02] [--batch 4] [--hidden 64]
+        [--n-designs 4] [--scale 0.02] [--batch 4] [--hidden 64] [--online]
 
 ``--smoke`` runs a CI-sized stream and asserts the compile-once contract:
 the mixed-size queue completes with at most one compile per shape bucket
-(≤ 2 for the two-size-class smoke stream) and every prediction matches the
-graph served alone.
+per device (≤ 2 for the two-size-class smoke stream on one device) and
+every prediction matches the graph served alone.
+
+``--online`` switches from the one-shot ``run()`` drain to the long-lived
+``serve_forever()`` loop: the engine serves on a background thread while
+this (producer) thread submits the stream — continuous intake, partial
+buckets closing at the ``--max-wait-ms`` deadline, and micro-batches
+routed round-robin over every visible device.  Run it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` to see two CPU
+devices sharing the stream; ``--smoke --online`` additionally asserts the
+per-device dispatch counts and the (bucket, device) compile bound.
 """
 
 import argparse
+import threading
 
 import numpy as np
 import jax
@@ -53,6 +63,12 @@ def main():
     ap.add_argument("--k", type=int, default=16)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run + compile-once/parity assertions")
+    ap.add_argument("--online", action="store_true",
+                    help="serve_forever() on a background thread "
+                         "(continuous intake, deadline batching, "
+                         "round-robin over all devices)")
+    ap.add_argument("--max-wait-ms", type=float, default=30.0,
+                    help="online mode: partial-bucket flush deadline")
     args = ap.parse_args()
 
     if args.smoke:
@@ -70,32 +86,56 @@ def main():
     cfg = HeteroMPConfig(hidden=args.hidden, k_cell=args.k, k_net=args.k)
     params = init_drcircuitgnn(jax.random.PRNGKey(0), f_cell, f_net,
                                args.hidden)
-    eng = CircuitServeEngine(params, cfg, max_batch=args.batch)
+    eng = CircuitServeEngine(params, cfg, max_batch=args.batch,
+                             max_wait_ms=args.max_wait_ms)
 
-    rids = [eng.submit(g) for g in stream]
-    out = eng.run()
+    if args.online:
+        server = threading.Thread(target=eng.serve_forever)
+        server.start()
+        rids = [eng.submit(g) for g in stream]     # submit-during-run
+        for rid in rids:
+            eng.result(rid, timeout=600.0)
+        eng.stop()
+        server.join()
+        out = eng.finished
+    else:
+        rids = [eng.submit(g) for g in stream]
+        out = eng.run()
     st = eng.stats()
     print(f"\nserved {st['requests']} graphs in {st['batches']} batches "
           f"({st['compiles']} compiles, backend={cfg.backend})")
     print(f"throughput {st['graphs_per_s']:.1f} graphs/s | latency "
           f"p50 {st['p50_ms']:.0f} ms, p95 {st['p95_ms']:.0f} ms | "
           f"cell padding x{st['cell_padding_ratio']:.2f}")
+    print(f"devices {st['devices']} | dispatches/device "
+          f"{st['dispatches_per_device']} | deadline flushes "
+          f"{st['deadline_flushes']}")
     r0 = out[rids[0]]
     print(f"request {r0.rid}: {r0.pred.shape[0]} cells, congestion "
           f"mean {r0.pred.mean():.3f} max {r0.pred.max():.3f}")
 
     if args.smoke:
+        n_dev = st["devices"]
         n_buckets = len({eng._group_key(g) for g in stream})
         assert len(out) == len(stream), "requests lost"
         assert n_buckets == 2, f"smoke stream spans {n_buckets} buckets"
-        assert eng.compiles <= 2, \
-            f"{eng.compiles} compiles for {n_buckets} shape buckets"
+        assert eng.compiles <= n_buckets * n_dev, \
+            (f"{eng.compiles} compiles for {n_buckets} shape buckets "
+             f"on {n_dev} devices")
         if "jit_cache_size" in st:
             assert st["jit_cache_size"] == eng.compiles
         for rid, g in zip(rids, stream):
             ref = np.asarray(drcircuitgnn_forward(params, g, cfg))
             np.testing.assert_allclose(out[rid].pred, ref, atol=1e-5,
                                        rtol=1e-5)
+        if args.online:
+            counts = st["dispatches_per_device"]
+            assert sum(counts) == st["batches"], (counts, st["batches"])
+            if n_dev > 1 and st["batches"] >= 2 * n_dev:
+                # round-robin routing: every device served its share
+                assert all(c > 0 for c in counts), counts
+            print(f"[smoke] online x{n_dev} devices: per-device dispatch "
+                  f"counts {counts} OK")
         print("[smoke] compile-once + per-request parity OK")
 
 

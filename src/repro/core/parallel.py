@@ -18,6 +18,24 @@ threads + 3 cudaStreams.  The JAX/XLA equivalents:
 
 ``benchmark_modes`` quantifies fused vs sequential for EXPERIMENTS.md
 (the Fig. 12 "Parallel savings" analogue).
+
+Public helpers
+--------------
+``run_fused(fns, args)`` / ``run_sequential(fns, args)`` — the two
+execution modes above, with the jitted executables memoized on function
+identity (reuse the SAME closures across calls).
+
+``prefetch(items, prepare, depth=d, n_threads=n)`` — the host packing pool:
+``prepare`` runs on worker threads up to ``depth`` items ahead of the
+consumer, yielding results in input order.  The serve engine sets ``depth``
+to its device count so one batch is always being packed *per device* while
+the previous batches execute::
+
+    batches = [...]                          # (requests, device_index) units
+    for prepared in prefetch(batches, prepare_fn,
+                             depth=len(ring), n_threads=4):
+        dispatch(prepared)                   # device runs batch i while the
+                                             # pool packs batches i+1..i+d
 """
 
 from __future__ import annotations

@@ -31,7 +31,8 @@ row norms are member-local, so no renormalization is needed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -85,6 +86,58 @@ class BucketLayout:
         default_factory=dict)        # (etype, "fwd"|"bwd") -> Ec
     min_chunks: Dict[Tuple[str, str], int] = dataclasses.field(
         default_factory=dict)        # (etype, "fwd"|"bwd") -> padded C
+
+
+class LayoutTable:
+    """LRU table of per-shape-bucket :class:`BucketLayout` records.
+
+    A long-lived serving loop accumulates one layout per request bucket —
+    and, in the engine, one compile-cache's worth of executables per bucket.
+    Under a long tail of one-off shapes that state grows without bound, so
+    the table bounds it: ``get(key)`` creates-or-touches a bucket (LRU
+    refresh) and, when the table exceeds ``max_live`` buckets, evicts the
+    least-recently-used one, firing ``on_evict(key, layout)`` so the owner
+    can release derived state (compiled executables, locks, signature
+    counters).  An evicted bucket that returns starts from a fresh layout:
+    its first batch re-pins chunk widths and re-floors chunk counts, i.e. it
+    costs at most the bucket's original compile again (GSR-GNN's bounded
+    layout-reuse property).
+
+    ``max_live=None`` disables eviction (training-style fixed bucket sets).
+    Callers serialize access themselves (the engine holds its queue lock).
+    """
+
+    def __init__(self, max_live: Optional[int] = None,
+                 on_evict: Optional[Callable[[tuple, "BucketLayout"],
+                                             None]] = None):
+        assert max_live is None or max_live >= 1, max_live
+        self.max_live = max_live
+        self.on_evict = on_evict
+        self.evictions = 0
+        self._table: "OrderedDict[tuple, BucketLayout]" = OrderedDict()
+
+    def get(self, key: tuple) -> BucketLayout:
+        """Layout for ``key`` (created on first use), refreshed to
+        most-recently-used; may evict the LRU bucket (never ``key``)."""
+        layout = self._table.get(key)
+        if layout is None:
+            layout = self._table[key] = BucketLayout()
+        self._table.move_to_end(key)
+        while self.max_live is not None and len(self._table) > self.max_live:
+            k, v = self._table.popitem(last=False)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(k, v)
+        return layout
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._table
+
+    def keys(self):
+        return self._table.keys()
 
 
 def _arena_row_cap(n_dst: int, bounds: Sequence[int], row_block: int) -> int:

@@ -1,28 +1,63 @@
-"""Circuit serve engine: compile-once batched HGNN congestion inference.
+"""Circuit serve engine: online multi-device batched HGNN congestion
+inference.
 
 The LM engine (serve/engine.py) batches *tokens* into fixed slots; circuit
 graphs have no such fixed shape, so this engine batches *graphs* via
 block-diagonal collation (graphs/collate.py) instead:
 
-* **request queue** — each request is one packed :class:`CircuitGraph`;
-* **micro-batcher** — the FIFO head defines a shape bucket (quantized node
-  counts + feature widths); the queue is scanned for up to ``max_batch``
-  bucket-compatible requests, which collate into ONE padded graph and ONE
-  fused-executor dispatch.  Partial batches are filled with replicas of the
-  last member (inert: filler outputs are dropped) so member count never
-  splits the compile cache;
-* **executor cache** — the jitted forward takes the collated graph as a
-  *traced argument*; its compile cache is keyed by the padded shape
-  signature, so a mixed-size stream compiles once per bucket, not once per
-  graph (the HOGA-motivated property).  The engine counts distinct
-  signatures as ``compiles`` and asserts them against jit's own cache when
-  available;
-* **packing pool** — ``core.parallel.prefetch`` packs/pads/``device_put``s
-  batch i+1 on host threads while batch i runs on device — the paper's
-  CPU-thread + stream overlap (Sec. 3.4) at batch granularity.
+* **continuous intake** — ``submit()`` is thread-safe and legal while
+  ``serve_forever()`` is running: producers append to the live queue under
+  the engine lock and wake the serving loop;
+* **deadline-aware micro-batcher** — requests group into shape buckets
+  (quantized node counts + feature widths), FIFO within a bucket.  The
+  first bucket to reach ``max_batch`` compatible requests dispatches as a
+  full batch; a partial bucket closes when its oldest request has waited
+  ``max_wait_ms`` (filler-padding — inert replicas of the last member —
+  happens only at that deadline, so full batches never pay padding and
+  partial batches never starve);
+* **bucket eviction** — per-bucket compiled-layout state (the
+  :class:`~repro.graphs.collate.BucketLayout` that pins arena chunk widths
+  and floors chunk counts, plus the bucket's own jitted forward and its
+  compiled executables) lives in an LRU :class:`LayoutTable` bounded by
+  ``max_live_buckets``: a long tail of one-off shapes evicts cold buckets
+  instead of growing host+device memory without bound.  An evicted bucket
+  that returns recompiles at most once;
+* **multi-device routing** — bucket-compatible micro-batches are routed
+  round-robin onto the replica devices of the active mesh (or every local
+  device) via :class:`~repro.sharding.specs.DeviceRing`: independent
+  collated batches are embarrassingly parallel, so N devices give N
+  concurrent dispatches, each compiled once per (bucket, device);
+* **executor cache** — each bucket owns a jitted forward taking the
+  collated graph as a *traced argument*; a mixed-size stream compiles once
+  per (bucket, device), not once per graph (the HOGA-motivated property).
+  ``compiles`` counts first-dispatches of (signature, device) pairs,
+  cumulative across evictions, and ``stats()`` cross-checks the live count
+  against jit's own caches when available;
+* **packing pool** — host threads collate/pad/``device_put`` upcoming
+  batches while devices execute the current ones, one batch in flight per
+  device (``core.parallel.prefetch`` in drain mode; an equivalent explicit
+  pipeline in the online loop) — the paper's CPU-thread + stream overlap
+  (Sec. 3.4) at batch granularity.
 
-Throughput/latency stats (graphs/s, p50/p95 ms, compiles) are kept per run
-for benchmarks/bench_serve_circuit.py.
+Two serving modes share the pipeline:
+
+* ``run()`` — drain a snapshot of the queue (partial batches flush
+  immediately), the PR-2 batch interface;
+* ``serve_forever()`` — block the calling thread serving submits as they
+  arrive until ``stop()`` (which drains) or, with ``stop_when_idle=True``,
+  until the queue and pipeline are empty.  Typical online use::
+
+      eng = CircuitServeEngine(params, cfg, max_wait_ms=20.0,
+                               max_live_buckets=32)
+      t = threading.Thread(target=eng.serve_forever)
+      t.start()
+      rid = eng.submit(graph)               # any thread, any time
+      pred = eng.result(rid, timeout=5.0).pred
+      eng.stop(); t.join()
+
+Throughput/latency stats (graphs/s, p50/p95 ms, compiles, evictions,
+per-device dispatch counts) are kept per run for
+benchmarks/bench_serve_circuit.py.
 """
 
 from __future__ import annotations
@@ -32,7 +67,8 @@ import itertools
 import threading
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Union
+from concurrent.futures import ThreadPoolExecutor
+from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 import jax
@@ -40,18 +76,13 @@ import jax
 from repro.core.hetero_mp import HeteroMPConfig
 from repro.core.parallel import prefetch
 from repro.graphs.circuit import CircuitGraph
-from repro.graphs.collate import (ARENA_GRID_BITS, BucketLayout,
+from repro.graphs.collate import (ARENA_GRID_BITS, LayoutTable,
                                   collate_graphs, quantize_up)
 from repro.models.hgnn import drcircuitgnn_forward
-
-
-def percentile(sorted_values, p: float) -> float:
-    """Nearest-rank percentile of an ascending list (0 for empty input).
-    Shared by the engine's stats and benchmarks/bench_serve_circuit.py."""
-    if not sorted_values:
-        return 0.0
-    i = min(int(p * (len(sorted_values) - 1)), len(sorted_values) - 1)
-    return sorted_values[i]
+from repro.sharding.specs import DeviceRing
+# Back-compat re-export: percentile lived here through PR 2; it is now a
+# train.metrics helper so benchmarks don't import the engine for stats.
+from repro.train.metrics import percentile  # noqa: F401
 
 
 @dataclasses.dataclass
@@ -61,10 +92,22 @@ class CircuitRequest:
     t_submit: float
     t_done: float = 0.0
     pred: Optional[np.ndarray] = None     # (n_cell,) congestion in [0, 1]
+    key: Optional[tuple] = None           # shape bucket, stamped by submit()
+    error: Optional[BaseException] = None  # set when the batch failed
 
     @property
     def latency_ms(self) -> float:
         return (self.t_done - self.t_submit) * 1e3
+
+
+@dataclasses.dataclass
+class _BucketState:
+    """Engine-side per-bucket derived state, dropped as ONE unit by the
+    eviction hook (new per-bucket fields belong here, not in a sibling
+    dict, so they cannot leak past max_live_buckets)."""
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    fwd: Optional[object] = None          # the bucket's jitted forward
+    sigs: set = dataclasses.field(default_factory=set)  # live (sig, dev)
 
 
 class CircuitServeEngine:
@@ -83,8 +126,11 @@ class CircuitServeEngine:
                  node_bits: int = SERVE_NODE_BITS,
                  arena_bits: int = ARENA_GRID_BITS,
                  chunk: Union[None, int, Dict[str, int]] = None,
-                 pad_to_full: bool = True):
-        self.params = params
+                 pad_to_full: bool = True,
+                 max_wait_ms: float = 50.0,
+                 max_live_buckets: Optional[int] = None,
+                 max_finished: Optional[int] = None,
+                 devices: Optional[Sequence] = None):
         self.mp_cfg = mp_cfg
         self.b = max_batch
         self.n_pack_threads = n_pack_threads
@@ -92,25 +138,85 @@ class CircuitServeEngine:
         self.arena_bits = arena_bits
         self.chunk = chunk
         self.pad_to_full = pad_to_full
+        self.max_wait_ms = max_wait_ms
+        # Bound on retained results: a long-lived loop whose clients never
+        # collect would otherwise pin every request's graph + prediction
+        # forever.  None keeps everything (the run()-and-read-back pattern);
+        # online clients should either set it or result(..., pop=True).
+        self.max_finished = max_finished
+        self.ring = DeviceRing(devices)
+        self.params = params
+        # one committed replica per ring device: a dispatch's placement
+        # follows its (committed) arguments, so batch routing is just
+        # "device_put the batch to slot i, call with replica i"
+        self._params_of = tuple(jax.device_put(params, d)
+                                for d in self.ring.devices)
         self.queue: Deque[CircuitRequest] = deque()
         self.finished: Dict[int, CircuitRequest] = {}
+        # latency stats live in their own bounded window so trimming
+        # `finished` (max_finished / result(pop=True)) can't skew them
+        self._lat_window: Deque[float] = deque(maxlen=4096)
         self._rid = itertools.count()
-        self._seen_sigs = set()
-        self._layouts: Dict[tuple, BucketLayout] = {}
-        self._bucket_locks: Dict[tuple, threading.Lock] = {}
-        self._layout_lock = threading.Lock()     # guards the two dicts
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)   # submit/prep/stop
+        self._done = threading.Condition(self._lock)   # result() waiters
+        self._stop = False
+        self._serving = False
+        # Per-bucket state, all evicted together by the LayoutTable LRU:
+        # the arena layout (the table's value) plus the engine-side
+        # _BucketState — pack lock, the bucket's jitted forward (owning its
+        # compile cache; dropping it is what releases the executables), and
+        # its live (signature, device) set.
+        self._layouts = LayoutTable(max_live=max_live_buckets,
+                                    on_evict=self._evict_bucket)
+        self._buckets: Dict[tuple, _BucketState] = {}
+        self._n_compiles = 0        # cumulative, incl. eviction recompiles
         self._counters = dict(batches=0, requests=0, real_cells=0,
-                              padded_cells=0, wall_s=0.0)
-        self._fwd = jax.jit(
-            lambda p, g: drcircuitgnn_forward(p, g, mp_cfg))
+                              padded_cells=0, wall_s=0.0, deadline_flushes=0,
+                              failures=0,
+                              dispatches_per_device=[0] * len(self.ring))
+
+    def _make_fwd(self):
+        cfg = self.mp_cfg
+        return jax.jit(lambda p, g: drcircuitgnn_forward(p, g, cfg))
 
     # ------------------------------------------------------------- intake
 
     def submit(self, graph: CircuitGraph) -> int:
+        """Enqueue one request; thread-safe, legal while serve_forever()
+        runs (the serving loop is woken immediately)."""
         rid = next(self._rid)
-        self.queue.append(CircuitRequest(rid=rid, graph=graph,
-                                         t_submit=time.perf_counter()))
+        # bucket key stamped once here, so the batcher's queue scans don't
+        # recompute it under the engine lock on every wake
+        req = CircuitRequest(rid=rid, graph=graph,
+                             t_submit=time.perf_counter(),
+                             key=self._group_key(graph))
+        with self._work:
+            self.queue.append(req)
+            self._work.notify_all()
         return rid
+
+    def result(self, rid: int, timeout: Optional[float] = None,
+               pop: bool = False) -> CircuitRequest:
+        """Block until request ``rid`` finishes (serve_forever must be
+        running on another thread, or run() called later).  ``pop=True``
+        releases the engine's reference to the finished request — the
+        collect-your-results pattern that keeps a long-lived loop's memory
+        flat even without ``max_finished``."""
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        with self._done:
+            while rid not in self.finished:
+                rem = None if deadline is None \
+                    else deadline - time.perf_counter()
+                if rem is not None and rem <= 0:
+                    raise TimeoutError(f"request {rid} not finished "
+                                       f"within {timeout}s")
+                self._done.wait(rem)
+            req = self.finished.pop(rid) if pop else self.finished[rid]
+        if req.error is not None:
+            raise RuntimeError(f"request {rid} failed in serving"
+                               ) from req.error
+        return req
 
     def _group_key(self, g: CircuitGraph) -> tuple:
         """Per-request shape bucket: requests sharing it collate into one
@@ -119,115 +225,329 @@ class CircuitServeEngine:
                 quantize_up(g.n_net, self.node_bits),
                 g.x_cell.shape[1], g.x_net.shape[1])
 
-    def _take_batch(self) -> Optional[List[CircuitRequest]]:
-        """Micro-batcher: FIFO head defines the bucket; scan the queue for
-        up to ``max_batch`` bucket-compatible requests (others keep their
-        positions)."""
+    # ----------------------------------------------------------- batcher
+
+    def _take_due_batch(self, max_wait_s: float
+                        ) -> Optional[List[CircuitRequest]]:
+        """Deadline-aware micro-batcher (caller holds the lock).
+
+        Buckets form in FIFO order of first appearance; the first bucket
+        with ``max_batch`` compatible requests dispatches full.  With none
+        full, the head bucket dispatches partial once its oldest request
+        (the queue head — the globally oldest) has waited ``max_wait_s``;
+        ``max_wait_s <= 0`` flushes partials immediately (drain mode).
+        Returns None when nothing is due.  Taken requests leave the queue;
+        the rest keep their relative order."""
         if not self.queue:
             return None
-        key = self._group_key(self.queue[0].graph)
-        batch: List[CircuitRequest] = []
-        # Rotate the deque in place (never rebind self.queue): a submit()
-        # from another thread during the scan appends to the live deque and
-        # cannot be lost.  Non-matching requests keep their relative order.
+        groups: Dict[tuple, List[CircuitRequest]] = {}
+        order: List[tuple] = []
+        for r in self.queue:
+            k = r.key
+            g = groups.get(k)
+            if g is None:
+                groups[k] = g = []
+                order.append(k)
+            if len(g) < self.b:
+                g.append(r)
+        pick = next((k for k in order if len(groups[k]) >= self.b), None)
+        if pick is None:
+            head = order[0]
+            age = time.perf_counter() - groups[head][0].t_submit
+            if max_wait_s <= 0 or age >= max_wait_s:
+                pick = head
+                if max_wait_s > 0 and len(groups[head]) < self.b:
+                    self._counters["deadline_flushes"] += 1
+        if pick is None:
+            return None
+        chosen = {id(r) for r in groups[pick]}
+        # Rotate the deque in place (never rebind self.queue): non-matching
+        # requests keep their relative order.
         for _ in range(len(self.queue)):
             r = self.queue.popleft()
-            if len(batch) < self.b and self._group_key(r.graph) == key:
-                batch.append(r)
-            else:
+            if id(r) not in chosen:
                 self.queue.append(r)
-        return batch
+        return groups[pick]
+
+    def _next_deadline_s(self, max_wait_s: float) -> Optional[float]:
+        """Seconds until the queue head's deadline (lock held); None when
+        the queue is empty (wait for a submit)."""
+        if not self.queue or max_wait_s <= 0:
+            return None if not self.queue else 0.0
+        rem = self.queue[0].t_submit + max_wait_s - time.perf_counter()
+        return max(rem, 0.0)
 
     # ---------------------------------------------------------- pipeline
 
-    def _prepare(self, reqs: List[CircuitRequest]):
-        """Host side (runs on the packing pool): collate, pad, transfer."""
+    def _prepare(self, reqs: List[CircuitRequest], dev_idx: int):
+        """Host side (runs on the packing pool): collate, pad, transfer to
+        ring slot ``dev_idx``."""
         graphs = [r.graph for r in reqs]
         n_real = len(graphs)
         if self.pad_to_full and n_real < self.b:
             # replicate the last member as filler so partial batches keep
             # the full-batch signature (outputs dropped, loss weight zero)
             graphs = graphs + [graphs[-1]] * (self.b - n_real)
+        key = reqs[0].key
         # The bucket layout pins chunk widths and floors chunk counts so
         # same-bucket batches share a signature.  Locking is per bucket:
-        # prepares of different buckets (the common in-flight pair for an
+        # prepares of different buckets (the common in-flight set for an
         # interleaved stream) pack concurrently; only the rare same-bucket
         # pair serializes on its layout.
-        key = self._group_key(reqs[0].graph)
-        with self._layout_lock:
-            layout = self._layouts.setdefault(key, BucketLayout())
-            lock = self._bucket_locks.setdefault(key, threading.Lock())
+        with self._lock:
+            layout = self._layouts.get(key)      # LRU touch; may evict
+            lock = self._buckets.setdefault(key, _BucketState()).lock
         with lock:
             batch = collate_graphs(graphs, fused=True, quantize=True,
                                    node_bits=self.node_bits,
                                    arena_bits=self.arena_bits,
                                    chunk=self.chunk, layout=layout,
                                    n_real=n_real)
-        graph = jax.device_put(batch.graph)
-        return reqs, batch, graph
+        graph = self.ring.put(batch.graph, dev_idx)
+        return reqs, batch, graph, key, dev_idx
 
     def _dispatch(self, prepared):
-        reqs, batch, graph = prepared
+        reqs, batch, graph, key, dev_idx = prepared
         sig = batch.signature
-        if sig not in self._seen_sigs:
-            self._seen_sigs.add(sig)
-        out = self._fwd(self.params, graph)         # async dispatch
+        with self._lock:
+            st = self._buckets.setdefault(key, _BucketState())
+            if st.fwd is None:
+                # first dispatch of the bucket, or its return after an
+                # eviction dropped the old jit — either way a fresh compile
+                # cache (so "recompiles at most once on return" is exact)
+                st.fwd = self._make_fwd()
+            fwd = st.fwd
+            if (sig, dev_idx) not in st.sigs:
+                st.sigs.add((sig, dev_idx))
+                self._n_compiles += 1
+            self._counters["dispatches_per_device"][dev_idx] += 1
+        out = fwd(self._params_of[dev_idx], graph)    # async dispatch
         return reqs, batch, out
 
     def _complete(self, inflight):
         reqs, batch, out = inflight
-        preds = np.asarray(out)                     # device barrier
+        preds = np.asarray(out)                       # device barrier
         now = time.perf_counter()
-        for r, m in zip(reqs, batch.members):
-            r.pred = preds[m.cell_off:m.cell_off + m.n_cell]
-            r.t_done = now
-            self.finished[r.rid] = r
-        c = self._counters
-        c["batches"] += 1
-        c["requests"] += len(reqs)
-        c["real_cells"] += sum(m.n_cell for m in batch.members[:batch.n_real])
-        c["padded_cells"] += batch.graph.n_cell
+        with self._done:
+            for r, m in zip(reqs, batch.members):
+                # copy: a view would pin the whole padded batch array, so
+                # max_finished / result(pop=True) would bound nothing
+                r.pred = preds[m.cell_off:m.cell_off + m.n_cell].copy()
+                r.t_done = now
+                self.finished[r.rid] = r
+                self._lat_window.append(r.latency_ms)
+            if self.max_finished is not None:
+                while len(self.finished) > self.max_finished:
+                    # dict preserves insertion order: drop the oldest
+                    self.finished.pop(next(iter(self.finished)))
+            c = self._counters
+            c["batches"] += 1
+            c["requests"] += len(reqs)
+            c["real_cells"] += sum(m.n_cell
+                                   for m in batch.members[:batch.n_real])
+            c["padded_cells"] += batch.graph.n_cell
+            self._done.notify_all()
+
+    def _evict_bucket(self, key: tuple, layout) -> None:
+        """LayoutTable eviction hook (fires under self._lock, from the
+        pool thread inside _prepare).  Dropping the bucket's _BucketState
+        releases its jit's compiled executables; its signatures stop being
+        live, so a future return of the bucket counts as a fresh compile."""
+        self._buckets.pop(key, None)
+
+    def _fail(self, reqs: List[CircuitRequest], exc: BaseException) -> None:
+        """Contain a batch failure: mark its requests failed (result()
+        re-raises for them) and keep serving — one malformed request must
+        not strand the rest of the stream."""
+        now = time.perf_counter()
+        with self._done:
+            for r in reqs:
+                r.error = exc
+                r.t_done = now
+                self.finished[r.rid] = r
+            if self.max_finished is not None:
+                while len(self.finished) > self.max_finished:
+                    self.finished.pop(next(iter(self.finished)))
+            self._counters["failures"] += len(reqs)
+            self._done.notify_all()
+
+    # ------------------------------------------------------------- modes
 
     def run(self) -> Dict[int, CircuitRequest]:
-        """Drain the queue: collate-compatible micro-batches flow through a
-        prefetch pipeline — the pool packs batch i+1 while the device runs
-        batch i, and batch i+1 is dispatched before batch i's results are
-        fetched (two batches in flight)."""
+        """Drain a snapshot of the queue: partial batches flush immediately
+        (no deadline wait), batches round-robin over the device ring, and
+        the packing pool keeps one batch in flight per device — the pool
+        packs batches i+1..i+D while the D devices run batches i-D+1..i."""
         batches = []
-        while self.queue:
-            batches.append(self._take_batch())
+        with self._lock:
+            if self._serving:
+                raise RuntimeError("run() while serve_forever() is active; "
+                                   "use submit()/result() instead")
+            while self.queue:
+                reqs = self._take_due_batch(0.0)
+                batches.append((reqs, self.ring.next_index()))
         t0 = time.perf_counter()
-        inflight = None
-        for prepared in prefetch(batches, self._prepare,
-                                 n_threads=self.n_pack_threads):
-            nxt = self._dispatch(prepared)
-            if inflight is not None:
-                self._complete(inflight)
-            inflight = nxt
-        if inflight is not None:
-            self._complete(inflight)
+        inflight: Deque = deque()
+        n_dev = len(self.ring)
+        for prepared in prefetch(batches, lambda ba: self._prepare(*ba),
+                                 depth=n_dev,
+                                 n_threads=max(self.n_pack_threads, n_dev)):
+            inflight.append(self._dispatch(prepared))
+            if len(inflight) > n_dev:
+                self._complete(inflight.popleft())
+        while inflight:
+            self._complete(inflight.popleft())
         self._counters["wall_s"] += time.perf_counter() - t0
         return self.finished
+
+    def serve_forever(self, *, stop_when_idle: bool = False
+                      ) -> Dict[int, CircuitRequest]:
+        """Long-lived online loop: serve submits as they arrive until
+        ``stop()`` (which drains the queue and pipeline first) or, with
+        ``stop_when_idle``, until queue and pipeline are both empty.
+
+        Blocks the calling thread — run it on a dedicated thread and feed
+        it with ``submit()`` from any other.  The pipeline is the drain-mode
+        one made incremental: pool threads prepare due batches (one in
+        flight per device, plus the pool's own lookahead), the loop
+        dispatches them in order, and completed batches are retired eagerly
+        whenever no batch is due — so results surface during lulls instead
+        of waiting for the next submit.
+
+        Batch failures are contained: a prepare/dispatch/complete exception
+        marks that batch's requests failed (``result()`` re-raises for
+        them, ``stats()["failures"]`` counts them) and the loop keeps
+        serving the rest of the stream."""
+        max_wait_s = self.max_wait_ms * 1e-3
+        n_dev = len(self.ring)
+        prep: Deque = deque()       # (Future of _prepare, reqs), in order
+        inflight: Deque = deque()   # dispatched, completion order
+
+        def dispatch_head():
+            fut, reqs_p = prep.popleft()
+            try:
+                inflight.append(self._dispatch(fut.result()))
+            except Exception as e:
+                self._fail(reqs_p, e)
+
+        def complete_head():
+            entry = inflight.popleft()
+            try:
+                self._complete(entry)
+            except Exception as e:
+                self._fail(entry[0], e)
+
+        with self._lock:
+            if self._serving:
+                raise RuntimeError("serve_forever() is already running")
+            self._serving = True
+            # do NOT clear _stop here: a stop() that raced ahead of this
+            # thread's start must still win (the loop then just drains the
+            # already-queued requests and returns).  _stop resets on exit,
+            # so a later serve_forever() starts fresh.
+        t0 = time.perf_counter()
+        pool = ThreadPoolExecutor(
+            max_workers=max(self.n_pack_threads, n_dev))
+        try:
+            while True:
+                while prep and prep[0][0].done():
+                    dispatch_head()
+                while len(inflight) > n_dev:
+                    complete_head()
+                reqs = dev_idx = None
+                with self._work:
+                    # stopping flushes partials immediately — no deadline
+                    reqs = self._take_due_batch(
+                        0.0 if self._stop else max_wait_s)
+                    if reqs is not None:
+                        dev_idx = self.ring.next_index()
+                    elif prep or inflight:
+                        pass        # drain the pipeline below
+                    elif self._stop or (stop_when_idle and not self.queue):
+                        break       # queue empty, pipeline dry
+                    else:
+                        # nothing due and nothing in flight: sleep until
+                        # the head's deadline / a submit / stop()
+                        self._work.wait(self._next_deadline_s(max_wait_s))
+                        continue
+                if reqs is not None:
+                    fut = pool.submit(self._prepare, reqs, dev_idx)
+                    fut.add_done_callback(self._notify_work)
+                    prep.append((fut, reqs))
+                elif prep:
+                    # pipeline head; dispatched (or failed) next iteration.
+                    # exception() blocks without re-raising here.
+                    prep[0][0].exception()
+                else:
+                    complete_head()
+        finally:
+            pool.shutdown(wait=True)
+            with self._lock:
+                self._serving = False
+                self._stop = False
+            self._counters["wall_s"] += time.perf_counter() - t0
+        return self.finished
+
+    def stop(self) -> None:
+        """Ask serve_forever() to drain (queue + in-flight batches) and
+        return; thread-safe, and it wins even when it races ahead of the
+        serving thread's start (the flag is sticky until a serve loop
+        consumes it on exit).  Requests submitted after stop() may still be
+        served by the drain or by a later run()/serve_forever()."""
+        with self._work:
+            self._stop = True
+            self._work.notify_all()
+
+    def _notify_work(self, _fut) -> None:
+        with self._work:
+            self._work.notify_all()
 
     # ------------------------------------------------------------- stats
 
     @property
     def compiles(self) -> int:
-        """Distinct padded-shape signatures dispatched (== jit compiles of
-        the forward; cross-checked in stats() when jit exposes its cache)."""
-        return len(self._seen_sigs)
+        """Cumulative first-dispatches of (padded-shape signature, device)
+        pairs — each is one jit compile.  Evicting a bucket drops its live
+        signatures, so a bucket that returns after eviction counts its
+        recompile here too (cross-checked in stats() against the live
+        buckets' own jit caches)."""
+        return self._n_compiles
+
+    @property
+    def live_buckets(self) -> int:
+        return len(self._layouts)
+
+    @property
+    def evictions(self) -> int:
+        return self._layouts.evictions
 
     def stats(self) -> Dict[str, float]:
-        lat = sorted(r.latency_ms for r in self.finished.values())
-        c = self._counters
+        with self._lock:
+            lat = sorted(self._lat_window)
+            c = dict(self._counters,
+                     dispatches_per_device=list(
+                         self._counters["dispatches_per_device"]))
+            fwds = [s.fwd for s in self._buckets.values()
+                    if s.fwd is not None]
+            live = sum(len(s.sigs) for s in self._buckets.values())
         out = dict(requests=c["requests"], batches=c["batches"],
                    compiles=self.compiles,
                    graphs_per_s=c["requests"] / max(c["wall_s"], 1e-9),
                    p50_ms=percentile(lat, 0.50), p95_ms=percentile(lat, 0.95),
                    wall_s=c["wall_s"],
                    cell_padding_ratio=(c["padded_cells"]
-                                       / max(c["real_cells"], 1)))
-        cache_size = getattr(self._fwd, "_cache_size", None)
-        if callable(cache_size):
-            out["jit_cache_size"] = cache_size()
+                                       / max(c["real_cells"], 1)),
+                   deadline_flushes=c["deadline_flushes"],
+                   failures=c["failures"],
+                   devices=len(self.ring),
+                   dispatches_per_device=c["dispatches_per_device"],
+                   live_buckets=self.live_buckets,
+                   evictions=self.evictions,
+                   live_compiles=live)
+        sizes = [f._cache_size() for f in fwds
+                 if callable(getattr(f, "_cache_size", None))]
+        if len(sizes) == len(fwds):
+            # sum over live per-bucket jits == live (sig, device) pairs;
+            # with no evictions this equals the cumulative `compiles`
+            out["jit_cache_size"] = sum(sizes)
         return out

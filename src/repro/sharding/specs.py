@@ -1,4 +1,4 @@
-"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+"""Logical-axis sharding rules (MaxText-style) + device routing helpers.
 
 Models annotate tensors with *logical* axis names; this module maps them to
 mesh axes per :data:`RULES`, dropping any mapping whose divisibility fails
@@ -10,14 +10,43 @@ Mesh axes:
     pod    — inter-pod data parallelism (multi-pod mesh only)
     data   — intra-pod data parallelism + FSDP (ZeRO-3) param sharding
     model  — tensor parallelism (heads / mlp / vocab / experts / kv-seq)
+
+Public helpers
+--------------
+``mesh_context(mesh)`` — scope the active mesh (thread-local); every
+``constrain``/``make_pspec`` call inside resolves logical names against it::
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    with mesh_context(mesh), mesh:
+        state = init_train_state(...)        # params land FSDP-sharded
+        out = train_step(state, batch)       # constrain() sees the mesh
+
+``shard_map_compat(mesh=..., in_specs=..., out_specs=...)`` — decorator
+factory over ``jax.shard_map`` that also runs on older jax releases (maps
+``check_vma``/``axis_names`` onto ``check_rep``/``auto``)::
+
+    @shard_map_compat(mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+    def per_shard(x):                        # x is this device's slice
+        return x * 2
+
+``DeviceRing`` / ``batch_devices`` — round-robin routing of *independent*
+dispatches (collated serve batches, data-parallel gradient shards) onto the
+replica devices of the active mesh, or every local device when no mesh is
+set.  Used by serve/circuit_engine.py and train/circuit_trainer.py::
+
+    ring = DeviceRing()                      # one slot per replica device
+    i = ring.next_index()                    # thread-safe round-robin
+    batch = ring.put(batch, i)               # device_put onto slot i
 """
 
 from __future__ import annotations
 
 import contextlib
+import itertools
 import threading
 from typing import Optional, Sequence, Tuple
 
+import numpy as np
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -106,6 +135,54 @@ def param_sharding(shape: Sequence[int], axes: Sequence[Optional[str]],
 def batch_axes(mesh: Optional[Mesh] = None) -> Tuple[str, ...]:
     mesh = mesh or get_mesh()
     return tuple(a for a in ("pod", "data") if mesh and a in mesh.axis_names)
+
+
+def batch_devices(mesh: Optional[Mesh] = None) -> Tuple:
+    """Devices that can each run an *independent* batch: one per batch-axis
+    ("pod" × "data") coordinate of the active mesh — model-axis peers hold
+    shards of ONE replica, so only the first device of each model group is a
+    routing target — or every local device when no mesh is set."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return tuple(jax.local_devices())
+    dv = np.asarray(mesh.devices)
+    ax = batch_axes(mesh)
+    if not ax:
+        return (dv.flat[0],)
+    names = list(mesh.axis_names)
+    perm = [names.index(a) for a in ax] + \
+           [i for i, n in enumerate(names) if n not in ax]
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return tuple(np.transpose(dv, perm).reshape(n, -1)[:, 0])
+
+
+class DeviceRing:
+    """Round-robin router for embarrassingly parallel dispatches.
+
+    Independent collated batches (serving) and gradient shards (data-
+    parallel training) have no cross-device dataflow, so routing them onto
+    distinct devices is pure throughput.  ``devices=None`` resolves via
+    :func:`batch_devices` at construction time; ``next_index`` is a
+    thread-safe round-robin counter (callers on packing-pool threads share
+    one ring)."""
+
+    def __init__(self, devices: Optional[Sequence] = None):
+        self.devices = tuple(devices) if devices is not None \
+            else batch_devices()
+        assert self.devices, "DeviceRing needs at least one device"
+        self._count = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def next_index(self) -> int:
+        return next(self._count) % len(self.devices)
+
+    def put(self, tree, index: int):
+        """``jax.device_put`` a pytree onto ring slot ``index``."""
+        return jax.device_put(tree, self.devices[index % len(self.devices)])
 
 
 def shard_map_compat(**kw):

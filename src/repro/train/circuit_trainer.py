@@ -23,6 +23,7 @@ from repro.models.hgnn import (DRCircuitGNNParams, batched_loss_fn,
                                drcircuitgnn_forward, init_drcircuitgnn,
                                loss_fn)
 from repro.optim import adamw_init, adamw_update, constant
+from repro.sharding.specs import DeviceRing
 from repro.train import metrics as M
 
 
@@ -57,6 +58,8 @@ class CircuitTrainer:
         self.lr = constant(cfg.lr)
         self._step_fn = self._build_step()
         self._batched_step_fn = self._build_batched_step()
+        self._grad_fn = self._build_grad()
+        self._apply_fn = self._build_apply()
         self._batch_cache = {}        # id-tuple of member graphs -> device batch
 
     def _build_step(self):
@@ -86,7 +89,59 @@ class CircuitTrainer:
 
         return step
 
-    def _collate(self, graphs: List[CircuitGraph]):
+    def _build_grad(self):
+        """Loss+grad over one collated shard — the per-device half of a
+        data-parallel step.  Placement follows the committed arguments, so
+        dispatching shard d with replica-d params runs on device d."""
+        mp_cfg = self.mp_cfg
+
+        @jax.jit
+        def gfn(params, graph: CircuitGraph, cell_w):
+            return jax.value_and_grad(batched_loss_fn)(params, graph,
+                                                       cell_w, mp_cfg)
+
+        return gfn
+
+    def _build_apply(self):
+        lr, wd = self.lr, self.cfg.weight_decay
+
+        @jax.jit
+        def apply(params, opt_state, grads):
+            return adamw_update(params, grads, opt_state,
+                                lr(opt_state.step), weight_decay=wd)
+
+        return apply
+
+    def _dp_step(self, graphs: List[CircuitGraph], ring: DeviceRing):
+        """One data-parallel optimizer step over ``graphs``: members are
+        sharded round-robin onto the ring devices, per-shard grads (each a
+        mean over its members) dispatch concurrently — independent collated
+        batches are embarrassingly parallel, the same property the serve
+        engine routes on — then combine as a member-count-weighted mean into
+        ONE adamw update.  The gradient equals the single-device batched
+        step over the same members (weights 1/(n_shard·n_cell_i) scaled by
+        n_shard/n_total compose to 1/(n_total·n_cell_i))."""
+        n_dev = min(len(ring), len(graphs))
+        shards = [graphs[d::n_dev] for d in range(n_dev)]
+        outs, weights = [], []
+        for d, shard in enumerate(shards):
+            graph, cell_w, n_real = self._collate(shard,
+                                                  device=ring.devices[d])
+            p_d = jax.device_put(self.params, ring.devices[d])
+            outs.append(self._grad_fn(p_d, graph, cell_w))   # async, dev d
+            weights.append(n_real)
+        total = sum(weights)
+        dev0 = ring.devices[0]
+        losses = [jax.device_get(loss) for loss, _ in outs]
+        grads = jax.tree.map(
+            lambda *gs: sum((w / total) * jax.device_put(g, dev0)
+                            for w, g in zip(weights, gs)),
+            *[g for _, g in outs])
+        self.params, self.opt_state = self._apply_fn(
+            jax.device_put(self.params, dev0), self.opt_state, grads)
+        return float(np.average(losses, weights=weights)), total
+
+    def _collate(self, graphs: List[CircuitGraph], device=None):
         """Collate (and device-put) a batch once; reuse across epochs.  The
         quantized fused arenas mean batches of one shape bucket also share
         the jitted step's compiled executable.
@@ -94,22 +149,28 @@ class CircuitTrainer:
         The cache key is the member id-tuple; the entry pins the member
         graphs (so their ids cannot be reused while it lives) and the hit
         path re-checks identity — the same guard _FUSE_CACHE uses."""
-        key = tuple(id(g) for g in graphs)
+        key = (tuple(id(g) for g in graphs), getattr(device, "id", None))
         hit = self._batch_cache.get(key)
         if hit is not None and all(a is b for a, b in zip(hit[0], graphs)):
             return hit[1]
         batch = collate_graphs(graphs)
-        entry = (jax.device_put(batch.graph),
-                 jax.device_put(batch.cell_weight), batch.n_real)
+        entry = (jax.device_put(batch.graph, device),
+                 jax.device_put(batch.cell_weight, device), batch.n_real)
         self._batch_cache[key] = (tuple(graphs), entry)
         return entry
 
     def train_epoch(self, graphs: List[CircuitGraph],
-                    batch_size: int = None) -> float:
+                    batch_size: int = None, devices=None) -> float:
         """One epoch.  ``batch_size > 1`` collates consecutive graphs
         block-diagonally so the epoch is ceil(n/B) dispatches instead of n
         (one optimizer step per *batch*, gradient = mean of member
-        losses)."""
+        losses).
+
+        ``devices`` opts into data-parallel steps: each batch's members are
+        sharded over a :class:`DeviceRing` (a device sequence, or ``True``
+        for the mesh/local default) and the per-shard grads averaged into
+        one update — the serve engine's multi-device dispatch reused for
+        training (same math as the single-device batched step)."""
         b = self.cfg.batch_size if batch_size is None else batch_size
         if b <= 1:
             losses = []
@@ -118,11 +179,18 @@ class CircuitTrainer:
                     self.params, self.opt_state, g)
                 losses.append(float(loss))
             return float(np.mean(losses))
+        ring = None
+        if devices is not None:
+            ring = DeviceRing(None if devices is True else devices)
         losses, weights = [], []
         for i in range(0, len(graphs), b):
-            graph, cell_w, n_real = self._collate(graphs[i:i + b])
-            self.params, self.opt_state, loss = self._batched_step_fn(
-                self.params, self.opt_state, graph, cell_w)
+            chunk = graphs[i:i + b]
+            if ring is not None and len(chunk) > 1:
+                loss, n_real = self._dp_step(chunk, ring)
+            else:
+                graph, cell_w, n_real = self._collate(chunk)
+                self.params, self.opt_state, loss = self._batched_step_fn(
+                    self.params, self.opt_state, graph, cell_w)
             losses.append(float(loss))
             weights.append(n_real)
         return float(np.average(losses, weights=weights))
@@ -149,6 +217,7 @@ class CircuitTrainer:
                                           k_net=ks["net"])
         self._step_fn = self._build_step()
         self._batched_step_fn = self._build_batched_step()
+        self._grad_fn = self._build_grad()
         return ks
 
     def fit(self, train_graphs: List[CircuitGraph],

@@ -1,9 +1,21 @@
 """Rank-correlation metrics for congestion prediction (paper Sec. 4.1):
-Pearson, Spearman, Kendall, plus MAE/RMSE.  Numpy implementations (small N)."""
+Pearson, Spearman, Kendall, plus MAE/RMSE.  Numpy implementations (small N).
+
+Also home of ``percentile``, the nearest-rank latency-stats helper shared by
+the serve engine and the benchmarks (keeping it here avoids a
+benchmarks→engine import knot)."""
 
 from __future__ import annotations
 
 import numpy as np
+
+
+def percentile(sorted_values, p: float) -> float:
+    """Nearest-rank percentile of an ascending list (0 for empty input)."""
+    if not sorted_values:
+        return 0.0
+    i = min(int(p * (len(sorted_values) - 1)), len(sorted_values) - 1)
+    return sorted_values[i]
 
 
 def pearson(pred, label) -> float:

@@ -1,0 +1,399 @@
+"""Online serving: continuous intake, deadline batching, bucket eviction,
+multi-device routing (ISSUE-3 acceptance).
+
+The in-process tests run on the single default device; the 2-device test
+runs in a subprocess (XLA device count locks at first jax import) and
+asserts per-device dispatch counts, the (bucket, device) compile bound, and
+data-parallel training parity.
+"""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.hetero_mp import HeteroMPConfig
+from repro.graphs.collate import LayoutTable
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
+from repro.serve import CircuitServeEngine
+from repro.sharding.specs import DeviceRing, batch_devices
+
+
+def _graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend="xla_fused")
+    params = init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+    return params, cfg
+
+
+def _serve_on_thread(eng):
+    t = threading.Thread(target=eng.serve_forever)
+    t.start()
+    return t
+
+
+# ------------------------------------------------------- deadline batching
+
+def test_deadline_closes_partial_bucket(model):
+    """A partial bucket flushes after max_wait_ms without further submits,
+    and its predictions equal the graph served alone (i.e. the deadline's
+    filler-padded batch is inert)."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=4, max_wait_ms=40.0)
+    t = _serve_on_thread(eng)
+    try:
+        graphs = [_graph(50, 25, s) for s in range(2)]
+        rids = [eng.submit(g) for g in graphs]
+        # only 2 of 4 slots filled: completion requires the deadline flush
+        for rid, g in zip(rids, graphs):
+            res = eng.result(rid, timeout=120.0)
+            ref = np.asarray(drcircuitgnn_forward(params, g, cfg))
+            np.testing.assert_allclose(res.pred, ref, atol=1e-5, rtol=1e-5)
+    finally:
+        eng.stop()
+        t.join(timeout=120.0)
+    assert not t.is_alive()
+    st = eng.stats()
+    assert st["deadline_flushes"] >= 1, st
+    assert st["batches"] >= 1 and st["requests"] == 2
+
+
+def test_full_batch_needs_no_deadline(model):
+    """max_batch compatible requests dispatch as a full batch — no deadline
+    flush, no filler padding."""
+    params, cfg = model
+    # deadline far beyond the test budget: completion proves the full-batch
+    # path dispatched without it
+    eng = CircuitServeEngine(params, cfg, max_batch=3, max_wait_ms=60_000.0)
+    t = _serve_on_thread(eng)
+    try:
+        rids = [eng.submit(_graph(50, 25, 10 + s)) for s in range(3)]
+        for rid in rids:
+            eng.result(rid, timeout=120.0)
+    finally:
+        eng.stop()
+        t.join(timeout=120.0)
+    st = eng.stats()
+    assert st["deadline_flushes"] == 0, st
+    assert st["batches"] == 1 and st["requests"] == 3
+    # full batch: no filler members, padding ratio is node-grid-only
+    assert st["cell_padding_ratio"] < 3.0
+
+
+def test_deadline_result_matches_drain_mode(model):
+    """The same partial bucket served via deadline flush and via run()'s
+    immediate flush produces identical predictions (both are the same
+    filler-padded batch)."""
+    params, cfg = model
+    graphs = [_graph(60, 30, s) for s in range(2)]
+
+    eng_a = CircuitServeEngine(params, cfg, max_batch=4, max_wait_ms=20.0)
+    t = _serve_on_thread(eng_a)
+    try:
+        rids_a = [eng_a.submit(g) for g in graphs]
+        preds_a = [np.asarray(eng_a.result(r, timeout=120.0).pred)
+                   for r in rids_a]
+    finally:
+        eng_a.stop()
+        t.join(timeout=120.0)
+
+    eng_b = CircuitServeEngine(params, cfg, max_batch=4)
+    rids_b = [eng_b.submit(g) for g in graphs]
+    out_b = eng_b.run()
+    for pa, rb in zip(preds_a, rids_b):
+        np.testing.assert_allclose(pa, np.asarray(out_b[rb].pred),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# --------------------------------------------------- submit-during-run
+
+def test_submit_during_run_ordering(model):
+    """Submits landing while serve_forever is mid-stream are all served,
+    FIFO within a bucket: same-bucket requests finish in submit order."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=2, max_wait_ms=15.0)
+    t = _serve_on_thread(eng)
+    rids, graphs = [], []
+    try:
+        for wave in range(3):          # trickle the stream in
+            for s in range(3):
+                g = _graph(48 + s, 24, 10 * wave + s)
+                graphs.append(g)
+                rids.append(eng.submit(g))
+            time.sleep(0.05)
+        for rid in rids:
+            eng.result(rid, timeout=120.0)
+    finally:
+        eng.stop()
+        t.join(timeout=120.0)
+    out = eng.finished
+    assert set(rids) <= set(out), "requests lost"
+    # parity for every request
+    for rid, g in zip(rids, graphs):
+        ref = np.asarray(drcircuitgnn_forward(params, g, cfg))
+        np.testing.assert_allclose(out[rid].pred, ref, atol=1e-5, rtol=1e-5)
+    # FIFO within each bucket: completion times are monotone in submit order
+    by_bucket = {}
+    for rid, g in zip(rids, graphs):
+        by_bucket.setdefault(eng._group_key(g), []).append(rid)
+    for bucket_rids in by_bucket.values():
+        dones = [out[r].t_done for r in bucket_rids]
+        assert dones == sorted(dones), (bucket_rids, dones)
+
+
+def test_stop_drains_queue(model):
+    """stop() called with requests still queued: serve_forever drains them
+    (flushing partials immediately) before returning."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=4, max_wait_ms=5_000.0)
+    rids = [eng.submit(_graph(52, 26, s)) for s in range(3)]
+    t = _serve_on_thread(eng)
+    eng.stop()                       # long deadline: only the drain flushes
+    t.join(timeout=120.0)
+    assert not t.is_alive()
+    assert set(rids) <= set(eng.finished)
+
+
+# ------------------------------------------------------------- eviction
+
+def test_bucket_eviction_lru(model):
+    """max_live_buckets bounds live layout/compile state: the LRU bucket is
+    evicted, an evicted bucket recompiles at most once on return, and live
+    buckets' layouts (and executables) are untouched."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=2, max_live_buckets=2)
+
+    def serve_pair(n_cell, n_net, seed):
+        rids = [eng.submit(_graph(n_cell, n_net, seed + i)) for i in (0, 1)]
+        out = eng.run()
+        return [np.asarray(out[r].pred) for r in rids]
+
+    serve_pair(40, 20, 0)            # bucket A
+    serve_pair(90, 45, 10)           # bucket B
+    assert eng.live_buckets == 2 and eng.evictions == 0
+    assert eng.compiles == 2
+    serve_pair(160, 80, 20)          # bucket C -> evicts A (LRU)
+    assert eng.live_buckets == 2 and eng.evictions == 1
+    assert eng.compiles == 3
+
+    # B and C layouts untouched: serving them again costs no compile
+    serve_pair(91, 44, 30)
+    serve_pair(158, 81, 40)
+    assert eng.compiles == 3, eng.stats()
+
+    # A returns: exactly ONE recompile (fresh layout re-pins identically),
+    # evicting the new LRU (B)
+    serve_pair(40, 20, 50)
+    assert eng.compiles == 4 and eng.evictions == 2
+    serve_pair(41, 19, 60)           # A again: compiled state is back
+    assert eng.compiles == 4, eng.stats()
+    assert eng.live_buckets == 2
+    # the honest-counter cross-check still holds per live bucket
+    st = eng.stats()
+    if "jit_cache_size" in st:
+        assert st["jit_cache_size"] == st["live_compiles"]
+
+
+def test_eviction_under_one_off_tail(model):
+    """A long tail of one-off shapes cannot grow live state past the bound
+    (the ISSUE-3 memory-stability property)."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=1, max_live_buckets=3)
+    sizes = [(40, 20), (70, 35), (120, 60), (200, 100), (300, 150)]
+    for i, (c, n) in enumerate(sizes):
+        eng.submit(_graph(c, n, i))
+        eng.run()
+    assert eng.live_buckets <= 3
+    assert len(eng._buckets) <= 3            # jit/lock/sig state bounded too
+    assert eng.evictions == len(sizes) - 3       # 5 buckets, cap 3 -> 2
+    st = eng.stats()
+    assert st["requests"] == len(sizes)
+
+
+def test_layout_table_lru_order():
+    """LayoutTable unit semantics: touch refreshes, eviction fires the hook
+    with the evicted key, never the touched one."""
+    evicted = []
+    tab = LayoutTable(max_live=2, on_evict=lambda k, v: evicted.append(k))
+    la = tab.get(("a",))
+    tab.get(("b",))
+    tab.get(("a",))                  # refresh a: LRU is now b
+    tab.get(("c",))                  # evicts b
+    assert evicted == [("b",)]
+    assert ("a",) in tab and ("c",) in tab and ("b",) not in tab
+    assert tab.get(("a",)) is la     # surviving layout object is stable
+    assert len(tab) == 2 and tab.evictions == 1
+
+
+def test_batch_failure_is_contained(model):
+    """A malformed request fails its own batch (result() re-raises) but the
+    loop keeps serving the rest of the stream."""
+    import dataclasses as dc
+    import jax.numpy as jnp
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=2, max_wait_ms=15.0)
+    t = _serve_on_thread(eng)
+    try:
+        good1 = _graph(40, 20, 0)
+        bad = _graph(90, 45, 1)          # its own bucket: poisons only itself
+        bad = dc.replace(bad, y_cell=jnp.zeros(bad.n_cell + 7))  # collate breaks
+        good2 = _graph(41, 20, 2)
+        r1, rb = eng.submit(good1), eng.submit(bad)
+        with pytest.raises(RuntimeError):
+            eng.result(rb, timeout=120.0)
+        r2 = eng.submit(good2)           # engine still alive after the failure
+        for rid, g in [(r1, good1), (r2, good2)]:
+            res = eng.result(rid, timeout=120.0)
+            ref = np.asarray(drcircuitgnn_forward(params, g, cfg))
+            np.testing.assert_allclose(res.pred, ref, atol=1e-5, rtol=1e-5)
+    finally:
+        eng.stop()
+        t.join(timeout=120.0)
+    assert not t.is_alive()
+    st = eng.stats()
+    assert st["failures"] == 1 and st["requests"] == 2
+
+
+def test_max_finished_bounds_retained_results(model):
+    """max_finished trims oldest retained results; result(pop=True)
+    releases them eagerly; latency stats survive the trimming."""
+    params, cfg = model
+    eng = CircuitServeEngine(params, cfg, max_batch=1, max_finished=2)
+    rids = [eng.submit(_graph(40, 20, s)) for s in range(4)]
+    eng.run()
+    assert len(eng.finished) == 2            # only the 2 newest retained
+    assert rids[-1] in eng.finished and rids[0] not in eng.finished
+    st = eng.stats()
+    assert st["requests"] == 4 and st["p50_ms"] > 0   # stats see all 4
+    assert eng.result(rids[-1], pop=True).pred is not None
+    assert rids[-1] not in eng.finished
+
+
+# ------------------------------------------------- device routing helpers
+
+def test_device_ring_round_robin():
+    ring = DeviceRing()
+    assert len(ring) >= 1
+    idx = [ring.next_index() for _ in range(2 * len(ring))]
+    assert idx == [i % len(ring) for i in range(2 * len(ring))]
+    x = ring.put(np.ones(3, np.float32), 0)
+    assert np.asarray(x).sum() == 3.0
+
+
+def test_batch_devices_no_mesh():
+    assert batch_devices() == tuple(jax.local_devices())
+
+
+# ------------------------------------------------------- percentile move
+
+def test_percentile_moved_and_reexported():
+    from repro.train.metrics import percentile as p_metrics
+    from repro.serve.circuit_engine import percentile as p_engine
+    assert p_metrics is p_engine
+    assert p_metrics([], 0.5) == 0.0
+    assert p_metrics([1.0, 2.0, 3.0, 4.0], 0.5) == 2.0
+
+
+# ----------------------------------------------------- 2-device routing
+
+MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import threading
+import jax, numpy as np
+from repro.core.hetero_mp import HeteroMPConfig
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
+from repro.serve import CircuitServeEngine
+from repro.train.circuit_trainer import CircuitTrainConfig, CircuitTrainer
+
+assert jax.device_count() == 2
+
+def graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend="xla_fused")
+params = init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+
+# online serving over both devices, submit-during-run
+eng = CircuitServeEngine(params, cfg, max_batch=2, max_wait_ms=20.0)
+assert len(eng.ring) == 2
+t = threading.Thread(target=eng.serve_forever)
+t.start()
+stream = [graph(50 + (s % 3), 25, s) for s in range(12)]
+rids = [eng.submit(g) for g in stream]
+for rid in rids:
+    eng.result(rid, timeout=600.0)
+eng.stop(); t.join()
+st = eng.stats()
+counts = st["dispatches_per_device"]
+assert sum(counts) == st["batches"], (counts, st)
+assert all(c > 0 for c in counts), counts          # both devices served
+# one bucket, two devices: at most one compile per (bucket, device)
+assert eng.compiles <= 2, st
+for rid, g in zip(rids, stream):
+    ref = np.asarray(drcircuitgnn_forward(params, g, cfg))
+    np.testing.assert_allclose(eng.finished[rid].pred, ref,
+                               atol=1e-5, rtol=1e-5)
+print("SERVE_2DEV_OK", counts)
+
+# data-parallel training: 2-device epoch matches single-device batched loss
+graphs = [graph(48 + s, 24, 100 + s) for s in range(4)]
+f_cell, f_net = graphs[0].x_cell.shape[1], graphs[0].x_net.shape[1]
+tcfg = CircuitTrainConfig(hidden=32, seed=3)
+a = CircuitTrainer(tcfg, f_cell, f_net)
+b = CircuitTrainer(tcfg, f_cell, f_net)
+la = a.train_epoch(graphs, batch_size=4)                      # 1 device
+lb = b.train_epoch(graphs, batch_size=4, devices=True)        # 2 devices
+assert abs(la - lb) < 1e-5, (la, lb)
+pd = max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+         for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params)))
+assert pd < 1e-5, pd
+print("TRAIN_DP_OK", la, lb, pd)
+"""
+
+
+@pytest.mark.slow
+def test_two_device_serve_and_train_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=1200)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SERVE_2DEV_OK" in r.stdout
+    assert "TRAIN_DP_OK" in r.stdout
+
+
+# ------------------------------------------- single-device data parallel
+
+def test_train_epoch_devices_single_matches_batched():
+    """The data-parallel step path with a 1-device ring reproduces the
+    plain batched step (same grads, same update)."""
+    from repro.train.circuit_trainer import CircuitTrainConfig, CircuitTrainer
+    graphs = [_graph(40 + s, 20, 200 + s) for s in range(4)]
+    f_cell, f_net = graphs[0].x_cell.shape[1], graphs[0].x_net.shape[1]
+    tcfg = CircuitTrainConfig(hidden=32, seed=9)
+    a = CircuitTrainer(tcfg, f_cell, f_net)
+    b = CircuitTrainer(tcfg, f_cell, f_net)
+    la = a.train_epoch(graphs, batch_size=4)
+    lb = b.train_epoch(graphs, batch_size=4,
+                       devices=jax.local_devices()[:1])
+    assert abs(la - lb) < 1e-5, (la, lb)
+    pd = max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+             for x, y in zip(jax.tree.leaves(a.params),
+                             jax.tree.leaves(b.params)))
+    assert pd < 1e-5, pd

@@ -1,0 +1,76 @@
+#!/usr/bin/env python
+"""Check that intra-repo markdown links resolve (the CI docs leg).
+
+Scans the given markdown files (default: every ``*.md`` at the repo root)
+for inline links ``[text](target)``:
+
+* ``http(s)://`` / ``mailto:`` targets are skipped (no network in CI);
+* relative targets must exist on disk (resolved against the linking file);
+* pure-anchor targets (``#section``) must match a heading slug in the same
+  file, using GitHub slugification (lowercase, punctuation stripped,
+  spaces to dashes).
+
+Exit code 0 when every link resolves; 1 with one line per broken link.
+
+    python tools/check_docs.py [FILE.md ...]
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.S)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip punctuation, spaces→dashes."""
+    h = re.sub(r"[`*_]", "", heading.strip()).lower()
+    h = re.sub(r"[^\w\- §]", "", h, flags=re.UNICODE)
+    h = h.replace("§", "")          # github drops non-alnum like § too
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def check_file(path: Path, repo_root: Path) -> list:
+    text = path.read_text(encoding="utf-8")
+    prose = CODE_FENCE_RE.sub("", text)     # links inside fences aren't links
+    slugs = {github_slug(h) for h in HEADING_RE.findall(prose)}
+    errors = []
+    for m in LINK_RE.finditer(prose):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        if target.startswith("#"):
+            if target[1:] not in slugs:
+                errors.append(f"{path}: broken anchor '{target}'")
+            continue
+        rel, _, anchor = target.partition("#")
+        dest = (path.parent / rel).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link '{target}' "
+                          f"(no such file: {dest.relative_to(repo_root) if dest.is_relative_to(repo_root) else dest})")
+    return errors
+
+
+def main(argv) -> int:
+    repo_root = Path(__file__).resolve().parent.parent
+    files = [Path(a) for a in argv] if argv else \
+        sorted(repo_root.glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file not found")
+            continue
+        errors.extend(check_file(f.resolve(), repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"[check_docs] {len(files)} files, "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
