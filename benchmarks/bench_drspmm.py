@@ -152,10 +152,91 @@ def bench_fused(scale=0.08, size="medium", dim=64, k=16,
     return entries
 
 
+def bench_learnable(scale=0.08, size="medium", dim=64, k=16,
+                    out_json="BENCH_drspmm.json", iters=10):
+    """Fused learnable-edge path vs the per-bucket slab loop, fwd + bwd.
+
+    ``drspmm_learnable`` (differentiable per-edge weights) over each
+    edge-type direction: the per-bucket reference gathers the canonical
+    weight vector into one eid slab per degree bucket and loops
+    (backend="xla"); the fused path gathers straight into the single
+    arena (backend="xla_fused").  Timing follows the repo convention
+    (xla-family wall-clock on CPU; Pallas interpret-mode anti-correlates
+    with TPU, see ``bench()``); the pallas-family dispatch counts record
+    the single-dispatch property.  The backward leg times BOTH gradients
+    (dw + dx) — the sampled-dot dw reduction rides the same arena.
+    """
+    from repro.graphs.ell import ell_to_coo, pack_eid_slabs
+
+    rng = np.random.default_rng(0)
+    g = generate_design(1, size, scale=scale)[0]
+    entries = []
+    tot = {"xla": 0.0, "xla_fused": 0.0}
+    for etype in ("near", "pin", "pinned"):
+        es = g.edges[etype]
+        dst, src, _w = ell_to_coo(es.adj)
+        order = np.argsort(dst, kind="stable")
+        fwd, bwd, _o, nnz = pack_eid_slabs(dst[order], src[order],
+                                           es.adj.n_dst, es.adj.n_src)
+        n_src = es.adj.n_src
+        x = jnp.asarray(rng.normal(size=(n_src, dim)).astype(np.float32))
+        c = cbsr_from_dense(drelu(x, k), k)
+        w = jnp.asarray(rng.normal(size=nnz).astype(np.float32))
+
+        def fwd_call(wv, be):
+            return ops.drspmm_learnable(fwd, bwd, nnz, wv, c.values, c.idx,
+                                        dim, backend=be)
+
+        def bwd_call(wv, be):
+            return jax.grad(
+                lambda q, v: jnp.sum(ops.drspmm_learnable(
+                    fwd, bwd, nnz, q, v, c.idx, dim, backend=be) ** 2),
+                argnums=(0, 1))(wv, c.values)
+
+        disp = {be: dispatch_count(lambda v: fwd_call(v, be), w)
+                for be in ("pallas", "pallas_fused")}
+        stats = {}
+        for be in ("xla", "xla_fused"):
+            stats[be] = dict(
+                fwd_us=time_jit(lambda v: fwd_call(v, be), w, iters=iters),
+                bwd_us=time_jit(lambda v: bwd_call(v, be), w, iters=iters),
+            )
+            tot[be] += stats[be]["fwd_us"] + stats[be]["bwd_us"]
+        n_buckets = len(fwd.buckets)
+        sp_f = stats["xla"]["fwd_us"] / stats["xla_fused"]["fwd_us"]
+        sp_b = stats["xla"]["bwd_us"] / stats["xla_fused"]["bwd_us"]
+        emit(f"learnable_fwd/{size}/{etype}/d{dim}/k{k}",
+             stats["xla_fused"]["fwd_us"],
+             f"speedup_vs_bucketed={sp_f:.2f}x;"
+             f"dispatches={disp['pallas_fused']}"
+             f"(bucketed={disp['pallas']},buckets={n_buckets})")
+        emit(f"learnable_bwd/{size}/{etype}/d{dim}/k{k}",
+             stats["xla_fused"]["bwd_us"],
+             f"speedup_vs_bucketed={sp_b:.2f}x")
+        entries.append(dict(etype=etype, size=size, dim=dim, k=k, nnz=nnz,
+                            n_buckets=n_buckets,
+                            dispatches_fused=disp["pallas_fused"],
+                            dispatches_bucketed=disp["pallas"],
+                            **{f"{be}_{m}": v for be, s in stats.items()
+                               for m, v in s.items()},
+                            fwd_speedup=sp_f, bwd_speedup=sp_b))
+    agg = tot["xla"] / max(tot["xla_fused"], 1e-9)
+    emit(f"learnable_aggregate/{size}", tot["xla_fused"],
+         f"aggregate_speedup_vs_bucketed={agg:.2f}x")
+    append_json(out_json, dict(
+        ts=time.time(), kind="learnable_fused_vs_bucketed", size=size,
+        scale=scale, backend=jax.default_backend(), aggregate_speedup=agg,
+        entries=entries))
+    return entries
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
-        # CI-sized run: tiny graph, fused-vs-bucketed comparison only.
+        # CI-sized run: tiny graph, fused-vs-bucketed comparisons only
+        # (fixed-weight + learnable legs).
         bench_fused(scale=0.02, size="small", iters=3)
+        bench_learnable(scale=0.02, size="small", iters=3)
     else:
         bench_fused()
+        bench_learnable()
         bench()

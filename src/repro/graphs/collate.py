@@ -41,7 +41,8 @@ import jax.numpy as jnp
 from repro.graphs.circuit import (CircuitGraph, EDGE_SCHEMA, EDGE_TYPES,
                                   EdgeSet)
 from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, ell_to_coo,
-                              pack_ell_pair, pack_fused, _round_up)
+                              pack_ell_pair, pack_fused, pack_fused_eid_pair,
+                              _round_up)
 
 # Default bucket-grid resolutions (mantissa bits of the geometric grid):
 # node slabs pay padding linearly (features, gather), so they get a finer
@@ -176,6 +177,27 @@ class CollatedBatch:
     members: Tuple[MemberSlice, ...]
     cell_weight: jax.Array          # (n_cell_pad,)
     n_real: int                     # members that carry real requests
+    # with_eids collation: per-edge-type total edge count and per-member
+    # offsets into the batch-canonical edge order (learnable weights).
+    edge_nnz: Dict[str, int] = dataclasses.field(default_factory=dict)
+    edge_eid_offsets: Dict[str, Tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
+
+    def concat_edge_weights(self, etype: str, member_ws) -> jax.Array:
+        """Member canonical weight vectors → the batch canonical vector.
+
+        Member i's edges occupy ``[edge_eid_offsets[etype][i], +nnz_i)`` of
+        the batch order (member node-id blocks are disjoint and increasing,
+        so the batch dst-stable sort concatenates the members' canonical
+        orders).  Provide one (nnz_i,) vector per member — fillers included,
+        typically a reuse of the replicated member's vector.
+        """
+        assert len(member_ws) == len(self.members), \
+            (len(member_ws), len(self.members))
+        w = jnp.concatenate([jnp.asarray(wi) for wi in member_ws])
+        assert w.shape[0] == self.edge_nnz[etype], \
+            (w.shape[0], self.edge_nnz[etype])
+        return w
 
     def split_cell(self, y_cell) -> List[jax.Array]:
         """Per-real-member views of a per-cell output of the batched model."""
@@ -220,6 +242,11 @@ def _pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
     sentinel = r // br - 1
     zpad = lambda a, n, dt: np.concatenate(
         [np.asarray(a), np.zeros((n,) + np.asarray(a).shape[1:], dt)])
+    eid = None
+    if f.eid is not None:        # learnable-edge arena: padding slots → −1
+        eid = np.concatenate(
+            [np.asarray(f.eid),
+             np.full((pad_chunks, br, ec), -1, np.int32)])
     return FusedELL(
         nbr=zpad(f.nbr, pad_chunks, np.int32),
         w=zpad(f.w, pad_chunks, np.float32),
@@ -230,7 +257,7 @@ def _pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
         rows=zpad(f.rows, n_rows - r, np.int32),
         gather=np.asarray(f.gather),
         n_dst=f.n_dst, n_src=f.n_src, nnz=-1,
-        row_block=f.row_block, chunk=f.chunk)
+        row_block=f.row_block, chunk=f.chunk, eid=eid)
 
 
 def _chunk_for(chunk, etype: str) -> Optional[int]:
@@ -247,6 +274,7 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                    chunk: Union[None, int, Dict[str, int]] = None,
                    layout: Optional[BucketLayout] = None,
                    n_real: Optional[int] = None,
+                   with_eids: bool = False,
                    bounds: Sequence[int] = DEFAULT_BOUNDS) -> CollatedBatch:
     """Merge member graphs into one block-diagonal :class:`CircuitGraph`.
 
@@ -267,6 +295,12 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
         the bucket's running max, so same-bucket batches share a signature.
     n_real : members that carry real requests; trailing members are filler
         (their outputs are dropped and their loss weight is zero).
+    with_eids : additionally attach a batch-canonical edge-id arena to every
+        fused edge direction (member eids offset by the preceding members'
+        edge counts), so the collated batch can carry learnable per-edge
+        weights through ``ops.drspmm_learnable`` — the batch weight vector
+        is the concatenation of the members' canonical vectors
+        (:meth:`CollatedBatch.concat_edge_weights`).  Requires ``fused``.
     """
     assert graphs, "collate_graphs needs at least one member"
     n_real = len(graphs) if n_real is None else n_real
@@ -301,17 +335,21 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                 1.0 / (n_real * m.n_cell)
 
     # --- merged COO per edge type, member weights carried through ---
+    assert not (with_eids and not fused), "with_eids requires fused collation"
     off_of = {"cell": [m.cell_off for m in members],
               "net": [m.net_off for m in members]}
     edges = {}
+    edge_nnz: Dict[str, int] = {}
+    edge_eid_offsets: Dict[str, Tuple[int, ...]] = {}
     for et in EDGE_TYPES:
         s_t, d_t = EDGE_SCHEMA[et]
-        ds, ss, ws = [], [], []
+        ds, ss, ws, m_nnz = [], [], [], []
         for i, g in enumerate(graphs):
             dst, src, w = ell_to_coo(g.edges[et].adj)
             ds.append(dst + off_of[d_t][i])
             ss.append(src + off_of[s_t][i])
             ws.append(w)
+            m_nnz.append(int(dst.shape[0]))
         dst = np.concatenate(ds)
         src = np.concatenate(ss)
         w = np.concatenate(ws)
@@ -331,6 +369,28 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                     a = _quantize_arena(a, arena_bits, bounds, layout,
                                         (et, dname))
                 packed[dname] = a
+            if with_eids:
+                # Batch-canonical edge ids: member node-id blocks are
+                # disjoint and increasing, so the batch dst-stable sort is
+                # the concatenation of the members' canonical orders —
+                # member i's ids are its own canonical ids + Σ_{j<i} nnz_j.
+                # Member weights are all non-zero (ell_to_coo masks), so the
+                # eid packing sorts/chunks identically to the weight packing
+                # and the eid table drops straight onto the weight arena.
+                efwd, ebwd, _order, et_nnz = pack_fused_eid_pair(
+                    dst, src, n_dst, n_src, bounds,
+                    chunk=(packed["fwd"].chunk, packed["bwd"].chunk))
+                for dname, ea in (("fwd", efwd), ("bwd", ebwd)):
+                    a = packed[dname]
+                    if quantize:
+                        ea = _pad_fused_arena(ea, a.n_chunks,
+                                              a.n_arena_rows)
+                    assert ea.nbr.shape == a.nbr.shape, (et, dname)
+                    packed[dname] = dataclasses.replace(
+                        a, eid=np.asarray(ea.eid))
+                edge_nnz[et] = et_nnz
+                edge_eid_offsets[et] = tuple(
+                    int(o) for o in np.cumsum([0] + m_nnz[:-1]))
             adj, adj_t = packed["fwd"], packed["bwd"]
         else:
             adj, adj_t = pack_ell_pair(dst, src, w, n_dst, n_src, bounds)
@@ -340,7 +400,9 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                          x_cell=jnp.asarray(x_cell), x_net=jnp.asarray(x_net),
                          y_cell=jnp.asarray(y_cell))
     return CollatedBatch(graph=graph, members=tuple(members),
-                         cell_weight=jnp.asarray(w_cell), n_real=n_real)
+                         cell_weight=jnp.asarray(w_cell), n_real=n_real,
+                         edge_nnz=edge_nnz,
+                         edge_eid_offsets=edge_eid_offsets)
 
 
 def _quantize_arena(f: FusedELL, arena_bits: int, bounds: Sequence[int],

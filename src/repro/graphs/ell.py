@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence, Tuple, Union
 
 import numpy as np
 import jax
@@ -273,6 +273,12 @@ class FusedELL:
     nnz: int = dataclasses.field(metadata=dict(static=True))
     row_block: int = dataclasses.field(metadata=dict(static=True))
     chunk: int = dataclasses.field(metadata=dict(static=True))
+    # Edge-id arena for learnable per-edge weights (kernels/ops.py::
+    # drspmm_learnable): (C, BR, Ec) int32 canonical edge ids, padding
+    # slots -> −1.  Chunked exactly like ``w``, so a canonical weight
+    # vector (nnz,) gathers straight into arena layout.  ``None`` for
+    # fixed-weight packings.
+    eid: jax.Array | None = None
 
     @property
     def n_chunks(self) -> int:
@@ -347,12 +353,19 @@ def pick_chunk(adj: BucketedELL, row_block: int = None,
 
 
 def fuse_bucketed(adj: BucketedELL, row_block: int = None,
-                  chunk: int = None) -> FusedELL:
+                  chunk: int = None, *, eids: bool = False) -> FusedELL:
     """Re-pack a :class:`BucketedELL` into the single-dispatch fused arena.
 
     ``chunk=None`` picks the slot-minimizing width from the packing's degree
     histogram (:func:`pick_chunk`); pass an int to pin the layout (the
     collator does, so batches of the same shape bucket share a signature).
+
+    ``eids=True`` treats ``adj`` as an edge-id slab packing
+    (:func:`pack_eid_slabs` layout: ``w`` holds f32-encoded ``id+1``,
+    0 = padding).  The arena then carries a decoded int32 ``eid`` table
+    (padding slots → −1) chunked exactly like the weight arena, and ``w``
+    becomes the 0/1 real-slot mask — the layout the fused learnable
+    executors (kernels/drspmm.py) gather a canonical weight vector into.
 
     Pure host-side preprocessing; results are memoized per (packing, layout)
     so jit re-traces and repeated layer calls never re-pack.
@@ -361,7 +374,7 @@ def fuse_bucketed(adj: BucketedELL, row_block: int = None,
         row_block = FUSED_ROW_BLOCK
     # chunk=None is memoized under the None key, so a cache hit skips even
     # the pick_chunk histogram scan.
-    key = (id(adj), row_block, chunk)
+    key = (id(adj), row_block, chunk, eids)
     hit = _FUSE_CACHE.get(key)
     if hit is not None and hit[0]() is adj:
         return hit[1]
@@ -429,19 +442,27 @@ def fuse_bucketed(adj: BucketedELL, row_block: int = None,
 
     nnz = adj.nnz if adj.nnz >= 0 else int(
         sum(int((np.asarray(b.w) != 0).sum()) for b in adj.buckets))
+    w_arena = np.stack(w_chunks)
+    eid_arena = None
+    if eids:
+        # w slots hold f32(id+1) with 0 padding (exact up to 2^24 edges,
+        # asserted at pack time): decode to −1-padded int32 ids and leave
+        # the 0/1 real-slot mask as the arena weight.
+        eid_arena = w_arena.astype(np.int32) - 1
+        w_arena = (w_arena != 0).astype(np.float32)
     # NB: leaves stay host numpy — fusing may run lazily inside a jit trace
     # (first call of a jitted layer), where jnp.asarray would capture
     # tracers into the memo and leak them out of the trace.  numpy leaves
     # are trace-safe constants.
     fused = FusedELL(
         nbr=np.stack(nbr_chunks),
-        w=np.stack(w_chunks),
+        w=w_arena,
         block_of=np.asarray(block_of, np.int32),
         start=np.asarray(start, np.int32),
         rows=np.concatenate(rows_parts).astype(np.int32),
         gather=gather.astype(np.int32),
         n_dst=adj.n_dst, n_src=adj.n_src, nnz=nnz,
-        row_block=row_block, chunk=chunk)
+        row_block=row_block, chunk=chunk, eid=eid_arena)
     # Evict promptly when the packing dies — a dead entry would otherwise
     # pin its whole fused arena (id reuse is also why the hit path
     # re-checks `ref() is adj`).
@@ -467,3 +488,29 @@ def pack_fused_pair(dst: np.ndarray, src: np.ndarray, w: np.ndarray | None,
     """Fused forward/transposed pair (the CSR/CSC analogue of Alg. 1/2)."""
     return (pack_fused(dst, src, w, n_dst, n_src, bounds),
             pack_fused(src, dst, w, n_src, n_dst, bounds))
+
+
+def pack_fused_eid_pair(dst: np.ndarray, src: np.ndarray,
+                        n_dst: int, n_src: int,
+                        bounds: Sequence[int] = DEFAULT_BOUNDS,
+                        row_block: int = None,
+                        chunk: Union[int, None, Tuple] = None
+                        ) -> Tuple[FusedELL, FusedELL, np.ndarray, int]:
+    """Fused edge-id arena pair for learnable per-edge weights.
+
+    The eid analogue of :func:`pack_fused_pair`: packs edge *indices* (into
+    the canonical dst-stable-sorted order, :func:`pack_eid_slabs`) and fuses
+    both directions into arenas carrying ``eid`` tables (−1 padding), so a
+    learnable weight vector w (nnz,) gathers straight into arena layout on
+    the single-dispatch path (kernels/ops.py::drspmm_learnable).
+
+    ``chunk`` pins the arena chunk width: an int for both directions, or a
+    ``(fwd, bwd)`` tuple (the collator pins per direction).  Returns
+    ``(fwd_arena, bwd_arena, order, nnz)`` with ``order`` mapping the
+    canonical order back to the caller's COO order.
+    """
+    fwd, bwd, order, nnz = pack_eid_slabs(dst, src, n_dst, n_src, bounds)
+    ck_f, ck_b = chunk if isinstance(chunk, tuple) else (chunk, chunk)
+    return (fuse_bucketed(fwd, row_block, ck_f, eids=True),
+            fuse_bucketed(bwd, row_block, ck_b, eids=True),
+            order, nnz)

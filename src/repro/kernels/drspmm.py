@@ -46,7 +46,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.graphs.ell import ELLBucket, FusedELL, ROW_BLOCK, EDGE_CHUNK
+from repro.graphs.ell import (ELLBucket, FusedELL, ROW_BLOCK, EDGE_CHUNK,
+                              _round_up)
 
 # CPU has no Mosaic backend: interpret the kernel bodies.  On TPU this flips
 # to False automatically and the kernels compile natively.
@@ -413,3 +414,211 @@ def spmm_dense_fused(fused: FusedELL, x: jax.Array,
         out_shape=jax.ShapeDtypeStruct((fused.n_arena_rows, d), jnp.float32),
         interpret=interpret,
     )(fused.block_of, fused.start, fused.nbr, fused.w, x)
+
+
+# ---------------------------------------------------------------------------
+# fused learnable-edge executors — Y = A(w)·dense(CBSR(x)) with the weight
+# vector w (nnz,) gathered IN-KERNEL from the arena's eid table, so the
+# differentiable-edge path (kernels/ops.py::drspmm_learnable) is the same
+# single dispatch per direction as the fixed-weight path.  DESIGN.md §8.
+# ---------------------------------------------------------------------------
+
+def _pad_w_canon(w_canon: jax.Array, nnz: int) -> jax.Array:
+    """(nnz,) → (W, 1) with W = nnz+1 rounded up to the row block: slot
+    ``nnz`` (and everything after) is guaranteed zero, so −1-padded eids
+    remapped to ``nnz`` gather an inert weight.  2-D so the in-kernel gather
+    is the same row-take the CBSR operands use."""
+    wpad = _round_up(nnz + 1, ROW_BLOCK)
+    wp = jnp.zeros((wpad, 1), jnp.float32)
+    return wp.at[:nnz, 0].set(w_canon.astype(jnp.float32))
+
+
+def _gather_chunk_w(wp, eid, nnz: int):
+    """(BR, Ec) weight chunk from the padded canonical vector; −1 → 0."""
+    safe = jnp.where(eid < 0, nnz, eid)
+    br, ec = eid.shape
+    return jnp.take(wp, safe.reshape(-1), axis=0).reshape(br, ec)
+
+
+def _fused_fwd_learnable_kernel(blk_ref, st_ref, nbr_ref, eid_ref, wp_ref,
+                                xv_ref, xi_ref, out_ref, *, d_tile: int,
+                                nnz: int):
+    c = pl.program_id(1)
+
+    @pl.when(st_ref[c] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    nbr = nbr_ref[0]              # (BR, Ec)
+    eid = eid_ref[0]              # (BR, Ec) int32, −1 padding
+    wp = wp_ref[...]              # (W, 1) padded canonical weights
+    xv = xv_ref[...]              # (N, k)
+    xi = xi_ref[...]
+    br, ec = nbr.shape
+    k = xv.shape[1]
+    w = _gather_chunk_w(wp, eid, nnz)                 # in-kernel weight gather
+
+    d_base = pl.program_id(0) * d_tile
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, d_tile), 2) + d_base
+
+    flat = nbr.reshape(-1)
+    v = jnp.take(xv, flat, axis=0).reshape(br, ec, k)
+    col = jnp.take(xi, flat, axis=0).reshape(br, ec * k)
+    vw = (v.astype(jnp.float32) * w[..., None]).reshape(br, ec * k)
+    onehot = (col[:, :, None] == iota_d).astype(jnp.float32)
+    out_ref[...] += jnp.einsum("bm,bmd->bd", vw, onehot).astype(out_ref.dtype)
+
+
+def drspmm_fwd_learnable_fused(fused: FusedELL, nnz: int,
+                               w_canon: jax.Array, x_vals: jax.Array,
+                               x_idx: jax.Array, dim: int,
+                               *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered Y = A(w)·dense(CBSR(x)) in ONE kernel launch.
+
+    ``fused`` must carry an eid arena (``fuse_bucketed(..., eids=True)``).
+    Read the caller-ordered output with ``jnp.take(y, fused.gather, 0)``.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    assert fused.eid is not None, "learnable executor needs an eid arena"
+    c, br, ec = fused.nbr.shape
+    n, k = x_vals.shape
+    wp = _pad_w_canon(w_canon, nnz)
+    wlen = wp.shape[0]
+    dt, ndt = _d_tiling(dim)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(ndt, c),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda d, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((1, br, ec), lambda d, i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((wlen, 1), lambda d, i, blk, st: (0, 0)),
+            pl.BlockSpec((n, k), lambda d, i, blk, st: (0, 0)),
+            pl.BlockSpec((n, k), lambda d, i, blk, st: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, dt), lambda d, i, blk, st: (blk[i], d)),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_fwd_learnable_kernel, d_tile=dt, nnz=nnz),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((fused.n_arena_rows, dim),
+                                       jnp.float32),
+        interpret=interpret,
+    )(fused.block_of, fused.start, fused.nbr, fused.eid, wp, x_vals, x_idx)
+
+
+def _fused_bwd_learnable_kernel(blk_ref, st_ref, tnbr_ref, teid_ref, wp_ref,
+                                gy_ref, xi_ref, out_ref, *, nnz: int):
+    c = pl.program_id(0)
+
+    @pl.when(st_ref[c] == 1)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tnbr = tnbr_ref[0]            # (BR, Ec) target ids i ∈ N(j)
+    teid = teid_ref[0]            # (BR, Ec) canonical edge ids
+    wp = wp_ref[...]              # (W, 1)
+    gy = gy_ref[...]              # (M, D)
+    xi = xi_ref[...]              # (BR, k) — this arena block's CBSR indices
+    br, ec = tnbr.shape
+    k = xi.shape[1]
+    tw = _gather_chunk_w(wp, teid, nnz)
+
+    g = jnp.take(gy, tnbr.reshape(-1), axis=0).reshape(br, ec, -1)
+    idx = jnp.broadcast_to(xi[:, None, :], (br, ec, k))
+    sampled = jnp.take_along_axis(g, idx, axis=2)      # (BR, Ec, k) — SSpMM
+    out_ref[...] += jnp.einsum("be,bek->bk", tw,
+                               sampled.astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def drspmm_bwd_learnable_fused(fused_t: FusedELL, nnz: int,
+                               w_canon: jax.Array, gy: jax.Array,
+                               xi_arena: jax.Array,
+                               *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered dL/dx_vals (R_arena, k) in ONE kernel launch — the
+    transposed sampled backward with the same in-kernel weight gather."""
+    if interpret is None:
+        interpret = INTERPRET
+    assert fused_t.eid is not None, "learnable executor needs an eid arena"
+    c, br, ec = fused_t.nbr.shape
+    m, d = gy.shape
+    k = xi_arena.shape[1]
+    wp = _pad_w_canon(w_canon, nnz)
+    wlen = wp.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((1, br, ec), lambda i, blk, st: (i, 0, 0)),
+            pl.BlockSpec((wlen, 1), lambda i, blk, st: (0, 0)),
+            pl.BlockSpec((m, d), lambda i, blk, st: (0, 0)),
+            pl.BlockSpec((br, k), lambda i, blk, st: (blk[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i, blk, st: (blk[i], 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_fused_bwd_learnable_kernel, nnz=nnz),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((fused_t.n_arena_rows, k),
+                                       jnp.float32),
+        interpret=interpret,
+    )(fused_t.block_of, fused_t.start, fused_t.nbr, fused_t.eid, wp, gy,
+      xi_arena)
+
+
+def _fused_dw_learnable_kernel(blk_ref, nbr_ref, gy_ref, xv_ref, xi_ref,
+                               out_ref):
+    """Per-slot sampled dot: out[0, r, e] = Σ_t dY[row_r, idx[nbr_re, t]] ·
+    vals[nbr_re, t].  Same memory-access pattern as the dx gather with the
+    roles of weight and value swapped (kernels/learnable.py); the scatter of
+    slot contributions into canonical w order happens OUTSIDE the kernel
+    (one XLA scatter — TPUs have no fast in-kernel scatter)."""
+    nbr = nbr_ref[0]              # (BR, Ec)
+    gy = gy_ref[...]              # (BR, D) — this chunk's dY rows
+    xv = xv_ref[...]              # (N, k)
+    xi = xi_ref[...]
+    br, ec = nbr.shape
+    k = xv.shape[1]
+    d = gy.shape[1]
+
+    flat = nbr.reshape(-1)
+    v = jnp.take(xv, flat, axis=0).reshape(br, ec, k)
+    col = jnp.take(xi, flat, axis=0).reshape(br, ec, k)
+    g = jnp.broadcast_to(gy.astype(jnp.float32)[:, None, :], (br, ec, d))
+    sampled = jnp.take_along_axis(g, col, axis=2)      # (BR, Ec, k)
+    out_ref[0] = jnp.sum(sampled * v.astype(jnp.float32), axis=-1)
+
+
+def drspmm_dw_learnable_fused(fused: FusedELL, gy_arena: jax.Array,
+                              x_vals: jax.Array, x_idx: jax.Array,
+                              *, interpret: bool | None = None) -> jax.Array:
+    """Per-arena-slot dL/dw contributions (C, BR, Ec) in ONE kernel launch.
+
+    ``gy_arena`` is dY gathered at ``fused.rows`` (arena destination order).
+    The caller reduces to canonical order with one scatter-add over the eid
+    table: ``zeros(nnz+1).at[where(eid<0, nnz, eid)].add(contrib)[:nnz]``.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    assert fused.eid is not None, "learnable executor needs an eid arena"
+    c, br, ec = fused.nbr.shape
+    n, k = x_vals.shape
+    d = gy_arena.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1, br, ec), lambda i, blk: (i, 0, 0)),
+            pl.BlockSpec((br, d), lambda i, blk: (blk[i], 0)),
+            pl.BlockSpec((n, k), lambda i, blk: (0, 0)),
+            pl.BlockSpec((n, k), lambda i, blk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br, ec), lambda i, blk: (i, 0, 0)),
+    )
+    return pl.pallas_call(
+        _fused_dw_learnable_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((c, br, ec), jnp.float32),
+        interpret=interpret,
+    )(fused.block_of, fused.nbr, gy_arena, x_vals, x_idx)

@@ -18,6 +18,13 @@ no new memory-access pattern is introduced, so the TPU kernel story
 
 Edge-id slabs (graphs/ell.py::pack_eid_slabs) keep the forward and
 transposed layouts consistent: both gather from the same canonical w.
+
+This module holds the per-bucket *reference* implementations (the "xla"
+backend).  The public :func:`drspmm_learnable` delegates to
+``kernels/ops.py``, which runs the same math single-dispatch over the fused
+eid arena on the fused backends (DESIGN.md §8) and memoizes the jitted
+custom-vjp executor per packing (the seed rebuilt it per call, defeating
+jit caching).
 """
 
 from __future__ import annotations
@@ -85,20 +92,17 @@ def _bwd_w(fwd_slabs: BucketedELL, gy, x_vals, x_idx, nnz: int):
 
 def drspmm_learnable(fwd_slabs: BucketedELL, bwd_slabs: BucketedELL,
                      nnz: int, w_canon: jax.Array, x_vals: jax.Array,
-                     x_idx: jax.Array, dim: int) -> jax.Array:
-    """Differentiable in BOTH w_canon (nnz,) and x_vals (N, k)."""
+                     x_idx: jax.Array, dim: int, *,
+                     backend=None) -> jax.Array:
+    """Differentiable in BOTH w_canon (nnz,) and x_vals (N, k).
 
-    @jax.custom_vjp
-    def f(w, xv):
-        return _fwd_exact(fwd_slabs, w, xv, x_idx, dim)
-
-    def f_fwd(w, xv):
-        return _fwd_exact(fwd_slabs, w, xv, x_idx, dim), (w, xv)
-
-    def f_bwd(res, gy):
-        w, xv = res
-        return (_bwd_w(fwd_slabs, gy, xv, x_idx, nnz),
-                _bwd_x(bwd_slabs, w, gy, x_idx))
-
-    f.defvjp(f_fwd, f_bwd)
-    return f(w_canon, x_vals)
+    Back-compat entry point: delegates to
+    :func:`repro.kernels.ops.drspmm_learnable` (``backend=None`` →
+    ``ops.DEFAULT_BACKEND``, i.e. the fused single-dispatch path), so
+    existing callers of the slab API get the fast path and the memoized
+    executor for free.
+    """
+    from repro.kernels import ops as _ops   # lazy: ops imports this module
+    be = _ops.DEFAULT_BACKEND if backend is None else backend
+    return _ops.drspmm_learnable(fwd_slabs, bwd_slabs, nnz, w_canon,
+                                 x_vals, x_idx, dim, backend=be)

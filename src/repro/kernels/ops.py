@@ -29,13 +29,17 @@ bucketed API gets the single-dispatch path by flipping ``backend`` alone.
 from __future__ import annotations
 
 import functools
+from collections import OrderedDict
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.graphs.ell import BucketedELL, FusedELL, fuse_bucketed
+from repro.graphs.ell import (BucketedELL, ELLBucket, FusedELL, decode_eids,
+                              fuse_bucketed)
 from repro.kernels import drspmm as _k
+from repro.kernels import learnable as _learn
 from repro.kernels import ref as _ref
 
 Backend = Literal["pallas_fused", "xla_fused", "pallas", "xla", "dense"]
@@ -253,3 +257,273 @@ def _spmm_fwd(adj: BucketedELL, x, backend: Backend):
             yb = jnp.sum(rows * b.w[..., None], axis=1)
         y = y.at[b.rows].add(yb)
     return y
+
+
+# ---------------------------------------------------------------------------
+# drspmm_learnable — differentiable per-edge weights through the same
+# 5-backend family (DESIGN.md §8).  The packing is an edge-ID structure
+# (pack_eid_slabs slabs or their fused eid arenas): the canonical weight
+# vector w (nnz,) is gathered into slab/arena layout at execution time, so
+# Y = A(w)·dense(CBSR(x)) has gradients in BOTH w and x_vals while keeping
+# the fixed-weight path's dispatch granularity per backend.
+# ---------------------------------------------------------------------------
+
+def _fused_eid_of(pack) -> FusedELL:
+    if isinstance(pack, FusedELL):
+        assert pack.eid is not None, (
+            "learnable fused backends need an eid arena "
+            "(fuse_bucketed(..., eids=True) / pack_fused_eid_pair)")
+        return pack
+    return fuse_bucketed(pack, eids=True)
+
+
+def _learnable_effective_backend(pack, backend: Backend) -> Backend:
+    """Same family-upgrade rules as :func:`_effective_backend`: a pre-fused
+    eid arena upgrades per-bucket names to the fused executor of the same
+    family (it has no slabs to loop over); traced bucketed slabs downgrade
+    fused names to the per-bucket path (fusing is host-side packing)."""
+    if isinstance(pack, FusedELL):
+        if backend in ("pallas", "pallas_fused"):
+            return "pallas_fused"
+        if backend == "dense":
+            return "dense"
+        return "xla_fused"
+    if backend in ("pallas_fused", "xla_fused"):
+        if any(isinstance(b.nbr, jax.core.Tracer) for b in pack.buckets):
+            return "pallas" if backend == "pallas_fused" else "xla"
+    return backend
+
+
+def _wpad(w_canon):
+    """Append the inert slot padded eids (→ index nnz) gather from."""
+    return jnp.concatenate([w_canon, jnp.zeros((1,), w_canon.dtype)])
+
+
+def _safe_eids(eid, nnz: int):
+    return jnp.where(jnp.asarray(eid) < 0, nnz, jnp.asarray(eid))
+
+
+# ----- dense oracle (autodiff carries both grads exactly) ------------------
+
+def _learnable_dense(pack, nnz: int, w, xv, xi, dim: int):
+    wp = _wpad(w)
+    a = jnp.zeros((pack.n_dst, pack.n_src), jnp.float32)
+    if isinstance(pack, FusedELL):
+        slot_rows = jnp.take(jnp.asarray(pack.rows), _arena_rows(pack),
+                             axis=0)                  # (C, BR) original rows
+        wa = wp[_safe_eids(pack.eid, nnz)]            # (C, BR, Ec)
+        rows3 = jnp.broadcast_to(slot_rows[:, :, None], wa.shape)
+        a = a.at[rows3, jnp.asarray(pack.nbr)].add(wa)
+    else:
+        for b in pack.buckets:
+            ids = decode_eids(b.w)
+            ws = wp[_safe_eids(ids, nnz)]             # (R, E)
+            rows2 = jnp.broadcast_to(b.rows[:, None], ws.shape)
+            a = a.at[rows2, b.nbr].add(ws)
+    n_src, k = xi.shape[0], xi.shape[1]
+    xd = jnp.zeros((n_src, dim), xv.dtype).at[
+        jnp.arange(n_src)[:, None], xi].add(xv)
+    return a @ xd
+
+
+# ----- per-bucket Pallas path: slab weights gathered in XLA, then the
+# ----- fixed-weight bucket kernels run on the (traced-weight) slabs --------
+
+def _fwd_learnable_pallas(slabs: BucketedELL, nnz, w, xv, xi, dim):
+    wp = _wpad(w)
+    y = jnp.zeros((slabs.n_dst, dim), xv.dtype)
+    for b in slabs.buckets:
+        ws = wp[_safe_eids(decode_eids(b.w), nnz)]    # (R, E)
+        yb = _k.drspmm_fwd_bucket(
+            ELLBucket(rows=b.rows, nbr=b.nbr, w=ws), xv, xi, dim)
+        y = y.at[b.rows].add(yb)
+    return y
+
+
+def _bwd_x_learnable_pallas(tslabs: BucketedELL, nnz, w, gy, xi):
+    wp = _wpad(w)
+    n, k = xi.shape
+    gv = jnp.zeros((n, k), gy.dtype)
+    for b in tslabs.buckets:
+        ws = wp[_safe_eids(decode_eids(b.w), nnz)]
+        xi_rows = jnp.take(xi, b.rows, axis=0)        # (R, k)
+        gb = _k.drspmm_bwd_bucket(
+            ELLBucket(rows=b.rows, nbr=b.nbr, w=ws), gy, xi_rows)
+        gv = gv.at[b.rows].add(gb)
+    return gv
+
+
+# ----- fused arena in plain XLA (CPU hot path) -----------------------------
+
+def _fwd_learnable_fused_xla(f: FusedELL, nnz, w, xv, xi, dim):
+    wa = _wpad(w)[_safe_eids(f.eid, nnz)]             # (C, BR, Ec)
+    nbr = jnp.asarray(f.nbr)
+    v = jnp.take(xv, nbr, axis=0)                     # (C, BR, Ec, k)
+    cols = jnp.take(xi, nbr, axis=0)
+    vw = v * wa[..., None]
+    rows = _arena_rows(f)                             # (C, BR)
+    y = jnp.zeros((f.n_arena_rows, dim), xv.dtype)
+    y = y.at[jnp.broadcast_to(rows[:, :, None, None], cols.shape),
+             cols].add(vw)
+    return jnp.take(y, jnp.asarray(f.gather), axis=0)
+
+
+def _bwd_x_learnable_fused_xla(ft: FusedELL, nnz, w, gy, xi):
+    twa = _wpad(w)[_safe_eids(ft.eid, nnz)]           # (C, BR, Ec)
+    tnbr = jnp.asarray(ft.nbr)
+    k = xi.shape[1]
+    g = jnp.take(gy, tnbr, axis=0)                    # (C, BR, Ec, D)
+    xi_arena = jnp.take(xi, jnp.asarray(ft.rows), axis=0)      # (R_arena, k)
+    xi_blocks = jnp.take(xi_arena, _arena_rows(ft), axis=0)    # (C, BR, k)
+    sampled = jnp.take_along_axis(
+        g, jnp.broadcast_to(xi_blocks[:, :, None, :], g.shape[:3] + (k,)),
+        axis=3)                                       # SSpMM sampling
+    contrib = jnp.sum(sampled * twa[..., None], axis=2)        # (C, BR, k)
+    n_blocks = ft.n_arena_rows // ft.row_block
+    dv = jax.ops.segment_sum(contrib, jnp.asarray(ft.block_of),
+                             num_segments=n_blocks).reshape(
+        ft.n_arena_rows, k)
+    return jnp.take(dv, jnp.asarray(ft.gather), axis=0)
+
+
+def _dw_contrib_to_canon(f: FusedELL, nnz, contrib):
+    """Reduce per-arena-slot contributions (C, BR, Ec) to canonical order:
+    one scatter-add over the eid table; padding (−1 → slot nnz) dropped."""
+    gw = jnp.zeros((nnz + 1,), contrib.dtype)
+    gw = gw.at[_safe_eids(f.eid, nnz).reshape(-1)].add(contrib.reshape(-1))
+    return gw[:nnz]
+
+
+def _dw_learnable_fused_xla(f: FusedELL, nnz, gy, xv, xi):
+    nbr = jnp.asarray(f.nbr)
+    v = jnp.take(xv, nbr, axis=0)                     # (C, BR, Ec, k)
+    cols = jnp.take(xi, nbr, axis=0)
+    gy_arena = jnp.take(gy, jnp.asarray(f.rows), axis=0)       # (R_arena, D)
+    gy_blocks = jnp.take(gy_arena, _arena_rows(f), axis=0)     # (C, BR, D)
+    g = jnp.broadcast_to(gy_blocks[:, :, None, :],
+                         cols.shape[:3] + (gy.shape[1],))
+    sampled = jnp.take_along_axis(g, cols, axis=3)    # (C, BR, Ec, k)
+    contrib = jnp.sum(sampled * v, axis=-1)           # (C, BR, Ec)
+    return _dw_contrib_to_canon(f, nnz, contrib)
+
+
+# ----- backend dispatch ----------------------------------------------------
+
+def _learnable_fwd_impl(pack, nnz, w, xv, xi, dim, backend: Backend):
+    if backend == "xla_fused":
+        return _fwd_learnable_fused_xla(_fused_eid_of(pack), nnz, w, xv, xi,
+                                        dim)
+    if backend == "pallas_fused":
+        f = _fused_eid_of(pack)
+        ya = _k.drspmm_fwd_learnable_fused(f, nnz, w, xv, xi, dim)
+        return jnp.take(ya, f.gather, axis=0).astype(xv.dtype)
+    if backend == "pallas":
+        return _fwd_learnable_pallas(pack, nnz, w, xv, xi, dim)
+    return _learn._fwd_exact(pack, w, xv, xi, dim)    # "xla" reference
+
+
+def _learnable_dx_impl(tpack, nnz, w, gy, xi, backend: Backend):
+    if backend == "xla_fused":
+        return _bwd_x_learnable_fused_xla(_fused_eid_of(tpack), nnz, w, gy,
+                                          xi)
+    if backend == "pallas_fused":
+        ft = _fused_eid_of(tpack)
+        xi_arena = jnp.take(xi, jnp.asarray(ft.rows), axis=0)
+        ga = _k.drspmm_bwd_learnable_fused(ft, nnz, w, gy, xi_arena)
+        return jnp.take(ga, ft.gather, axis=0).astype(gy.dtype)
+    if backend == "pallas":
+        return _bwd_x_learnable_pallas(tpack, nnz, w, gy, xi)
+    return _learn._bwd_x(tpack, w, gy, xi)            # "xla" reference
+
+
+def _learnable_dw_impl(pack, nnz, gy, xv, xi, backend: Backend):
+    if backend == "xla_fused":
+        return _dw_learnable_fused_xla(_fused_eid_of(pack), nnz, gy, xv, xi)
+    if backend == "pallas_fused":
+        f = _fused_eid_of(pack)
+        gy_arena = jnp.take(gy, jnp.asarray(f.rows), axis=0)
+        contrib = _k.drspmm_dw_learnable_fused(f, gy_arena, xv, xi)
+        return _dw_contrib_to_canon(f, nnz, contrib)
+    # per-bucket sampled dot — the dw scatter into canonical order is an
+    # XLA scatter under every backend (TPUs have no fast in-kernel scatter),
+    # so "pallas" shares the bucketed reference reduction.
+    return _learn._bwd_w(pack, gy, xv, xi, nnz)
+
+
+# The executor — custom-vjp wrapper + jit — is built ONCE per
+# (packing pair, nnz, dim, backend) and memoized.  The seed defined the
+# custom_vjp wrapper inside the op body, so every call built a fresh
+# closure and defeated jit/trace caching — the same class of bug
+# core/parallel.py's executable memo fixed for the scheduler
+# (tests/test_learnable_edges.py has the cache-hit regression).
+#
+# Entries hold the packings STRONGLY (the jitted closure pins them anyway,
+# so a weakref-eviction scheme like ``_FUSE_CACHE``'s could never fire),
+# which also makes the id keys collision-free while an entry lives; the
+# table is LRU-bounded instead so a long-lived serve loop over many
+# collated packings cannot grow it without bound.
+_LEARNABLE_EXE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_LEARNABLE_EXE_MAX = 64
+# Trace probe: appended to each time an executor's forward is TRACED (the
+# body runs only while tracing).  Repeated same-shape calls must not grow it.
+_LEARNABLE_TRACES: list = []
+
+
+def _learnable_executable(fwdp, bwdp, nnz: int, dim: int, backend: Backend):
+    key = (id(fwdp), id(bwdp), nnz, dim, backend)
+    hit = _LEARNABLE_EXE.get(key)
+    if hit is not None and hit[0] is fwdp and hit[1] is bwdp:
+        _LEARNABLE_EXE.move_to_end(key)
+        return hit[2]
+
+    if backend == "dense":
+        def f_dense(w, xv, xi):
+            _LEARNABLE_TRACES.append(key)
+            return _learnable_dense(fwdp, nnz, w, xv, xi, dim)
+        exe = jax.jit(f_dense)                        # autodiff = exact oracle
+    else:
+        @jax.custom_vjp
+        def f(w, xv, xi):
+            _LEARNABLE_TRACES.append(key)
+            return _learnable_fwd_impl(fwdp, nnz, w, xv, xi, dim, backend)
+
+        def f_fwd(w, xv, xi):
+            return f(w, xv, xi), (w, xv, xi)
+
+        def f_bwd(res, gy):
+            w, xv, xi = res
+            gw = _learnable_dw_impl(fwdp, nnz, gy, xv, xi, backend)
+            gx = _learnable_dx_impl(bwdp, nnz, w, gy, xi, backend)
+            # xi is structural (integer): float0 cotangent
+            return gw, gx, np.zeros(xi.shape, jax.dtypes.float0)
+
+        f.defvjp(f_fwd, f_bwd)
+        exe = jax.jit(f)
+
+    _LEARNABLE_EXE[key] = (fwdp, bwdp, exe)
+    _LEARNABLE_EXE.move_to_end(key)
+    while len(_LEARNABLE_EXE) > _LEARNABLE_EXE_MAX:
+        _LEARNABLE_EXE.popitem(last=False)
+    return exe
+
+
+def drspmm_learnable(fwd, bwd, nnz: int, w_canon: jax.Array,
+                     x_vals: jax.Array, x_idx: jax.Array, dim: int, *,
+                     backend: Backend = DEFAULT_BACKEND) -> jax.Array:
+    """Y = A(w)·dense(CBSR(x)), differentiable in BOTH ``w_canon`` (nnz,)
+    and ``x_vals`` (N, k).
+
+    ``fwd``/``bwd`` are the forward/transposed edge-ID packings: bucketed
+    eid slabs (:func:`~repro.graphs.ell.pack_eid_slabs`) or pre-fused eid
+    arenas (:func:`~repro.graphs.ell.pack_fused_eid_pair`, collated
+    batches).  On the fused backends this is ONE dispatch per direction —
+    the weight gather w[eid] happens inside the kernel/arena computation —
+    and dw is the sampled dot over the same arena plus one scatter to
+    canonical order.  Gradient parity across all five backends:
+    tests/test_learnable_edges.py.
+    """
+    backend = _learnable_effective_backend(fwd, backend)
+    if backend in ("pallas_fused", "xla_fused"):
+        fwd, bwd = _fused_eid_of(fwd), _fused_eid_of(bwd)
+    return _learnable_executable(fwd, bwd, nnz, dim, backend)(
+        w_canon, x_vals, x_idx)

@@ -9,14 +9,17 @@ Table 2 comparison protocol.
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Any, Dict, NamedTuple, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core.hetero_mp import (HeteroLayerParams, HeteroMPConfig,
                                   hetero_conv, init_hetero_layer)
 from repro.graphs.circuit import CircuitGraph
+from repro.graphs.ell import BucketedELL, ell_to_coo, pack_fused_eid_pair
 from repro.kernels import ops
 
 
@@ -129,7 +132,11 @@ def homogenize(graph: CircuitGraph):
 
 
 def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
-              kind: str = "gcn") -> HomoParams:
+              kind: str = "gcn", nnz: int = 0) -> HomoParams:
+    """``kind="gat_edge"`` layers carry a free per-edge attention logit
+    vector (nnz,) — pass ``nnz`` (e.g. ``adj.nnz`` of the homogenized
+    graph).  Zero-initialized logits start at uniform attention, which
+    coincides with the mean aggregation the other baselines use."""
     ks = jax.random.split(key, n_layers + 2)
     s = 1.0 / jnp.sqrt(hidden)
     layers = []
@@ -144,6 +151,11 @@ def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
                                               jnp.float32, -s, s),
                            jax.random.uniform(jax.random.fold_in(ks[i], 1),
                                               (2 * hidden,), jnp.float32, -s, s)))
+        elif kind == "gat_edge":
+            assert nnz > 0, "gat_edge needs the homogenized edge count (nnz)"
+            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
+                                              jnp.float32, -s, s),
+                           jnp.zeros((nnz,), jnp.float32)))
         else:  # gcn
             layers.append(jax.random.uniform(ks[i], (hidden, hidden),
                                              jnp.float32, -s, s))
@@ -153,6 +165,40 @@ def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
         w_layers=tuple(layers),
         head_w=jax.random.uniform(ks[-1], (hidden, 1), jnp.float32, -s, s),
         head_b=jnp.zeros((1,)))
+
+
+# Memoized per-adjacency edge-ID packing for learnable per-edge attention
+# (kind="gat_edge"): host-side one-time preprocessing, id-keyed with weakref
+# guards like graphs/ell.py::_FUSE_CACHE.
+_EDGE_PACK_CACHE: Dict[int, tuple] = {}
+
+
+def learnable_edge_packing(adj: BucketedELL):
+    """(fwd_arena, bwd_arena, dst_canon, src_canon, w_canon, nnz) for
+    ``adj``'s edge set.
+
+    The fused eid arenas feed :func:`repro.kernels.ops.drspmm_learnable`;
+    ``dst_canon``/``src_canon`` (nnz,) are the canonical
+    (dst-stable-sorted) edge endpoints — segment ids for per-destination
+    softmax reductions and gather ids for per-source scores — and
+    ``w_canon`` carries ``adj``'s fixed weights in the same order (the
+    mean-normalization the "gat" branch folds into its attention).  A
+    canonical per-edge parameter vector (nnz,) aligns with all of them.
+    """
+    key = id(adj)
+    hit = _EDGE_PACK_CACHE.get(key)
+    if hit is not None and hit[0]() is adj:
+        return hit[1]
+    dst, src, w = ell_to_coo(adj)
+    order = np.argsort(dst, kind="stable")
+    dst, src, w = dst[order], src[order], w[order]
+    fwd, bwd, _order, nnz = pack_fused_eid_pair(dst, src, adj.n_dst,
+                                                adj.n_src)
+    pack = (fwd, bwd, dst.astype(np.int32), src.astype(np.int32),
+            w.astype(np.float32), nnz)
+    _EDGE_PACK_CACHE[key] = (
+        weakref.ref(adj, lambda _: _EDGE_PACK_CACHE.pop(key, None)), pack)
+    return pack
 
 
 def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
@@ -167,20 +213,67 @@ def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
         elif kind == "gat":
             w, a = lw
             hw = h @ w
-            # single-head GAT, SpMM-decomposable source-score attention plus
-            # an explicit self-attention term.  The additive GATv1 logit
+            # single-head GAT, source-score attention plus an explicit
+            # self-attention term.  The additive GATv1 logit
             # e_ij = σ(s_dst_i + s_src_j) factorizes in exp space and the
             # destination part cancels in the softmax ratio — but the self
             # pair (i, i) keeps its full joint score, which is what lets
             # attention upweight a node's own features.
-            s_src = jnp.exp(jax.nn.leaky_relu(hw @ a[: hw.shape[1]]))
-            s_self = jnp.exp(jax.nn.leaky_relu(
-                hw @ a[: hw.shape[1]] + hw @ a[hw.shape[1]:]))
-            num = ops.spmm(adj, adj_t, s_src[:, None] * hw, backend=backend)
-            den = ops.spmm(adj, adj_t, s_src[:, None], backend=backend)
+            lr_src = jax.nn.leaky_relu(hw @ a[: hw.shape[1]])
+            lr_self = jax.nn.leaky_relu(
+                hw @ a[: hw.shape[1]] + hw @ a[hw.shape[1]:])
+            # Exponentiating unbounded logits overflows for large-magnitude
+            # features (exp→inf, num/den→NaN).  num and den are both linear
+            # in the exp'd scores, so a per-destination shift cancels in
+            # the ratio: subtract each destination's max incoming logit
+            # before exp.  (A global max would keep exp finite but
+            # underflow every node far below the hottest one to 0/0; the
+            # per-destination form keeps the largest term at exp(0) for
+            # EVERY node.)  The per-edge gather routes the aggregation
+            # through the fused learnable op; adj's mean-normalization
+            # weights ride along in the attention, so moderate-scale
+            # numerics match the SpMM-decomposed form exactly.
+            fwd_e, bwd_e, dst_c, src_c, w_c, nnz = \
+                learnable_edge_packing(adj)
+            e_log = lr_src[src_c]                     # (nnz,) per-edge score
+            m = jnp.maximum(
+                jax.ops.segment_max(e_log, dst_c, num_segments=adj.n_dst),
+                lr_self)
+            m = jax.lax.stop_gradient(jnp.where(jnp.isfinite(m), m, 0.0))
+            att = jnp.asarray(w_c) * jnp.exp(e_log - m[dst_c])
+            s_self = jnp.exp(lr_self - m)
+            xi = jnp.broadcast_to(
+                jnp.arange(hw.shape[1], dtype=jnp.int32)[None, :], hw.shape)
+            num = ops.drspmm_learnable(fwd_e, bwd_e, nnz, att, hw, xi,
+                                       hw.shape[1], backend=backend)
+            den = jax.ops.segment_sum(att, dst_c, num_segments=adj.n_dst)
             num = num + s_self[:, None] * hw
-            den = den + s_self[:, None]
-            h = jax.nn.relu(num / jnp.maximum(den, 1e-6))
+            den = den + s_self
+            h = jax.nn.relu(num / jnp.maximum(den, 1e-6)[:, None])
+        elif kind == "gat_edge":
+            # Learnable per-edge attention through the fused learnable op:
+            # every edge carries a free logit s_e; softmax over each
+            # destination's in-edges (self-loops are already in the
+            # homogenized edge set) weights the aggregation, and dL/ds
+            # flows through drspmm_learnable's sampled dw reduction.
+            w, s = lw
+            hw = h @ w
+            fwd_e, bwd_e, dst_c, _src_c, _w_c, nnz = \
+                learnable_edge_packing(adj)
+            logit = jax.nn.leaky_relu(s)
+            # per-destination max subtraction (exact softmax stabilization:
+            # per-edge logits make the per-node max expressible, unlike the
+            # factorized "gat" branch above)
+            m = jax.ops.segment_max(logit, dst_c, num_segments=adj.n_dst)
+            m = jnp.where(jnp.isfinite(m), m, 0.0)    # edge-less rows: -inf
+            att = jnp.exp(logit - jax.lax.stop_gradient(m)[dst_c])
+            # dense h as trivially-CBSR operand: k = hidden, idx = iota
+            xi = jnp.broadcast_to(
+                jnp.arange(hw.shape[1], dtype=jnp.int32)[None, :], hw.shape)
+            num = ops.drspmm_learnable(fwd_e, bwd_e, nnz, att, hw, xi,
+                                       hw.shape[1], backend=backend)
+            den = jax.ops.segment_sum(att, dst_c, num_segments=adj.n_dst)
+            h = jax.nn.relu(num / jnp.maximum(den, 1e-6)[:, None])
         else:
             agg = ops.spmm(adj, adj_t, h, backend=backend)
             h = jax.nn.relu(agg @ lw)

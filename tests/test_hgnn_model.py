@@ -26,14 +26,103 @@ def test_forward_shapes_and_range(graph):
     assert np.all((p >= 0) & (p <= 1)) and not np.isnan(p).any()
 
 
-@pytest.mark.parametrize("kind", ["gcn", "sage", "gat"])
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gat", "gat_edge"])
 def test_homogeneous_baselines_run(graph, kind):
     adj, adj_t, x, y, n_cell = homogenize(graph)
-    params = init_homo(jax.random.PRNGKey(0), x.shape[1], 32, kind=kind)
+    params = init_homo(jax.random.PRNGKey(0), x.shape[1], 32, kind=kind,
+                       nnz=adj.nnz)
     pred = homo_forward(params, adj, adj_t, x @ jnp.eye(x.shape[1]), n_cell,
                         kind=kind)
     assert pred.shape == (n_cell,)
     assert not np.isnan(np.asarray(pred)).any()
+
+
+def _naive_gat_f64(params, adj, x, n_cell):
+    """Unstabilized exp-space GAT in float64 — the numerics oracle for the
+    stabilized f32 implementation (finite in f64 wherever logits < ~700)."""
+    from repro.graphs.ell import ell_to_coo
+    dst, src, wv = ell_to_coo(adj)
+    dst, src = dst.astype(np.int64), src.astype(np.int64)
+    wv = wv.astype(np.float64)
+    h = np.asarray(x, np.float64) @ np.asarray(params.w_in, np.float64)
+    lmax = 0.0
+    for (w, a) in params.w_layers:
+        hw = h @ np.asarray(w, np.float64)
+        a = np.asarray(a, np.float64)
+        hd = hw.shape[1]
+        lrelu = lambda z: np.where(z >= 0, z, 0.01 * z)
+        lr_src = lrelu(hw @ a[:hd])
+        lr_self = lrelu(hw @ a[:hd] + hw @ a[hd:])
+        lmax = max(lmax, float(np.abs(lr_src).max()),
+                   float(np.abs(lr_self).max()))
+        num = np.exp(lr_self)[:, None] * hw
+        den = np.exp(lr_self).copy()
+        np.add.at(num, dst, (wv * np.exp(lr_src[src]))[:, None] * hw[src])
+        np.add.at(den, dst, wv * np.exp(lr_src[src]))
+        h = np.maximum(num / np.maximum(den, 1e-6)[:, None], 0.0)
+    z = h @ np.asarray(params.head_w, np.float64) \
+        + np.asarray(params.head_b, np.float64)
+    return (1.0 / (1.0 + np.exp(-z)))[:n_cell, 0], lmax
+
+
+def test_gat_large_scale_inputs_match_f64_oracle(graph):
+    """Regression: exp-space GAT attention exponentiated unbounded
+    leaky-relu logits — large-magnitude features overflowed jnp.exp to inf
+    and num/den went NaN.  The per-destination max-subtracted form must
+    stay finite AND keep every node's softmax faithful (a global shift
+    would underflow nodes far below the hottest one to 0/0), so compare
+    against the unstabilized float64 oracle in the f32-overflow regime."""
+    adj, adj_t, x, y, n_cell = homogenize(graph)
+    params = init_homo(jax.random.PRNGKey(1), x.shape[1], 32, kind="gat",
+                       n_layers=1)
+    # moderate scale: semantics unchanged by the stabilization
+    ref, _ = _naive_gat_f64(params, adj, x, n_cell)
+    pred = homo_forward(params, adj, adj_t, x, n_cell, kind="gat")
+    np.testing.assert_allclose(np.asarray(pred), ref, rtol=1e-4, atol=1e-4)
+    # scale into the f32-overflow regime (exp arg > 89 ⇒ old code -> inf)
+    _, lmax1 = _naive_gat_f64(params, adj, x, n_cell)
+    scale = 150.0 / lmax1
+    ref_big, lmax = _naive_gat_f64(params, adj, x * scale, n_cell)
+    assert lmax > 100, "test did not reach the overflow regime"
+    pred_big = homo_forward(params, adj, adj_t, x * scale, n_cell,
+                            kind="gat")
+    p = np.asarray(pred_big)
+    assert np.isfinite(p).all()
+    np.testing.assert_allclose(p, ref_big, rtol=1e-3, atol=1e-3)
+
+
+def test_gat_edge_uniform_attention_matches_gcn(graph):
+    """Zero-initialized per-edge logits are uniform attention over each
+    destination's in-edges (self-loop included) — exactly the mean
+    aggregation the GCN baseline uses, so the two forwards coincide."""
+    adj, adj_t, x, y, n_cell = homogenize(graph)
+    pe = init_homo(jax.random.PRNGKey(0), x.shape[1], 32, kind="gat_edge",
+                   nnz=adj.nnz)
+    pg = init_homo(jax.random.PRNGKey(0), x.shape[1], 32, kind="gcn")
+    pg = pg._replace(w_layers=tuple(w for (w, s) in pe.w_layers))
+    pred_e = homo_forward(pe, adj, adj_t, x, n_cell, kind="gat_edge")
+    pred_g = homo_forward(pg, adj, adj_t, x, n_cell, kind="gcn")
+    np.testing.assert_allclose(np.asarray(pred_e), np.asarray(pred_g),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gat_edge_scores_learn(graph):
+    """dL/ds flows through the fused learnable op and a GD step on the
+    per-edge scores reduces the loss."""
+    adj, adj_t, x, y, n_cell = homogenize(graph)
+    params = init_homo(jax.random.PRNGKey(2), x.shape[1], 32,
+                       kind="gat_edge", nnz=adj.nnz)
+
+    def loss(p):
+        pred = homo_forward(p, adj, adj_t, x, n_cell, kind="gat_edge")
+        return jnp.mean((pred - y) ** 2)
+
+    g = jax.grad(loss)(params)
+    gs = np.asarray(g.w_layers[0][1])
+    assert np.abs(gs).max() > 0, "no gradient reached the edge scores"
+    l0 = float(loss(params))
+    stepped = jax.tree.map(lambda p, gg: p - 1.0 * gg, params, g)
+    assert float(loss(stepped)) < l0
 
 
 def test_generator_matches_table1_statistics():
