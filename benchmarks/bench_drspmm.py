@@ -230,13 +230,91 @@ def bench_learnable(scale=0.08, size="medium", dim=64, k=16,
     return entries
 
 
+def bench_hetero(scale=0.08, size="medium", dim=64, k=16,
+                 out_json="BENCH_drspmm.json", iters=10, smoke=False):
+    """Relation-fused mega-dispatch vs the serial per-direction hetero
+    layer (DESIGN.md §9).
+
+    One full HeteroConv layer, forward and forward+backward, with
+    ``use_plan`` toggling between the RelationPlan super-arena path (ONE
+    dispatch per direction-group) and the serial loop (one per edge-type
+    direction).  Wall-clock follows the repo convention — the xla family on
+    CPU (Pallas interpret-mode anti-correlates with TPU, see ``bench()``) —
+    while the pallas family records the dispatch counts; ``smoke=True``
+    asserts them (1 fwd / 2 grad on the plan path vs 3 / 6 serial), the
+    acceptance property CI guards.
+    """
+    from repro.core.hetero_mp import (HeteroMPConfig, hetero_conv,
+                                      init_hetero_layer)
+
+    rng = np.random.default_rng(0)
+    g = generate_design(1, size, scale=scale)[0]
+    lp = init_hetero_layer(jax.random.PRNGKey(0), dim)
+    x_cell = jnp.asarray(rng.normal(size=(g.n_cell, dim)).astype(np.float32))
+    x_net = jnp.asarray(rng.normal(size=(g.n_net, dim)).astype(np.float32))
+
+    def cfg_of(backend, use_plan):
+        return HeteroMPConfig(hidden=dim, k_cell=k, k_net=k,
+                              backend=backend, use_plan=use_plan)
+
+    def fwd(cfg):
+        return lambda xc: hetero_conv(lp, g, xc, x_net, cfg)
+
+    def fwd_bwd(cfg):
+        # sum over BOTH outputs, differentiate wrt BOTH inputs, so no
+        # direction's forward or backward is dead-code-eliminated
+        return lambda xc, xn: jax.grad(lambda qc, qn: sum(
+            jnp.sum(y ** 2) for y in hetero_conv(lp, g, qc, qn, cfg)),
+            argnums=(0, 1))(xc, xn)
+
+    disp = {}
+    for name, use_plan in (("plan", True), ("serial", False)):
+        c = cfg_of("pallas_fused", use_plan)
+        disp[name] = dict(fwd=dispatch_count(fwd(c), x_cell),
+                          grad=dispatch_count(fwd_bwd(c), x_cell, x_net))
+    if smoke:
+        assert disp["plan"] == dict(fwd=1, grad=2), disp
+        assert disp["serial"] == dict(fwd=3, grad=6), disp
+
+    stats = {}
+    for name, use_plan in (("plan", True), ("serial", False)):
+        c = cfg_of("xla_fused", use_plan)
+        stats[name] = dict(
+            fwd_us=time_jit(fwd(c), x_cell, iters=iters),
+            grad_us=time_jit(fwd_bwd(c), x_cell, x_net, iters=iters))
+    sp_f = stats["serial"]["fwd_us"] / stats["plan"]["fwd_us"]
+    sp_g = stats["serial"]["grad_us"] / stats["plan"]["grad_us"]
+    agg = ((stats["serial"]["fwd_us"] + stats["serial"]["grad_us"])
+           / (stats["plan"]["fwd_us"] + stats["plan"]["grad_us"]))
+    emit(f"hetero_plan_fwd/{size}/d{dim}/k{k}", stats["plan"]["fwd_us"],
+         f"speedup_vs_serial={sp_f:.2f}x;"
+         f"dispatches={disp['plan']['fwd']}(serial={disp['serial']['fwd']})")
+    emit(f"hetero_plan_grad/{size}/d{dim}/k{k}", stats["plan"]["grad_us"],
+         f"speedup_vs_serial={sp_g:.2f}x;"
+         f"dispatches={disp['plan']['grad']}(serial={disp['serial']['grad']})")
+    emit(f"hetero_plan_aggregate/{size}",
+         stats["plan"]["fwd_us"] + stats["plan"]["grad_us"],
+         f"aggregate_speedup_vs_serial={agg:.2f}x")
+    append_json(out_json, dict(
+        ts=time.time(), kind="hetero_plan_vs_serial", size=size, scale=scale,
+        dim=dim, k=k, backend=jax.default_backend(),
+        n_cell=g.n_cell, n_net=g.n_net,
+        dispatches=disp, aggregate_speedup=agg,
+        fwd_speedup=sp_f, grad_speedup=sp_g,
+        **{f"{n}_{m}": v for n, s in stats.items() for m, v in s.items()}))
+    return stats
+
+
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
-        # CI-sized run: tiny graph, fused-vs-bucketed comparisons only
-        # (fixed-weight + learnable legs).
+        # CI-sized run: tiny graph, fused-vs-bucketed + plan-vs-serial
+        # comparisons (fixed-weight, learnable, and hetero-layer legs),
+        # with the single-dispatch-per-direction-group property asserted.
         bench_fused(scale=0.02, size="small", iters=3)
         bench_learnable(scale=0.02, size="small", iters=3)
+        bench_hetero(scale=0.02, size="small", iters=3, smoke=True)
     else:
         bench_fused()
         bench_learnable()
+        bench_hetero()
         bench()

@@ -11,11 +11,20 @@ Y_net = pin_out (Eq. 9).  Eqs. 12–14 (the mask-routed backward through the
 max merge) fall out of autodiff over ``jnp.maximum``; the SSpMM backward of
 each DR-SpMM is the custom VJP in kernels/ops.py.
 
-The three modules are computationally independent until the merge — the
-parallel scheduler (core/parallel.py) exploits exactly that.  With the
-default ``pallas_fused`` backend (TPU) each edge type's entire bucketed
-aggregation is ONE kernel dispatch, so a layer's message passing is exactly
-three forward launches (DESIGN.md §1).
+Two execution strategies share the math:
+
+* **plan path** (default on the fused backends): ALL edge-type directions
+  of the layer run as ONE dispatch per direction-group over a
+  :class:`~repro.graphs.ell.RelationPlan` super-arena
+  (``ops.drspmm_multi`` — one forward ``pallas_call``, one transposed
+  backward, DESIGN.md §9).  The plan comes from the graph itself
+  (``graph.plan``, attached by the collator / ``with_plan``) or is built
+  lazily and memoized when the graph is concrete.  Per-type D-ReLU/CBSR is
+  computed once and shared by every relation consuming that type.
+* **serial path** (the reference, and the fallback for per-bucket/dense
+  backends, dense aggregation, or traced graphs without a plan): the
+  per-relation loop of PR 1–4, one ``drspmm``/``spmm`` per edge type.
+  ``HeteroMPConfig(use_plan=False)`` pins it for parity tests.
 """
 
 from __future__ import annotations
@@ -28,7 +37,8 @@ import jax.numpy as jnp
 
 from repro.core.cbsr import cbsr_from_dense
 from repro.core.drelu import drelu
-from repro.graphs.circuit import CircuitGraph
+from repro.graphs.circuit import CircuitGraph, relation_plan_of
+from repro.graphs.ell import FusedELL, RelationPlan
 from repro.kernels import ops
 
 
@@ -42,6 +52,11 @@ class HeteroMPConfig:
     backend: ops.Backend = ops.DEFAULT_BACKEND
     use_drelu: bool = True    # False => dense baseline path (plain SpMM)
     drelu_backend: str = "topk"   # topk (lax.top_k) | pallas (binary search)
+    # Relation-fused layer dispatch (DESIGN.md §9): on the fused backends a
+    # layer's whole message passing runs as ONE dispatch per direction-group
+    # via the graph's RelationPlan.  False pins the serial per-direction
+    # reference loop (exact parity: tests/test_relation_plan.py).
+    use_plan: bool = True
 
 
 class HeteroLayerParams(NamedTuple):
@@ -65,42 +80,98 @@ def init_hetero_layer(key, hidden: int) -> HeteroLayerParams:
         b_cell=jnp.zeros((hidden,)), b_net=jnp.zeros((hidden,)))
 
 
+def _sparsify(x_src: jax.Array, k: int, cfg: HeteroMPConfig):
+    """D-ReLU -> CBSR.  Gradient routing: the CBSR values carry the
+    autodiff path (top-k gather is differentiable wrt x), and the SSpMM
+    backward samples at the preserved indices (Alg. 2)."""
+    if cfg.drelu_backend == "pallas":
+        # the paper's row-wise binary search as a Pallas kernel
+        from repro.kernels.drelu_topk import drelu_pallas
+        xs = drelu_pallas(jax.lax.stop_gradient(x_src), k)
+        xs = xs + (x_src - jax.lax.stop_gradient(x_src)) * (xs != 0)
+    else:
+        xs = drelu(x_src, k)                   # dense w/ straight-through
+    return cbsr_from_dense(xs, k)
+
+
 def _aggregate(graph: CircuitGraph, etype: str, x_src: jax.Array,
                k: int, cfg: HeteroMPConfig) -> jax.Array:
-    """A^ψ · D-ReLU(x_src) for one edge type, via DR-SpMM (or dense SpMM)."""
+    """A^ψ · D-ReLU(x_src) for one edge type, via DR-SpMM (or dense SpMM) —
+    the serial per-direction reference."""
     es = graph.edges[etype]
     if cfg.use_drelu and k < x_src.shape[-1]:
-        # D-ReLU -> CBSR -> DR-SpMM.  Gradient routing: the CBSR values carry
-        # the autodiff path (top-k gather is differentiable wrt x), and the
-        # SSpMM backward samples at the preserved indices (Alg. 2).
-        if cfg.drelu_backend == "pallas":
-            # the paper's row-wise binary search as a Pallas kernel
-            from repro.kernels.drelu_topk import drelu_pallas
-            xs = drelu_pallas(jax.lax.stop_gradient(x_src), k)
-            xs = xs + (x_src - jax.lax.stop_gradient(x_src)) * (xs != 0)
-        else:
-            xs = drelu(x_src, k)                   # dense w/ straight-through
-        c = cbsr_from_dense(xs, k)
+        c = _sparsify(x_src, k, cfg)
         return ops.drspmm(es.adj, es.adj_t, c.values, c.idx,
                           x_src.shape[-1], backend=cfg.backend)
     return ops.spmm(es.adj, es.adj_t, x_src, backend=cfg.backend)
 
 
-def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
-                x_cell: jax.Array, x_net: jax.Array,
-                cfg: HeteroMPConfig) -> Tuple[jax.Array, jax.Array]:
-    """One HeteroConv layer.  Returns (y_cell, y_net)."""
-    # --- three independent edge-type message passings (parallelizable) ---
-    agg_near = _aggregate(graph, "near", x_cell, cfg.k_cell, cfg)      # cell->cell
-    agg_pinned = _aggregate(graph, "pinned", x_net, cfg.k_net, cfg)    # net->cell
-    agg_pin = _aggregate(graph, "pin", x_cell, cfg.k_cell, cfg)        # cell->net
+def plan_applicable(cfg: HeteroMPConfig, hidden: int) -> bool:
+    """True iff the plan path can serve this config: fused backend (the
+    per-bucket/dense names keep their reference semantics) and CBSR
+    aggregation on both node types (dense SpMM stays serial).  The single
+    gate shared by :func:`_plan_for` and the trainer's plan attachment, so
+    the two cannot drift."""
+    return (cfg.use_plan and cfg.use_drelu
+            and cfg.backend in ("pallas_fused", "xla_fused")
+            and cfg.k_cell < hidden and cfg.k_net < hidden)
 
+
+def _plan_for(graph: CircuitGraph, cfg: HeteroMPConfig,
+              hidden: int) -> RelationPlan | None:
+    """The layer's RelationPlan, or None when the serial path must run.
+
+    Beyond :func:`plan_applicable`, a plan must actually be available:
+    attached to the graph (collated batches — works traced), or buildable
+    host-side (concrete bucketed adjacencies, memoized per graph)."""
+    if not plan_applicable(cfg, hidden):
+        return None
+    if graph.plan is not None:
+        return graph.plan
+    adj = graph.edges["near"].adj
+    if isinstance(adj, FusedELL):
+        return None    # pre-fused (collated) graph without an attached plan
+    if isinstance(adj.buckets[0].nbr, jax.core.Tracer):
+        return None    # traced graph argument: host packing impossible
+    return relation_plan_of(graph)
+
+
+def _merge(params: HeteroLayerParams, x_cell: jax.Array,
+           agg_near: jax.Array, agg_pinned: jax.Array,
+           agg_pin: jax.Array) -> Tuple[jax.Array, jax.Array]:
     # --- per-edge W^ψ (Eq. 4) ---
     near_out = agg_near @ params.w_near + x_cell @ params.w_near_self
     pinned_out = agg_pinned @ params.w_pinned + x_cell @ params.w_pinned_self
     pin_out = agg_pin @ params.w_pin
-
     # --- merge (Eqs. 8-9); Eqs. 12-14 are the autodiff of the max ---
     y_cell = jnp.maximum(near_out, pinned_out) + params.b_cell
     y_net = pin_out + params.b_net
     return y_cell, y_net
+
+
+def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
+                x_cell: jax.Array, x_net: jax.Array,
+                cfg: HeteroMPConfig) -> Tuple[jax.Array, jax.Array]:
+    """One HeteroConv layer.  Returns (y_cell, y_net).
+
+    With a :class:`RelationPlan` available (see :func:`_plan_for`) the
+    layer's entire message passing is ONE ``drspmm_multi`` dispatch per
+    direction-group; each node type is sparsified once and shared by every
+    relation consuming it (the serial path re-derives the same CBSR per
+    relation — identical values, so the paths agree exactly)."""
+    plan = _plan_for(graph, cfg, x_cell.shape[-1])
+    if plan is not None:
+        c_cell = _sparsify(x_cell, cfg.k_cell, cfg)
+        c_net = _sparsify(x_net, cfg.k_net, cfg)
+        aggs = ops.drspmm_multi(
+            plan, {"cell": (c_cell.values, c_cell.idx),
+                   "net": (c_net.values, c_net.idx)},
+            x_cell.shape[-1], backend=cfg.backend)
+        return _merge(params, x_cell, aggs["near"], aggs["pinned"],
+                      aggs["pin"])
+
+    # --- serial reference: three independent edge-type message passings ---
+    agg_near = _aggregate(graph, "near", x_cell, cfg.k_cell, cfg)      # cell->cell
+    agg_pinned = _aggregate(graph, "pinned", x_net, cfg.k_net, cfg)    # net->cell
+    agg_pin = _aggregate(graph, "pin", x_cell, cfg.k_cell, cfg)        # cell->net
+    return _merge(params, x_cell, agg_near, agg_pinned, agg_pin)

@@ -14,13 +14,15 @@ paper preprocesses in Alg. 1 stage 1 / Alg. 2 stage 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import weakref
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs.ell import BucketedELL, pack_ell_pair, degree_stats
+from repro.graphs.ell import (BucketedELL, RelationPlan, build_relation_plan,
+                              degree_stats, ell_to_coo, pack_ell_pair)
 
 EDGE_TYPES = ("near", "pin", "pinned")
 # (source node type, destination node type) per edge type.
@@ -44,9 +46,57 @@ class CircuitGraph:
     x_cell: jax.Array            # (n_cell, f_cell) input features
     x_net: jax.Array             # (n_net, f_net)
     y_cell: jax.Array            # (n_cell,) congestion label
+    # Optional relation-fused super-arena pair for the whole-layer
+    # message-passing dispatch (graphs/ell.py::RelationPlan, DESIGN.md §9).
+    # Attached by the collator / ``with_plan`` so plan-driven layers work
+    # even when the graph is a TRACED jit argument (host packing is
+    # impossible there); ``None`` falls back to the serial per-direction
+    # path in core/hetero_mp.py.
+    plan: Optional[RelationPlan] = None
 
     def n_nodes(self, ntype: str) -> int:
         return self.n_cell if ntype == "cell" else self.n_net
+
+
+# id-keyed memo with weakref guards (the _FUSE_CACHE pattern): plan packing
+# is one-time host-side preprocessing per graph.
+_PLAN_CACHE: Dict[int, tuple] = {}
+
+
+def relation_plan_of(graph: CircuitGraph) -> RelationPlan:
+    """Memoized :class:`RelationPlan` covering every edge type of
+    ``graph`` — the one-kernel-per-direction-group packing of its whole
+    hetero layer.  Requires concrete (non-traced) bucketed adjacencies; the
+    collator attaches pre-quantized plans to collated graphs instead."""
+    if graph.plan is not None:
+        return graph.plan
+    key = id(graph)
+    hit = _PLAN_CACHE.get(key)
+    if hit is not None and hit[0]() is graph:
+        return hit[1]
+    rels = []
+    for et in EDGE_TYPES:
+        if et not in graph.edges:
+            continue
+        s_t, d_t = EDGE_SCHEMA[et]
+        dst, src, w = ell_to_coo(graph.edges[et].adj)
+        rels.append((et, s_t, d_t, dst, src, w))
+    plan = build_relation_plan(
+        rels, {"cell": graph.n_cell, "net": graph.n_net})
+    _PLAN_CACHE[key] = (
+        weakref.ref(graph, lambda _: _PLAN_CACHE.pop(key, None)), plan)
+    return plan
+
+
+def with_plan(graph: CircuitGraph) -> CircuitGraph:
+    """``graph`` with its relation plan attached as a pytree child — the
+    form to pass into jitted step functions that take the graph as a traced
+    argument (the plan's arrays trace along; its segment table is static
+    aux data, so equal-shaped graphs still share one compiled executable).
+    """
+    if graph.plan is not None:
+        return graph
+    return dataclasses.replace(graph, plan=relation_plan_of(graph))
 
 
 def build_circuit_graph(coo: Dict[str, Tuple[np.ndarray, np.ndarray]],

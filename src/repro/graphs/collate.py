@@ -40,9 +40,10 @@ import jax.numpy as jnp
 
 from repro.graphs.circuit import (CircuitGraph, EDGE_SCHEMA, EDGE_TYPES,
                                   EdgeSet)
-from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, ell_to_coo,
-                              pack_ell_pair, pack_fused, pack_fused_eid_pair,
-                              _round_up)
+from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, RelationPlan,
+                              build_relation_plan, ell_to_coo, fuse_bucketed,
+                              pack_ell, pack_ell_pair, pack_fused_eid_pair,
+                              pad_fused_arena, _round_up)
 
 # Default bucket-grid resolutions (mantissa bits of the geometric grid):
 # node slabs pay padding linearly (features, gather), so they get a finer
@@ -87,6 +88,16 @@ class BucketLayout:
         default_factory=dict)        # (etype, "fwd"|"bwd") -> Ec
     min_chunks: Dict[Tuple[str, str], int] = dataclasses.field(
         default_factory=dict)        # (etype, "fwd"|"bwd") -> padded C
+    # Relation-plan layout (DESIGN.md §9): the super-arena's SHARED chunk
+    # width per direction, per-relation chunk-count floors, and the
+    # quantized learnable-edge nnz floor — pinned/floored exactly like the
+    # per-edge-type arenas so plan signatures converge per shape bucket.
+    plan_chunk: Dict[str, int] = dataclasses.field(
+        default_factory=dict)        # "fwd"|"bwd" -> Ec
+    plan_min_chunks: Dict[Tuple[str, str], int] = dataclasses.field(
+        default_factory=dict)        # (etype, "fwd"|"bwd") -> padded C
+    min_nnz: Dict[str, int] = dataclasses.field(
+        default_factory=dict)        # etype -> quantized eid-arena nnz
 
 
 class LayoutTable:
@@ -177,11 +188,19 @@ class CollatedBatch:
     members: Tuple[MemberSlice, ...]
     cell_weight: jax.Array          # (n_cell_pad,)
     n_real: int                     # members that carry real requests
-    # with_eids collation: per-edge-type total edge count and per-member
-    # offsets into the batch-canonical edge order (learnable weights).
+    # with_eids collation: per-edge-type QUANTIZED edge count (the size the
+    # traced weight vector is padded to — grid-bucketed so mixed streams
+    # stop adding one jit entry per distinct nnz), the exact count, and
+    # per-member offsets into the batch-canonical edge order.
     edge_nnz: Dict[str, int] = dataclasses.field(default_factory=dict)
+    edge_nnz_exact: Dict[str, int] = dataclasses.field(default_factory=dict)
     edge_eid_offsets: Dict[str, Tuple[int, ...]] = dataclasses.field(
         default_factory=dict)
+
+    @property
+    def plan(self) -> Optional[RelationPlan]:
+        """The batch graph's relation plan (``with_plan`` collation)."""
+        return self.graph.plan
 
     def concat_edge_weights(self, etype: str, member_ws) -> jax.Array:
         """Member canonical weight vectors → the batch canonical vector.
@@ -190,13 +209,18 @@ class CollatedBatch:
         the batch order (member node-id blocks are disjoint and increasing,
         so the batch dst-stable sort concatenates the members' canonical
         orders).  Provide one (nnz_i,) vector per member — fillers included,
-        typically a reuse of the replicated member's vector.
+        typically a reuse of the replicated member's vector.  The result is
+        zero-padded up to the quantized ``edge_nnz`` (padded ids are never
+        gathered, so the pad slots are inert and receive zero gradient).
         """
         assert len(member_ws) == len(self.members), \
             (len(member_ws), len(self.members))
         w = jnp.concatenate([jnp.asarray(wi) for wi in member_ws])
-        assert w.shape[0] == self.edge_nnz[etype], \
-            (w.shape[0], self.edge_nnz[etype])
+        exact = self.edge_nnz_exact.get(etype, self.edge_nnz[etype])
+        assert w.shape[0] == exact, (w.shape[0], exact)
+        pad = self.edge_nnz[etype] - exact
+        if pad:
+            w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
         return w
 
     def split_cell(self, y_cell) -> List[jax.Array]:
@@ -223,41 +247,10 @@ def graph_signature(graph: CircuitGraph) -> tuple:
             tuple((tuple(l.shape), np.dtype(l.dtype).name) for l in leaves))
 
 
-def _pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
-    """Pad a fused arena to (n_chunks, ·, ·) chunks / n_rows arena rows.
-
-    Padding chunks carry zero weights and extend the run of the arena's
-    LAST block — the all-zero sentinel ``fuse_bucketed`` always emits last —
-    with ``start=0``, so the grouped-matmul revisit invariant (unbroken
-    chunk run per block, DESIGN.md §1) holds and the sentinel stays zero.
-    Padding rows are simply appended: no chunk references them and the
-    output gather never reads them, so they need no initializing chunk.
-    ``nnz`` is reset to −1 (unknown): batches of one shape bucket differ in
-    nnz, and a static nnz would split the jit cache per batch.
-    """
-    c, br, ec = f.nbr.shape
-    r = f.n_arena_rows
-    assert n_rows % br == 0 and n_rows >= r and n_chunks >= c
-    pad_chunks = n_chunks - c
-    sentinel = r // br - 1
-    zpad = lambda a, n, dt: np.concatenate(
-        [np.asarray(a), np.zeros((n,) + np.asarray(a).shape[1:], dt)])
-    eid = None
-    if f.eid is not None:        # learnable-edge arena: padding slots → −1
-        eid = np.concatenate(
-            [np.asarray(f.eid),
-             np.full((pad_chunks, br, ec), -1, np.int32)])
-    return FusedELL(
-        nbr=zpad(f.nbr, pad_chunks, np.int32),
-        w=zpad(f.w, pad_chunks, np.float32),
-        block_of=np.concatenate([np.asarray(f.block_of),
-                                 np.full(pad_chunks, sentinel, np.int32)]),
-        start=np.concatenate([np.asarray(f.start),
-                              np.zeros(pad_chunks, np.int32)]),
-        rows=zpad(f.rows, n_rows - r, np.int32),
-        gather=np.asarray(f.gather),
-        n_dst=f.n_dst, n_src=f.n_src, nnz=-1,
-        row_block=f.row_block, chunk=f.chunk, eid=eid)
+# Shape-bucket-stable arena padding now lives with the packers
+# (graphs/ell.py::pad_fused_arena) so the relation-plan builder shares it;
+# kept under the historical private name for this module's call sites.
+_pad_fused_arena = pad_fused_arena
 
 
 def _chunk_for(chunk, etype: str) -> Optional[int]:
@@ -275,6 +268,7 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                    layout: Optional[BucketLayout] = None,
                    n_real: Optional[int] = None,
                    with_eids: bool = False,
+                   with_plan: Optional[bool] = None,
                    bounds: Sequence[int] = DEFAULT_BOUNDS) -> CollatedBatch:
     """Merge member graphs into one block-diagonal :class:`CircuitGraph`.
 
@@ -301,6 +295,17 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
         weights through ``ops.drspmm_learnable`` — the batch weight vector
         is the concatenation of the members' canonical vectors
         (:meth:`CollatedBatch.concat_edge_weights`).  Requires ``fused``.
+        With ``quantize``, the per-edge-type nnz is rounded up the arena
+        grid (and floored at the bucket's running max when a ``layout``
+        tracks it): the traced weight vector is zero-padded to that size,
+        so mixed learnable-weight streams add one jit entry per GRID POINT
+        instead of one per distinct nnz.
+    with_plan : attach a :class:`RelationPlan` super-arena pair to the
+        collated graph (``batch.graph.plan``) so hetero layers run ONE
+        dispatch per direction-group even with the graph traced
+        (DESIGN.md §9).  Defaults to ``fused``; the plan's per-relation
+        segments are quantized/floored under the same ``layout`` as the
+        per-edge-type arenas, so plan signatures are bucket-stable.
     """
     assert graphs, "collate_graphs needs at least one member"
     n_real = len(graphs) if n_real is None else n_real
@@ -336,10 +341,16 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
 
     # --- merged COO per edge type, member weights carried through ---
     assert not (with_eids and not fused), "with_eids requires fused collation"
+    if with_plan is None:
+        with_plan = fused
+    assert not (with_plan and not fused), "with_plan requires fused collation"
     off_of = {"cell": [m.cell_off for m in members],
               "net": [m.net_off for m in members]}
     edges = {}
+    coo_of: Dict[str, tuple] = {}
+    bucketed_of: Dict[str, tuple] = {}
     edge_nnz: Dict[str, int] = {}
+    edge_nnz_exact: Dict[str, int] = {}
     edge_eid_offsets: Dict[str, Tuple[int, ...]] = {}
     for et in EDGE_TYPES:
         s_t, d_t = EDGE_SCHEMA[et]
@@ -354,15 +365,20 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
         src = np.concatenate(ss)
         w = np.concatenate(ws)
         n_dst, n_src = sizes_pad[d_t], sizes_pad[s_t]
+        coo_of[et] = (dst, src, w)
         if fused:
+            # one degree-bucketed pack per direction, SHARED by the
+            # per-edge-type arena and the relation plan (fusing at each
+            # consumer's chunk width is memoized per (packing, width))
+            bucketed = {"fwd": pack_ell(dst, src, w, n_dst, n_src, bounds),
+                        "bwd": pack_ell(src, dst, w, n_src, n_dst, bounds)}
+            bucketed_of[et] = (bucketed["fwd"], bucketed["bwd"])
             packed = {}
-            for dname, (d_, s_, nd, ns) in {
-                    "fwd": (dst, src, n_dst, n_src),
-                    "bwd": (src, dst, n_src, n_dst)}.items():
+            for dname in ("fwd", "bwd"):
                 ck = layout.chunk.get((et, dname)) if layout else None
                 if ck is None:
                     ck = _chunk_for(chunk, et)
-                a = pack_fused(d_, s_, w, nd, ns, bounds, chunk=ck)
+                a = fuse_bucketed(bucketed[dname], chunk=ck)
                 if layout is not None:
                     layout.chunk.setdefault((et, dname), a.chunk)
                 if quantize:
@@ -388,7 +404,25 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                     assert ea.nbr.shape == a.nbr.shape, (et, dname)
                     packed[dname] = dataclasses.replace(
                         a, eid=np.asarray(ea.eid))
-                edge_nnz[et] = et_nnz
+                # Shape-bucketed nnz (ROADMAP): the learnable weight vector
+                # is a TRACED operand sized by nnz, so a distinct nnz per
+                # batch means one jit entry per batch.  Round it up the
+                # arena grid (floored at the bucket's running max) and let
+                # concat_edge_weights zero-pad — padded ids are never
+                # gathered, so the pad slots are inert.
+                nnz_pad = et_nnz
+                if quantize:
+                    nnz_pad = quantize_up(et_nnz, arena_bits, minimum=8)
+                    if layout is not None:
+                        floor = layout.min_nnz.get(et)
+                        if floor is None:   # first batch: headroom, like
+                            floor = quantize_up(   # the chunk-count floors
+                                int(np.ceil(et_nnz * ARENA_HEADROOM)),
+                                arena_bits, minimum=8)
+                        nnz_pad = max(nnz_pad, floor)
+                        layout.min_nnz[et] = nnz_pad
+                edge_nnz[et] = nnz_pad
+                edge_nnz_exact[et] = et_nnz
                 edge_eid_offsets[et] = tuple(
                     int(o) for o in np.cumsum([0] + m_nnz[:-1]))
             adj, adj_t = packed["fwd"], packed["bwd"]
@@ -396,13 +430,60 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
             adj, adj_t = pack_ell_pair(dst, src, w, n_dst, n_src, bounds)
         edges[et] = EdgeSet(adj=adj, adj_t=adj_t)
 
+    plan = None
+    if with_plan:
+        plan = _build_batch_plan(coo_of, bucketed_of, sizes_pad, quantize,
+                                 arena_bits, layout, bounds)
     graph = CircuitGraph(n_cell=n_cell_pad, n_net=n_net_pad, edges=edges,
                          x_cell=jnp.asarray(x_cell), x_net=jnp.asarray(x_net),
-                         y_cell=jnp.asarray(y_cell))
+                         y_cell=jnp.asarray(y_cell), plan=plan)
     return CollatedBatch(graph=graph, members=tuple(members),
                          cell_weight=jnp.asarray(w_cell), n_real=n_real,
-                         edge_nnz=edge_nnz,
+                         edge_nnz=edge_nnz, edge_nnz_exact=edge_nnz_exact,
                          edge_eid_offsets=edge_eid_offsets)
+
+
+def _build_batch_plan(coo_of: Dict[str, tuple],
+                      bucketed_of: Dict[str, tuple],
+                      sizes_pad: Dict[str, int],
+                      quantize: bool, arena_bits: int,
+                      layout: Optional[BucketLayout],
+                      bounds: Sequence[int]) -> RelationPlan:
+    """RelationPlan over the batch's merged edge sets, quantized for
+    signature stability: the super-arena's shared chunk width per direction
+    is pinned to the bucket's first batch (``BucketLayout.plan_chunk``) and
+    every relation segment's chunk count is padded up the arena grid and
+    floored at the bucket's running max (``plan_min_chunks``) — the same
+    discipline ``_quantize_arena`` applies to the per-edge-type arenas.
+    Row counts take the deterministic cap, so they never vary in-bucket."""
+    relations = [(et,) + EDGE_SCHEMA[et] + coo_of[et]
+                 for et in EDGE_TYPES if et in coo_of]
+    chunk = None
+    if layout is not None and layout.plan_chunk:
+        chunk = (layout.plan_chunk.get("fwd"), layout.plan_chunk.get("bwd"))
+
+    pad = None
+    if quantize:
+        def pad(et, dname, arena):
+            r_cap = _arena_row_cap(arena.n_dst, bounds, arena.row_block)
+            c_pad = quantize_up(arena.n_chunks, arena_bits, minimum=1)
+            if layout is not None:
+                floor = layout.plan_min_chunks.get((et, dname))
+                if floor is None:   # first batch of the bucket: headroom
+                    floor = quantize_up(
+                        int(np.ceil(arena.n_chunks * ARENA_HEADROOM)),
+                        arena_bits, minimum=1)
+                c_pad = max(c_pad, floor)
+                layout.plan_min_chunks[(et, dname)] = c_pad
+            return c_pad, r_cap
+
+    plan = build_relation_plan(relations, sizes_pad, bounds=bounds,
+                               chunk=chunk, pad=pad,
+                               packed=bucketed_of or None)
+    if layout is not None:
+        layout.plan_chunk.setdefault("fwd", plan.fwd.chunk)
+        layout.plan_chunk.setdefault("bwd", plan.bwd.chunk)
+    return plan
 
 
 def _quantize_arena(f: FusedELL, arena_bits: int, bounds: Sequence[int],

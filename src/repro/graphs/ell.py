@@ -279,6 +279,14 @@ class FusedELL:
     # vector (nnz,) gathers straight into arena layout.  ``None`` for
     # fixed-weight packings.
     eid: jax.Array | None = None
+    # Relation id per chunk for relation-fused super-arenas
+    # (:func:`build_relation_plan`): (C,) int32 index into the plan's
+    # segment tuple.  The kernels never read it — relation selection is
+    # baked into ``nbr``/``block_of``/``rows`` offsets at pack time — but
+    # it makes every chunk's provenance auditable (segment round-trip
+    # tests, bench dispatch accounting).  ``None`` for single-relation
+    # arenas.
+    rel: jax.Array | None = None
 
     @property
     def n_chunks(self) -> int:
@@ -514,3 +522,304 @@ def pack_fused_eid_pair(dst: np.ndarray, src: np.ndarray,
     return (fuse_bucketed(fwd, row_block, ck_f, eids=True),
             fuse_bucketed(bwd, row_block, ck_b, eids=True),
             order, nnz)
+
+
+def pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
+    """Pad a fused arena to (n_chunks, ·, ·) chunks / n_rows arena rows.
+
+    Padding chunks carry zero weights and extend the run of the arena's
+    LAST block — the all-zero sentinel ``fuse_bucketed`` always emits last —
+    with ``start=0``, so the grouped-matmul revisit invariant (unbroken
+    chunk run per block, DESIGN.md §1) holds and the sentinel stays zero.
+    Padding rows are simply appended: no chunk references them and the
+    output gather never reads them, so they need no initializing chunk.
+    ``nnz`` is reset to −1 (unknown): batches of one shape bucket differ in
+    nnz, and a static nnz would split the jit cache per batch.
+
+    Used by the block-diagonal collator (graphs/collate.py) for
+    shape-bucket-stable batch arenas, and by :func:`build_relation_plan`
+    for bucket-stable per-relation segments of a super-arena.
+    """
+    c, br, ec = f.nbr.shape
+    r = f.n_arena_rows
+    assert n_rows % br == 0 and n_rows >= r and n_chunks >= c
+    pad_chunks = n_chunks - c
+    sentinel = r // br - 1
+    zpad = lambda a, n, dt: np.concatenate(
+        [np.asarray(a), np.zeros((n,) + np.asarray(a).shape[1:], dt)])
+    eid = None
+    if f.eid is not None:        # learnable-edge arena: padding slots → −1
+        eid = np.concatenate(
+            [np.asarray(f.eid),
+             np.full((pad_chunks, br, ec), -1, np.int32)])
+    rel = None
+    if f.rel is not None:        # padding chunks stay in the last relation
+        rel = np.concatenate(
+            [np.asarray(f.rel),
+             np.full(pad_chunks, int(np.asarray(f.rel)[-1]), np.int32)])
+    return FusedELL(
+        nbr=zpad(f.nbr, pad_chunks, np.int32),
+        w=zpad(f.w, pad_chunks, np.float32),
+        block_of=np.concatenate([np.asarray(f.block_of),
+                                 np.full(pad_chunks, sentinel, np.int32)]),
+        start=np.concatenate([np.asarray(f.start),
+                              np.zeros(pad_chunks, np.int32)]),
+        rows=zpad(f.rows, n_rows - r, np.int32),
+        gather=np.asarray(f.gather),
+        n_dst=f.n_dst, n_src=f.n_src, nnz=-1,
+        row_block=f.row_block, chunk=f.chunk, eid=eid, rel=rel)
+
+
+# ---------------------------------------------------------------------------
+# RelationPlan — cross-relation super-arena (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# A hetero layer's message passing is one DR-SpMM per edge-type direction;
+# PR 1–4 fused each direction into ONE dispatch but still walked the
+# directions serially in Python.  The super-arena collapses that loop: every
+# relation's fused arena is concatenated into one (C_total, BR, Ec) arena
+# whose metadata bakes the relation routing in —
+#
+#   * ``nbr``     += the relation's source-type offset in the type-concat
+#                    source slab  [x_cell; x_net]
+#   * ``rows``    += (fwd) the relation's row offset in the concatenated
+#                    output / (bwd) its source-type offset
+#   * ``block_of``+= the preceding relations' block counts
+#   * ``gather``   = per-relation gathers shifted by the preceding
+#                    relations' arena rows
+#
+# so the §1 kernels run UNCHANGED over the whole direction-group: one
+# pallas_call forward, one transposed pallas_call backward, per layer.
+
+@dataclasses.dataclass(frozen=True)
+class RelationSegment:
+    """Where one relation lives inside a :class:`RelationPlan` (all static:
+    part of the plan's pytree aux data, stable within a shape bucket)."""
+
+    etype: str
+    src_type: str
+    dst_type: str
+    n_dst: int                   # relation destination rows
+    n_src: int                   # relation source rows
+    out_off: int                 # row offset in the concat output / gy slab
+    src_out_off: int             # row offset in the concat per-relation dx
+    fwd_chunks: Tuple[int, int]  # [lo, hi) chunk range in the fwd arena
+    bwd_chunks: Tuple[int, int]
+    fwd_rows: Tuple[int, int]    # [lo, hi) arena-row range in the fwd arena
+    bwd_rows: Tuple[int, int]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RelationPlan:
+    """One hetero layer's whole message passing as a fwd/bwd super-arena
+    pair plus the relation segment table.
+
+    ``fwd`` aggregates every relation in ONE dispatch over the type-concat
+    source slab (n_src = Σ node-type sizes) into the relation-concat output
+    (n_dst = Σ per-relation destinations); ``bwd`` is the transposed
+    super-arena over the concatenated output cotangents (its ``gather``
+    yields the per-relation dx concat, summed per source type by the op).
+    Consumed by :func:`repro.kernels.ops.drspmm_multi`.
+    """
+
+    fwd: FusedELL
+    bwd: FusedELL
+    # Type-concat source id per bwd ARENA row: the §2 xi gather reads
+    # ``x_idx_concat[bwd_src_rows]``.  Kept separate from ``bwd.rows`` so
+    # the bwd arena stays self-consistent over the relation-concat dx space
+    # (``rows``/``gather`` are inverse maps there, ``to_dense`` is the
+    # block matrix of the transposed relations).
+    bwd_src_rows: jax.Array
+    segments: Tuple[RelationSegment, ...] = dataclasses.field(
+        metadata=dict(static=True))
+    src_types: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True))   # node types, source-concat order
+    src_off: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True))   # per-type offset in the source concat
+    src_sizes: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True))   # per-type node count
+
+    @property
+    def n_src_total(self) -> int:
+        return self.fwd.n_src
+
+    @property
+    def n_out_total(self) -> int:
+        return self.fwd.n_dst
+
+    def segment(self, etype: str) -> RelationSegment:
+        for s in self.segments:
+            if s.etype == etype:
+                return s
+        raise KeyError(etype)
+
+
+def pick_chunk_multi(packings: Sequence[BucketedELL], row_block: int = None,
+                     candidates: Sequence[int] = CHUNK_CANDIDATES) -> int:
+    """Slot-minimizing SHARED chunk width for a super-arena.
+
+    A super-arena is one uniform (C, BR, Ec) arena, so all relations must
+    agree on Ec; this reuses :func:`pick_chunk`'s per-relation degree
+    histogram (``_block_widths``) and minimizes the SUMMED slot count
+    Σ_relations Σ_blocks BR·Ec·ceil(bw/Ec).  Ties go to the wider chunk,
+    matching ``pick_chunk``."""
+    if row_block is None:
+        row_block = FUSED_ROW_BLOCK
+    bws = [bw for p in packings for bw in _block_widths(p, row_block)]
+
+    def slots(c):
+        return sum(row_block * c * max(1, -(-bw // c)) for bw in bws)
+
+    return min(candidates, key=lambda c: (slots(c), -c))
+
+
+def _concat_arenas(arenas: Sequence[FusedELL], nbr_offs: Sequence[int],
+                   rows_offs: Sequence[int], n_dst: int, n_src: int
+                   ) -> Tuple[FusedELL, list]:
+    """Concatenate per-relation fused arenas into one super-arena.
+
+    ``nbr_offs[i]``/``rows_offs[i]`` are added to arena i's neighbor ids /
+    row ids (padding slots get offset too — they carry zero weights, so
+    pointing them at row ``off`` instead of 0 is equally inert and keeps
+    every id in range).  Each arena keeps its own sentinel block, so the
+    per-relation gathers stay valid after shifting.  Returns the super
+    arena plus per-relation (chunk_off, row_off) pairs for the segment
+    table."""
+    br = arenas[0].row_block
+    ck = arenas[0].chunk
+    assert all(a.row_block == br and a.chunk == ck for a in arenas), \
+        "super-arena members must share (row_block, chunk)"
+    offs, c_off, r_off = [], 0, 0
+    nbr, w, blk, start, rows, gather, rel = [], [], [], [], [], [], []
+    for i, (a, no, ro) in enumerate(zip(arenas, nbr_offs, rows_offs)):
+        offs.append((c_off, r_off))
+        nbr.append(np.asarray(a.nbr) + np.int32(no))
+        w.append(np.asarray(a.w))
+        blk.append(np.asarray(a.block_of) + np.int32(r_off // br))
+        start.append(np.asarray(a.start))
+        rows.append(np.asarray(a.rows) + np.int32(ro))
+        gather.append(np.asarray(a.gather) + np.int32(r_off))
+        rel.append(np.full(a.n_chunks, i, np.int32))
+        c_off += a.n_chunks
+        r_off += a.n_arena_rows
+    nnzs = [a.nnz for a in arenas]
+    fused = FusedELL(
+        nbr=np.concatenate(nbr), w=np.concatenate(w),
+        block_of=np.concatenate(blk), start=np.concatenate(start),
+        rows=np.concatenate(rows), gather=np.concatenate(gather),
+        n_dst=n_dst, n_src=n_src,
+        nnz=-1 if any(n < 0 for n in nnzs) else int(sum(nnzs)),
+        row_block=br, chunk=ck, rel=np.concatenate(rel))
+    return fused, offs
+
+
+def build_relation_plan(relations: Sequence[tuple], n_of: Dict[str, int], *,
+                        bounds: Sequence[int] = DEFAULT_BOUNDS,
+                        row_block: int = None,
+                        chunk: Union[int, None, Tuple] = None,
+                        pad: Dict[str, Dict[str, Tuple[int, int]]] = None,
+                        packed: Dict[str, Tuple[BucketedELL,
+                                                BucketedELL]] = None
+                        ) -> RelationPlan:
+    """Pack every relation of a hetero layer into one fwd/bwd super-arena.
+
+    Parameters
+    ----------
+    relations : sequence of ``(etype, src_type, dst_type, dst, src, w)``
+        COO edge lists per relation; the sequence order fixes the segment
+        (and output-concat) order.
+    n_of : ordered ``{node_type: count}`` — the order fixes the source
+        concat layout ``[type0; type1; …]`` the caller's CBSR operands are
+        stacked in.
+    chunk : shared arena chunk width — an int for both directions, a
+        ``(fwd, bwd)`` tuple, or ``None`` to pick the summed-slot-minimizing
+        width per direction from the relations' degree histograms
+        (:func:`pick_chunk_multi`).  The collator pins it per shape bucket.
+    pad : optional ``{etype: {"fwd"|"bwd": (n_chunks, n_rows)}}`` — or a
+        callable ``(etype, "fwd"|"bwd", arena) -> (n_chunks, n_rows)`` —
+        padding each relation's sub-arena to bucket-stable dims BEFORE
+        concatenation (:func:`pad_fused_arena`), so collated plans of one
+        shape bucket share a signature (the collator passes a closure over
+        its quantization grid + ``BucketLayout`` floors).
+    packed : optional ``{etype: (fwd_bucketed, bwd_bucketed)}`` — reuse
+        already-built degree-bucketed packings instead of re-running
+        ``pack_ell`` (the collator shares the pair it packs for the
+        per-edge-type arenas; fusing at the plan's shared chunk width is
+        memoized separately per (packing, width)).
+    """
+    if row_block is None:
+        row_block = FUSED_ROW_BLOCK
+    src_types = tuple(n_of)
+    src_off, off = {}, 0
+    for t in src_types:
+        src_off[t] = off
+        off += int(n_of[t])
+    n_src_total = off
+
+    # Plan packing may run lazily inside a jit trace (first call of a
+    # jitted layer over a concrete graph): force the pack_ell slabs to be
+    # concrete there — otherwise their jnp leaves become traced constants
+    # the host-side fuser cannot np.asarray.  The resulting plan stores
+    # host numpy leaves only (trace-safe constants, like _FUSE_CACHE's).
+    with jax.ensure_compile_time_eval():
+        if packed is not None:
+            fwd_b = [packed[r[0]][0] for r in relations]
+            bwd_b = [packed[r[0]][1] for r in relations]
+        else:
+            fwd_b = [pack_ell(dst, src, w, int(n_of[dt]), int(n_of[st]),
+                              bounds)
+                     for _et, st, dt, dst, src, w in relations]
+            bwd_b = [pack_ell(src, dst, w, int(n_of[st]), int(n_of[dt]),
+                              bounds)
+                     for _et, st, dt, dst, src, w in relations]
+        ck_f, ck_b = chunk if isinstance(chunk, tuple) else (chunk, chunk)
+        if ck_f is None:
+            ck_f = pick_chunk_multi(fwd_b, row_block)
+        if ck_b is None:
+            ck_b = pick_chunk_multi(bwd_b, row_block)
+        fwd_a = [fuse_bucketed(b, row_block, ck_f) for b in fwd_b]
+        bwd_a = [fuse_bucketed(b, row_block, ck_b) for b in bwd_b]
+    if pad is not None:
+        target = pad if callable(pad) else (lambda et, d, _a: pad[et][d])
+        fwd_a = [pad_fused_arena(a, *target(r[0], "fwd", a))
+                 for a, r in zip(fwd_a, relations)]
+        bwd_a = [pad_fused_arena(a, *target(r[0], "bwd", a))
+                 for a, r in zip(bwd_a, relations)]
+
+    out_offs = np.cumsum([0] + [a.n_dst for a in fwd_a])      # output concat
+    src_out_offs = np.cumsum([0] + [a.n_dst for a in bwd_a])  # dx concat
+    # fwd: sources live in the type-concat slab, outputs in the relation
+    # concat; bwd: "sources" are the fwd outputs (gy concat), rows are
+    # type-concat source ids (the §2 xi gather reads them).
+    fwd, f_offs = _concat_arenas(
+        fwd_a,
+        nbr_offs=[src_off[r[1]] for r in relations],
+        rows_offs=[int(o) for o in out_offs[:-1]],
+        n_dst=int(out_offs[-1]), n_src=n_src_total)
+    bwd, b_offs = _concat_arenas(
+        bwd_a,
+        nbr_offs=[int(o) for o in out_offs[:-1]],
+        rows_offs=[int(o) for o in src_out_offs[:-1]],
+        n_dst=int(src_out_offs[-1]), n_src=int(out_offs[-1]))
+    bwd_src_rows = np.concatenate(
+        [np.asarray(a.rows) + np.int32(src_off[r[1]])
+         for a, r in zip(bwd_a, relations)])
+
+    segments = []
+    for i, (et, st, dt, _d, _s, _w) in enumerate(relations):
+        fa, ba = fwd_a[i], bwd_a[i]
+        (fc, fr), (bc, brr) = f_offs[i], b_offs[i]
+        segments.append(RelationSegment(
+            etype=et, src_type=st, dst_type=dt,
+            n_dst=fa.n_dst, n_src=fa.n_src,
+            out_off=int(out_offs[i]), src_out_off=int(src_out_offs[i]),
+            fwd_chunks=(fc, fc + fa.n_chunks),
+            bwd_chunks=(bc, bc + ba.n_chunks),
+            fwd_rows=(fr, fr + fa.n_arena_rows),
+            bwd_rows=(brr, brr + ba.n_arena_rows)))
+    return RelationPlan(fwd=fwd, bwd=bwd, bwd_src_rows=bwd_src_rows,
+                        segments=tuple(segments),
+                        src_types=src_types,
+                        src_off=tuple(src_off[t] for t in src_types),
+                        src_sizes=tuple(int(n_of[t]) for t in src_types))

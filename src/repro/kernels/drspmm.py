@@ -373,6 +373,56 @@ def drspmm_bwd_fused(fused_t: FusedELL, gy: jax.Array, xi_arena: jax.Array,
     )(fused_t.block_of, fused_t.start, fused_t.nbr, fused_t.w, gy, xi_arena)
 
 
+# ---------------------------------------------------------------------------
+# relation-fused super-arena executors — ONE pallas_call for a hetero layer's
+# WHOLE direction-group (every edge-type direction at once, DESIGN.md §9).
+#
+# A RelationPlan (graphs/ell.py) bakes the relation routing into the §1
+# metadata: `nbr` is pre-offset into the type-concat source slab, `block_of`
+# spans the per-relation chunk segments, and the output rows are the
+# relation-concat arena.  The kernel bodies above therefore run UNCHANGED —
+# relation selection costs zero in-kernel work; what these wrappers add is
+# the super-arena contract (a `rel` chunk table must be present) and, for
+# the backward, the arena-ordered xi gather at the plan's type-concat source
+# row map.
+# ---------------------------------------------------------------------------
+
+def drspmm_fwd_multi(super_fwd: FusedELL, x_vals: jax.Array,
+                     x_idx: jax.Array, dim: int,
+                     *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered Y for ALL relations of a direction-group in ONE
+    ``pallas_call``.
+
+    ``x_vals``/``x_idx`` are the type-concat CBSR operands (every source
+    node type stacked, k padded to the group max); read the relation-concat
+    output with ``jnp.take(y, super_fwd.gather, 0)`` and slice per relation
+    at the plan's ``out_off`` offsets.
+    """
+    assert super_fwd.rel is not None, \
+        "drspmm_fwd_multi needs a relation-fused super-arena (RelationPlan)"
+    return drspmm_fwd_fused(super_fwd, x_vals, x_idx, dim,
+                            interpret=interpret)
+
+
+def drspmm_bwd_multi(super_bwd: FusedELL, bwd_src_rows: jax.Array,
+                     gy_cat: jax.Array, x_idx: jax.Array,
+                     *, interpret: bool | None = None) -> jax.Array:
+    """Arena-ordered dV for ALL relations in ONE transposed ``pallas_call``.
+
+    ``gy_cat`` is the concatenated per-relation output cotangent (the
+    forward's relation-concat order); ``bwd_src_rows`` maps bwd arena rows
+    to type-concat source ids, so the §2 sampled backward reads each arena
+    row's own CBSR indices out of the type-concat ``x_idx``.  Read the
+    relation-concat dV with ``jnp.take(dv, super_bwd.gather, 0)`` and sum
+    segments per source type (a node type feeding several relations — cell
+    feeds both ``near`` and ``pin`` — accumulates across its segments).
+    """
+    assert super_bwd.rel is not None, \
+        "drspmm_bwd_multi needs a relation-fused super-arena (RelationPlan)"
+    xi_arena = jnp.take(x_idx, jnp.asarray(bwd_src_rows), axis=0)
+    return drspmm_bwd_fused(super_bwd, gy_cat, xi_arena, interpret=interpret)
+
+
 def _fused_dense_kernel(blk_ref, st_ref, nbr_ref, w_ref, x_ref, out_ref):
     c = pl.program_id(1)
 

@@ -24,20 +24,25 @@ ELL packing, exactly as Alg. 2 reuses the forward's CBSR indices.
 Fused packings are derived lazily from the BucketedELL arguments via
 ``fuse_bucketed`` (host-side, memoized per packing), so every caller of the
 bucketed API gets the single-dispatch path by flipping ``backend`` alone.
+
+``drspmm_multi`` lifts the same contract one level: every edge-type
+direction of a hetero layer runs over a :class:`RelationPlan` super-arena
+as ONE dispatch per direction-group — one forward, one transposed backward
+— instead of one per relation (DESIGN.md §9).
 """
 
 from __future__ import annotations
 
 import functools
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.ell import (BucketedELL, ELLBucket, FusedELL, decode_eids,
-                              fuse_bucketed)
+from repro.graphs.ell import (BucketedELL, ELLBucket, FusedELL, RelationPlan,
+                              decode_eids, fuse_bucketed)
 from repro.kernels import drspmm as _k
 from repro.kernels import learnable as _learn
 from repro.kernels import ref as _ref
@@ -49,6 +54,20 @@ Backend = Literal["pallas_fused", "xla_fused", "pallas", "xla", "dense"]
 # plain XLA is the default there.
 DEFAULT_BACKEND: Backend = (
     "pallas_fused" if jax.default_backend() == "tpu" else "xla_fused")
+
+# Trace-time dispatch log: every fused-family executor issue appends a
+# "family:kind" tag while its op body runs (i.e. while TRACING under jit —
+# compiled replays don't re-run Python, so count deltas around an explicit
+# trace such as ``jax.make_jaxpr``).  This is how tests and bench smoke
+# assert the one-dispatch-per-direction-group property for the xla family,
+# where jaxpr ``pallas_call`` counting has nothing to count.  Bounded: a
+# long-lived serve loop retraces per (bucket, device) compile and eviction
+# return, and nothing outside tests ever drains the log.
+FUSED_DISPATCH_LOG: "deque[str]" = deque(maxlen=4096)
+
+
+def _record_dispatch(tag: str) -> None:
+    FUSED_DISPATCH_LOG.append(tag)
 
 
 def _fused_of(adj) -> FusedELL:
@@ -126,12 +145,18 @@ def _fwd_fused_xla(f: FusedELL, x_vals, x_idx, dim: int):
     return jnp.take(y, jnp.asarray(f.gather), axis=0)
 
 
-def _bwd_fused_xla(ft: FusedELL, gy, x_idx):
+def _bwd_fused_xla(ft: FusedELL, gy, x_idx, rows=None):
+    """``rows`` overrides the arena-row → operand-row map used for the xi
+    gather (default ``ft.rows``); the super-arena backward passes the
+    plan's type-concat map (``RelationPlan.bwd_src_rows`` — ``ft.rows``
+    live in the relation-concat dx space there)."""
     tnbr = jnp.asarray(ft.nbr)                        # (C, BR, Ec) targets
     tw = jnp.asarray(ft.w)
     k = x_idx.shape[1]
     g = jnp.take(gy, tnbr, axis=0)                    # (C, BR, Ec, D)
-    xi_arena = jnp.take(x_idx, jnp.asarray(ft.rows), axis=0)  # (R_arena, k)
+    xi_arena = jnp.take(
+        x_idx, jnp.asarray(ft.rows if rows is None else rows),
+        axis=0)                                       # (R_arena, k)
     xi_blocks = jnp.take(xi_arena, _arena_rows(ft), axis=0)   # (C, BR, k)
     sampled = jnp.take_along_axis(
         g, jnp.broadcast_to(xi_blocks[:, :, None, :], g.shape[:3] + (k,)),
@@ -160,8 +185,10 @@ def _fwd_impl(adj: BucketedELL, x_vals, x_idx, dim: int, backend: Backend):
     if backend == "dense":
         return _ref.drspmm_fwd_ref(adj, x_vals, x_idx, dim)
     if backend == "xla_fused":
+        _record_dispatch("xla:fwd")
         return _fwd_fused_xla(_fused_of(adj), x_vals, x_idx, dim)
     if backend == "pallas_fused":
+        _record_dispatch("pallas:fwd")
         f = _fused_of(adj)
         ya = _k.drspmm_fwd_fused(f, x_vals, x_idx, dim)   # fp32 arena
         return jnp.take(ya, f.gather, axis=0).astype(x_vals.dtype)
@@ -180,8 +207,10 @@ def _bwd_impl(adj_t: BucketedELL, gy, x_idx, backend: Backend):
         return _ref.drspmm_bwd_ref(adj_t, gy, x_idx)
     n, k = x_idx.shape
     if backend == "xla_fused":
+        _record_dispatch("xla:bwd")
         return _bwd_fused_xla(_fused_of(adj_t), gy, x_idx)
     if backend == "pallas_fused":
+        _record_dispatch("pallas:bwd")
         ft = _fused_of(adj_t)
         xi_arena = jnp.take(x_idx, ft.rows, axis=0)   # (R_arena, k)
         ga = _k.drspmm_bwd_fused(ft, gy, xi_arena)    # fp32 arena
@@ -243,8 +272,10 @@ def _spmm_fwd(adj: BucketedELL, x, backend: Backend):
     if backend == "dense":
         return _ref.spmm_dense_ref(adj, x)
     if backend == "xla_fused":
+        _record_dispatch("xla:spmm")
         return _spmm_fused_xla(_fused_of(adj), x)
     if backend == "pallas_fused":
+        _record_dispatch("pallas:spmm")
         f = _fused_of(adj)
         ya = _k.spmm_dense_fused(f, x)                # fp32 arena
         return jnp.take(ya, f.gather, axis=0).astype(x.dtype)
@@ -527,3 +558,217 @@ def drspmm_learnable(fwd, bwd, nnz: int, w_canon: jax.Array,
         fwd, bwd = _fused_eid_of(fwd), _fused_eid_of(bwd)
     return _learnable_executable(fwd, bwd, nnz, dim, backend)(
         w_canon, x_vals, x_idx)
+
+
+# ---------------------------------------------------------------------------
+# drspmm_multi — one dispatch per DIRECTION-GROUP: every edge-type direction
+# of a hetero layer runs over a RelationPlan super-arena (graphs/ell.py),
+# collapsing the per-relation Python loop the serial hetero_conv pays into
+# one forward and one transposed-backward executor call per layer
+# (DESIGN.md §9).
+# ---------------------------------------------------------------------------
+
+def _multi_effective_backend(backend: Backend) -> Backend:
+    """Same family rules as :func:`_effective_backend`: a RelationPlan is
+    always pre-fused (super-arenas have no bucket slabs to loop over), so
+    per-bucket names upgrade to the fused executor of the matching family;
+    ``dense`` keeps the oracle.  The traced-downgrade counterpart lives in
+    :func:`drspmm_multi` itself: a plan whose leaves are jit tracers skips
+    the id-keyed executor cache and traces inline (the outer jit owns the
+    caching), since id-keying traced pytrees would be meaningless."""
+    if backend in ("pallas", "pallas_fused"):
+        return "pallas_fused"
+    if backend == "dense":
+        return "dense"
+    return "xla_fused"
+
+
+def _multi_concat(plan: RelationPlan, vals, idxs):
+    """Stack per-type CBSR operands into the plan's type-concat slab,
+    padding k up to the group max (padded value columns are zero, so they
+    contribute nothing forward; their sampled gradients are sliced off on
+    the way back)."""
+    kmax = max(int(i.shape[1]) for i in idxs)
+    pv, pi = [], []
+    for v, i in zip(vals, idxs):
+        k = int(i.shape[1])
+        if k < kmax:
+            v = jnp.pad(v, ((0, 0), (0, kmax - k)))
+            i = jnp.pad(i, ((0, 0), (0, kmax - k)))
+        pv.append(v)
+        pi.append(i.astype(jnp.int32))
+    return jnp.concatenate(pv), jnp.concatenate(pi), kmax
+
+
+def _split_out(plan: RelationPlan, y_cat):
+    """Relation-concat output → per-relation views (segment order)."""
+    return tuple(y_cat[s.out_off:s.out_off + s.n_dst]
+                 for s in plan.segments)
+
+
+def _dx_cat_to_types(plan: RelationPlan, dx_cat, idxs):
+    """Relation-concat dV → per-type gradients: segments of one source type
+    accumulate (cell feeds both ``near`` and ``pin``), padded k columns are
+    sliced off per type."""
+    outs = []
+    for ti, t in enumerate(plan.src_types):
+        k_t = int(idxs[ti].shape[1])
+        acc = None
+        for s in plan.segments:
+            if s.src_type != t:
+                continue
+            part = dx_cat[s.src_out_off:s.src_out_off + s.n_src]
+            acc = part if acc is None else acc + part
+        if acc is None:
+            acc = jnp.zeros((plan.src_sizes[ti], k_t), dx_cat.dtype)
+        outs.append(acc[:, :k_t])
+    return tuple(outs)
+
+
+def _multi_fwd_impl(plan: RelationPlan, xv, xi, dim: int, backend: Backend):
+    if backend == "pallas_fused":
+        _record_dispatch("pallas:multi_fwd")
+        ya = _k.drspmm_fwd_multi(plan.fwd, xv, xi, dim)       # fp32 arena
+        return jnp.take(ya, jnp.asarray(plan.fwd.gather),
+                        axis=0).astype(xv.dtype)
+    _record_dispatch("xla:multi_fwd")
+    return _fwd_fused_xla(plan.fwd, xv, xi, dim)
+
+
+def _multi_bwd_impl(plan: RelationPlan, gy_cat, xi, backend: Backend):
+    """Relation-concat dV (Σ n_src_r, kmax) — ONE transposed dispatch."""
+    ft = plan.bwd
+    if backend == "pallas_fused":
+        _record_dispatch("pallas:multi_bwd")
+        ga = _k.drspmm_bwd_multi(ft, plan.bwd_src_rows, gy_cat, xi)
+        return jnp.take(ga, jnp.asarray(ft.gather),
+                        axis=0).astype(gy_cat.dtype)
+    _record_dispatch("xla:multi_bwd")
+    return _bwd_fused_xla(ft, gy_cat, xi, rows=plan.bwd_src_rows)
+
+
+def _super_dense_mat(f: FusedELL):
+    """Dense matrix of a (super-)arena built from its own tables — works
+    with traced leaves, unlike the host-side ``to_dense``."""
+    slot_rows = jnp.take(jnp.asarray(f.rows), _arena_rows(f), axis=0)
+    nbr = jnp.asarray(f.nbr)
+    a = jnp.zeros((f.n_dst, f.n_src), jnp.float32)
+    return a.at[jnp.broadcast_to(slot_rows[:, :, None], nbr.shape),
+                nbr].add(jnp.asarray(f.w))
+
+
+def _dx_row_map(plan: RelationPlan) -> np.ndarray:
+    """(Σ n_src_r,) type-concat source id per relation-concat dx row —
+    static segment arithmetic, used by the dense oracle's sampled bwd."""
+    off = dict(zip(plan.src_types, plan.src_off))
+    return np.concatenate([np.arange(s.n_src, dtype=np.int32)
+                           + np.int32(off[s.src_type])
+                           for s in plan.segments])
+
+
+def _build_multi(plan: RelationPlan, dim: int, backend: Backend,
+                 trace_key=None):
+    """Custom-vjp callable over (vals_tuple, idxs_tuple): ONE fused forward
+    dispatch, ONE transposed backward dispatch, per call."""
+
+    def probe():
+        if trace_key is not None:
+            _MULTI_TRACES.append(trace_key)
+
+    if backend == "dense":
+        @jax.custom_vjp
+        def f(vals, idxs):
+            probe()
+            xv, xi, _ = _multi_concat(plan, vals, idxs)
+            n = xv.shape[0]
+            xd = jnp.zeros((n, dim), xv.dtype).at[
+                jnp.arange(n)[:, None], xi].add(xv)
+            return _split_out(plan, _super_dense_mat(plan.fwd) @ xd)
+
+        def f_bwd(idxs, gys):
+            gy_cat = jnp.concatenate(list(gys))
+            g_cat = _super_dense_mat(plan.bwd) @ gy_cat   # (Σ n_src_r, D)
+            _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
+                                            for i in idxs], idxs)
+            xi_dx = jnp.take(xi, jnp.asarray(_dx_row_map(plan)), axis=0)
+            dx_cat = jnp.take_along_axis(g_cat, xi_dx, axis=1)
+            return (_dx_cat_to_types(plan, dx_cat, idxs),
+                    tuple(np.zeros(np.shape(i), jax.dtypes.float0)
+                          for i in idxs))
+    else:
+        @jax.custom_vjp
+        def f(vals, idxs):
+            probe()
+            xv, xi, _ = _multi_concat(plan, vals, idxs)
+            y_cat = _multi_fwd_impl(plan, xv, xi, dim, backend)
+            return _split_out(plan, y_cat)
+
+        def f_bwd(idxs, gys):
+            gy_cat = jnp.concatenate(list(gys))
+            _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
+                                            for i in idxs], idxs)
+            dx_cat = _multi_bwd_impl(plan, gy_cat, xi, backend)
+            return (_dx_cat_to_types(plan, dx_cat, idxs),
+                    tuple(np.zeros(np.shape(i), jax.dtypes.float0)
+                          for i in idxs))
+
+    def f_fwd(vals, idxs):
+        return f(vals, idxs), idxs            # xi is the only residual
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+# Same memoization discipline as the learnable executor (§8.3): the
+# custom-vjp wrapper + jit is built ONCE per (plan identity, dim, backend)
+# in a strong-ref LRU (the jitted closure pins the plan anyway), with a
+# trace probe asserting repeat calls never retrace.
+_MULTI_EXE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_MULTI_EXE_MAX = 64
+_MULTI_TRACES: list = []
+
+
+def _multi_executable(plan: RelationPlan, dim: int, backend: Backend):
+    key = (id(plan), dim, backend)
+    hit = _MULTI_EXE.get(key)
+    if hit is not None and hit[0] is plan:
+        _MULTI_EXE.move_to_end(key)
+        return hit[1]
+    exe = jax.jit(_build_multi(plan, dim, backend, trace_key=key))
+    _MULTI_EXE[key] = (plan, exe)
+    _MULTI_EXE.move_to_end(key)
+    while len(_MULTI_EXE) > _MULTI_EXE_MAX:
+        _MULTI_EXE.popitem(last=False)
+    return exe
+
+
+def drspmm_multi(plan: RelationPlan, cbsr, dim: int, *,
+                 backend: Backend = DEFAULT_BACKEND):
+    """Whole-direction-group DR-SpMM: every relation of a hetero layer in
+    ONE dispatch forward and ONE transposed dispatch backward.
+
+    ``cbsr`` maps each source node type of the plan to its CBSR pair
+    ``{ntype: (vals (n_t, k_t), idx (n_t, k_t))}``; k may differ per type
+    (padded to the group max internally, inert).  Returns ``{etype: y
+    (n_dst_r, dim)}`` with gradients flowing to every type's ``vals``
+    (summed across the relations that consume the type); ``idx`` is
+    structural (float0 cotangent).
+
+    Backend rules mirror ``drspmm``/``drspmm_learnable``: plans are always
+    pre-fused, so per-bucket names upgrade to the fused family
+    (``pallas``→``pallas_fused``, ``xla``→``xla_fused``); ``dense`` is the
+    autograd-free oracle with the Alg.-2 sampled backward.  A concrete plan
+    routes through the id-keyed LRU executor cache
+    (no retrace on repeat calls); a TRACED plan — e.g. a collated serve
+    batch whose graph is a jit argument — is executed inline and cached by
+    the outer jit.  Parity across all five names:
+    tests/test_relation_plan.py.
+    """
+    eff = _multi_effective_backend(backend)
+    vals = tuple(cbsr[t][0] for t in plan.src_types)
+    idxs = tuple(cbsr[t][1] for t in plan.src_types)
+    if isinstance(plan.fwd.nbr, jax.core.Tracer):
+        ys = _build_multi(plan, dim, eff)(vals, idxs)
+    else:
+        ys = _multi_executable(plan, dim, eff)(vals, idxs)
+    return {s.etype: y for s, y in zip(plan.segments, ys)}

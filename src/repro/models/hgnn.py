@@ -4,6 +4,11 @@ DR-CircuitGNN: per-type input Linear → 2 × HeteroConv → per-cell Linear hea
 (congestion regression).  Baselines: 3-layer GCN / GraphSAGE / GAT on the
 homogenized graph (all edges merged, single node space), matching the paper's
 Table 2 comparison protocol.
+
+Each HeteroConv layer dispatches its whole message passing through the
+graph's :class:`~repro.graphs.ell.RelationPlan` when one is available
+(``ops.drspmm_multi`` — one kernel per direction-group, DESIGN.md §9); the
+per-direction serial loop remains the reference (core/hetero_mp.py).
 """
 
 from __future__ import annotations
@@ -16,6 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.drelu import drelu
 from repro.core.hetero_mp import (HeteroLayerParams, HeteroMPConfig,
                                   hetero_conv, init_hetero_layer)
 from repro.graphs.circuit import CircuitGraph
@@ -58,7 +64,6 @@ def drcircuitgnn_forward(params: DRCircuitGNNParams, graph: CircuitGraph,
         h_cell, h_net = hetero_conv(lp, graph, h_cell, h_net, cfg)
         # inter-layer nonlinearity IS D-ReLU (dense form) — the sparsifier
         # doubles as the activation, per the paper's framing.
-        from repro.core.drelu import drelu
         if cfg.use_drelu:
             h_cell = drelu(h_cell, cfg.k_cell)
             h_net = drelu(h_net, cfg.k_net)

@@ -37,7 +37,17 @@ block-diagonal collation (graphs/collate.py) instead:
   batches while devices execute the current ones, one batch in flight per
   device (``core.parallel.prefetch`` in drain mode; an equivalent explicit
   pipeline in the online loop) — the paper's CPU-thread + stream overlap
-  (Sec. 3.4) at batch granularity.
+  (Sec. 3.4) at batch granularity;
+* **params hot-swap** — ``update_params()`` commits fresh per-device
+  replicas between batches (in-flight batches finish on the old weights);
+  every request records the ``params_version`` that served it — the
+  train-then-serve loop without a restart or a recompile.
+
+Collated batches also carry a :class:`~repro.graphs.ell.RelationPlan`
+(``collate_graphs(with_plan=True)``, the default), so each hetero layer of
+the batched forward runs as ONE dispatch per direction-group instead of one
+per edge type (DESIGN.md §9); plan layouts are pinned per bucket in the
+same ``BucketLayout`` as the per-edge-type arenas.
 
 Two serving modes share the pipeline:
 
@@ -94,6 +104,9 @@ class CircuitRequest:
     pred: Optional[np.ndarray] = None     # (n_cell,) congestion in [0, 1]
     key: Optional[tuple] = None           # shape bucket, stamped by submit()
     error: Optional[BaseException] = None  # set when the batch failed
+    # which params generation served this request (update_params bumps it);
+    # stamped at dispatch, so callers can tell pre- from post-swap results
+    params_version: int = 0
 
     @property
     def latency_ms(self) -> float:
@@ -151,6 +164,7 @@ class CircuitServeEngine:
         # "device_put the batch to slot i, call with replica i"
         self._params_of = tuple(jax.device_put(params, d)
                                 for d in self.ring.devices)
+        self._params_version = 0
         self.queue: Deque[CircuitRequest] = deque()
         self.finished: Dict[int, CircuitRequest] = {}
         # latency stats live in their own bounded window so trimming
@@ -321,11 +335,16 @@ class CircuitServeEngine:
                 st.sigs.add((sig, dev_idx))
                 self._n_compiles += 1
             self._counters["dispatches_per_device"][dev_idx] += 1
-        out = fwd(self._params_of[dev_idx], graph)    # async dispatch
-        return reqs, batch, out
+            # snapshot replicas + version under the lock so a concurrent
+            # update_params() can't hand this batch replica A and stamp it
+            # version B
+            params_d = self._params_of[dev_idx]
+            version = self._params_version
+        out = fwd(params_d, graph)                    # async dispatch
+        return reqs, batch, out, version
 
     def _complete(self, inflight):
-        reqs, batch, out = inflight
+        reqs, batch, out, version = inflight
         preds = np.asarray(out)                       # device barrier
         now = time.perf_counter()
         with self._done:
@@ -334,6 +353,7 @@ class CircuitServeEngine:
                 # max_finished / result(pop=True) would bound nothing
                 r.pred = preds[m.cell_off:m.cell_off + m.n_cell].copy()
                 r.t_done = now
+                r.params_version = version
                 self.finished[r.rid] = r
                 self._lat_window.append(r.latency_ms)
             if self.max_finished is not None:
@@ -502,6 +522,32 @@ class CircuitServeEngine:
         with self._work:
             self._work.notify_all()
 
+    # --------------------------------------------------------- hot swap
+
+    def update_params(self, params) -> int:
+        """Swap the served model without stopping the loop (the
+        train-then-serve pattern, ROADMAP): new per-device replicas are
+        committed via the same ``_params_of`` isolation every dispatch
+        reads, so batches dispatched after the swap use the new weights
+        while in-flight batches finish on the old ones — no torn batch ever
+        mixes generations (replica + version are snapshotted together under
+        the engine lock at dispatch).  Returns the new version; every
+        request records the version that served it
+        (``result(rid).params_version``).  Params must keep their pytree
+        shapes — the per-bucket jits re-run the existing executables, so a
+        swap costs zero recompiles."""
+        replicas = tuple(jax.device_put(params, d)
+                         for d in self.ring.devices)
+        with self._lock:
+            self.params = params
+            self._params_of = replicas
+            self._params_version += 1
+            return self._params_version
+
+    @property
+    def params_version(self) -> int:
+        return self._params_version
+
     # ------------------------------------------------------------- stats
 
     @property
@@ -543,7 +589,8 @@ class CircuitServeEngine:
                    dispatches_per_device=c["dispatches_per_device"],
                    live_buckets=self.live_buckets,
                    evictions=self.evictions,
-                   live_compiles=live)
+                   live_compiles=live,
+                   params_version=self._params_version)
         sizes = [f._cache_size() for f in fwds
                  if callable(getattr(f, "_cache_size", None))]
         if len(sizes) == len(fwds):

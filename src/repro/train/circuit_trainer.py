@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hetero_mp import HeteroMPConfig
-from repro.graphs.circuit import CircuitGraph
+from repro.core.hetero_mp import HeteroMPConfig, plan_applicable
+from repro.graphs.circuit import CircuitGraph, relation_plan_of
 from repro.graphs.collate import collate_graphs
 from repro.kernels import ops
 from repro.models.hgnn import (DRCircuitGNNParams, batched_loss_fn,
@@ -39,6 +39,11 @@ class CircuitTrainConfig:
     epochs: int = 10
     backend: str = ops.DEFAULT_BACKEND   # fused path everywhere by default
     use_drelu: bool = True
+    # Relation-fused layer dispatch (DESIGN.md §9): single-graph steps
+    # attach each graph's RelationPlan (cached per graph, device-resident)
+    # so the jitted step runs ONE dispatch per direction-group; collated
+    # batches carry plans from the collator.  False pins the serial loop.
+    use_plan: bool = True
     seed: int = 0
     # graphs per optimizer step: an epoch over a design list is
     # ceil(n/batch_size) collated dispatches instead of n (graphs/collate.py)
@@ -50,7 +55,8 @@ class CircuitTrainer:
         self.cfg = cfg
         self.mp_cfg = HeteroMPConfig(hidden=cfg.hidden, k_cell=cfg.k_cell,
                                      k_net=cfg.k_net, backend=cfg.backend,
-                                     use_drelu=cfg.use_drelu)
+                                     use_drelu=cfg.use_drelu,
+                                     use_plan=cfg.use_plan)
         key = jax.random.PRNGKey(cfg.seed)
         self.params = init_drcircuitgnn(key, f_cell, f_net, cfg.hidden,
                                         cfg.n_layers)
@@ -61,6 +67,7 @@ class CircuitTrainer:
         self._grad_fn = self._build_grad()
         self._apply_fn = self._build_apply()
         self._batch_cache = {}        # id-tuple of member graphs -> device batch
+        self._plan_cache = {}         # id(graph) -> plan-attached graph
 
     def _build_step(self):
         mp_cfg, lr, wd = self.mp_cfg, self.lr, self.cfg.weight_decay
@@ -141,6 +148,25 @@ class CircuitTrainer:
             jax.device_put(self.params, dev0), self.opt_state, grads)
         return float(np.average(losses, weights=weights)), total
 
+    def _planned(self, g: CircuitGraph) -> CircuitGraph:
+        """``g`` with its RelationPlan attached and device-resident, cached
+        per graph — the jitted step takes the graph as a traced argument,
+        so the plan must ride along as pytree leaves (host packing is
+        impossible inside the trace); caching the ``device_put`` avoids
+        re-uploading the plan's host arrays every step.  The jit cache is
+        keyed by shapes, so equal-shaped graphs still share one executable.
+        """
+        if not plan_applicable(self.mp_cfg, self.cfg.hidden):
+            return g
+        key = id(g)
+        hit = self._plan_cache.get(key)
+        if hit is not None and hit[0] is g:
+            return hit[1]
+        pg = dataclasses.replace(
+            g, plan=jax.device_put(relation_plan_of(g)))
+        self._plan_cache[key] = (g, pg)
+        return pg
+
     def _collate(self, graphs: List[CircuitGraph], device=None):
         """Collate (and device-put) a batch once; reuse across epochs.  The
         quantized fused arenas mean batches of one shape bucket also share
@@ -176,7 +202,7 @@ class CircuitTrainer:
             losses = []
             for g in graphs:
                 self.params, self.opt_state, loss = self._step_fn(
-                    self.params, self.opt_state, g)
+                    self.params, self.opt_state, self._planned(g))
                 losses.append(float(loss))
             return float(np.mean(losses))
         ring = None

@@ -1,0 +1,439 @@
+"""Relation-fused mega-dispatch (RelationPlan, DESIGN.md §9).
+
+The plan path — one super-arena dispatch per direction-group covering every
+edge-type direction of a hetero layer — must be numerically interchangeable
+with the serial per-direction reference loop across all five backends,
+forward and gradient; its relation segments must round-trip exactly onto
+the member relations' matrices; collation padding and fillers must stay
+inert through the plan; and the cached custom-vjp executor must never
+retrace on repeat calls.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare container: seeded fallback
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.core.cbsr import cbsr_from_dense
+from repro.core.drelu import drelu
+from repro.core.hetero_mp import HeteroMPConfig, hetero_conv, \
+    init_hetero_layer
+from repro.graphs.circuit import EDGE_SCHEMA, relation_plan_of, with_plan
+from repro.graphs.collate import BucketLayout, collate_graphs
+from repro.graphs.ell import build_relation_plan, pack_ell_pair
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.kernels import ops
+from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
+
+settings.register_profile("fast", max_examples=15, deadline=None)
+settings.load_profile("fast")
+
+BACKENDS = ("pallas_fused", "xla_fused", "pallas", "xla", "dense")
+
+
+def _assert_close(actual, ref, msg):
+    atol = 1e-5 * max(1.0, float(np.abs(ref).max()) if ref.size else 1.0)
+    np.testing.assert_allclose(actual, ref, atol=atol, rtol=1e-5,
+                               err_msg=msg)
+
+
+def _graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+
+def _mixed_relations(rng, n_cell, n_net):
+    """Three mixed-degree relations over the circuit schema."""
+
+    def mk(n_dst, n_src, nnz):
+        d = rng.integers(0, n_dst, nnz)
+        s = rng.integers(0, n_src, nnz)
+        pairs = np.unique(np.stack([d, s], 1), axis=0)
+        w = rng.normal(size=pairs.shape[0]).astype(np.float32)
+        w[w == 0] = 1.0
+        return pairs[:, 0], pairs[:, 1], w
+
+    sizes = {"cell": n_cell, "net": n_net}
+    out = []
+    for et, nnz in (("near", 4 * n_cell), ("pin", 2 * n_cell),
+                    ("pinned", 2 * n_cell)):
+        s_t, d_t = EDGE_SCHEMA[et]
+        out.append((et, s_t, d_t, *mk(sizes[d_t], sizes[s_t], max(nnz, 1))))
+    return out
+
+
+# ------------------------- op-level parity -----------------------------
+
+@pytest.fixture(scope="module")
+def op_setup():
+    rng = np.random.default_rng(3)
+    n_cell, n_net, dim = 57, 29, 64
+    rels = _mixed_relations(rng, n_cell, n_net)
+    plan = build_relation_plan(rels, {"cell": n_cell, "net": n_net})
+    k_cell, k_net = 8, 6
+    cc = cbsr_from_dense(drelu(jnp.asarray(
+        rng.normal(size=(n_cell, dim)).astype(np.float32)), k_cell), k_cell)
+    cn = cbsr_from_dense(drelu(jnp.asarray(
+        rng.normal(size=(n_net, dim)).astype(np.float32)), k_net), k_net)
+    packs = {r[0]: pack_ell_pair(r[3], r[4], r[5],
+                                 {"cell": n_cell, "net": n_net}[r[2]],
+                                 {"cell": n_cell, "net": n_net}[r[1]])
+             for r in rels}
+    src_of = {r[0]: r[1] for r in rels}
+    return plan, rels, packs, src_of, cc, cn, dim
+
+
+def _serial_ref(packs, src_of, cc, cn, dim, vc, vn):
+    out = {}
+    for et, (adj, adj_t) in packs.items():
+        c = cc if src_of[et] == "cell" else cn
+        v = vc if src_of[et] == "cell" else vn
+        out[et] = ops.drspmm(adj, adj_t, v, c.idx, dim, backend="dense")
+    return out
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_multi_matches_serial_per_relation(op_setup, backend):
+    """drspmm_multi == one serial drspmm per relation, fwd + grads in both
+    source types, under every backend name (per-bucket names upgrade to the
+    fused family — plans are always pre-fused)."""
+    plan, rels, packs, src_of, cc, cn, dim = op_setup
+    refs = _serial_ref(packs, src_of, cc, cn, dim, cc.values, cn.values)
+    ys = ops.drspmm_multi(plan, {"cell": (cc.values, cc.idx),
+                                 "net": (cn.values, cn.idx)}, dim,
+                          backend=backend)
+    for et in packs:
+        _assert_close(np.asarray(ys[et]), np.asarray(refs[et]),
+                      f"fwd {backend}/{et}")
+
+    def loss_multi(vc, vn):
+        ys = ops.drspmm_multi(plan, {"cell": (vc, cc.idx),
+                                     "net": (vn, cn.idx)}, dim,
+                              backend=backend)
+        return sum(jnp.sum(y ** 2) for y in ys.values())
+
+    def loss_serial(vc, vn):
+        refs = _serial_ref(packs, src_of, cc, cn, dim, vc, vn)
+        return sum(jnp.sum(y ** 2) for y in refs.values())
+
+    g = jax.grad(loss_multi, argnums=(0, 1))(cc.values, cn.values)
+    g_ref = jax.grad(loss_serial, argnums=(0, 1))(cc.values, cn.values)
+    for a, r, nm in zip(g, g_ref, ("cell", "net")):
+        _assert_close(np.asarray(a), np.asarray(r), f"grad {backend}/{nm}")
+
+
+def test_no_retrace_on_second_multi_call(op_setup):
+    """The plan executor is built (and traced) once per (plan, dim,
+    backend) — mirrors test_no_retrace_on_second_call for the learnable
+    op."""
+    plan, rels, packs, src_of, cc, cn, dim = op_setup
+    cbsr = {"cell": (cc.values, cc.idx), "net": (cn.values, cn.idx)}
+    for be in ("xla_fused", "pallas_fused"):
+        ops.drspmm_multi(plan, cbsr, dim, backend=be)   # warm (trace 1)
+        n0 = len(ops._MULTI_TRACES)
+        a = ops.drspmm_multi(plan, cbsr, dim, backend=be)["near"]
+        b = ops.drspmm_multi(plan, {"cell": (2 * cc.values, cc.idx),
+                                    "net": (cn.values, cn.idx)},
+                             dim, backend=be)["near"]
+        assert len(ops._MULTI_TRACES) == n0, \
+            f"repeated {be} drspmm_multi call retraced the executor"
+        _assert_close(np.asarray(b), 2 * np.asarray(a), f"linearity {be}")
+
+
+# ------------------------ layer-level parity ---------------------------
+
+@pytest.fixture(scope="module")
+def layer_setup():
+    g = _graph(72, 36, 11)
+    lp = init_hetero_layer(jax.random.PRNGKey(0), 32)
+    rng = np.random.default_rng(5)
+    x_cell = jnp.asarray(rng.normal(size=(72, 32)).astype(np.float32))
+    x_net = jnp.asarray(rng.normal(size=(36, 32)).astype(np.float32))
+    return g, lp, x_cell, x_net
+
+
+@pytest.mark.parametrize("backend", ["pallas_fused", "xla_fused"])
+def test_hetero_conv_plan_matches_serial(layer_setup, backend):
+    """Plan-fused hetero_conv == the serial per-direction loop, forward
+    (both node types) and gradients (inputs + layer params)."""
+    g, lp, x_cell, x_net = layer_setup
+    cfg_p = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend=backend,
+                           use_plan=True)
+    cfg_s = dataclasses.replace(cfg_p, use_plan=False)
+
+    y_p = hetero_conv(lp, g, x_cell, x_net, cfg_p)
+    y_s = hetero_conv(lp, g, x_cell, x_net, cfg_s)
+    for a, r, nm in zip(y_p, y_s, ("cell", "net")):
+        _assert_close(np.asarray(a), np.asarray(r), f"fwd {backend}/{nm}")
+
+    def loss(cfg):
+        def f(p, xc, xn):
+            yc, yn = hetero_conv(p, g, xc, xn, cfg)
+            return jnp.sum(yc ** 2) + jnp.sum(jnp.sin(yn))
+        return f
+
+    g_p = jax.grad(loss(cfg_p), argnums=(0, 1, 2))(lp, x_cell, x_net)
+    g_s = jax.grad(loss(cfg_s), argnums=(0, 1, 2))(lp, x_cell, x_net)
+    for (pa, a), (_, r) in zip(jax.tree_util.tree_leaves_with_path(g_p),
+                               jax.tree_util.tree_leaves_with_path(g_s)):
+        _assert_close(np.asarray(a), np.asarray(r),
+                      f"grad {jax.tree_util.keystr(pa)} {backend}")
+
+
+def test_one_dispatch_per_direction_group():
+    """The acceptance property: a hetero layer's message passing is ONE
+    pallas_call forward and ONE backward on the plan path — vs one per edge
+    type (×2 for grad) on the serial path.  The xla family asserts the same
+    via the trace-time dispatch log.  Uses its own graph (→ fresh plan →
+    fresh executor) so every trace actually runs and gets recorded."""
+    g = _graph(48, 24, 23)
+    lp = init_hetero_layer(jax.random.PRNGKey(1), 32)
+    rng = np.random.default_rng(9)
+    x_cell = jnp.asarray(rng.normal(size=(48, 32)).astype(np.float32))
+    x_net = jnp.asarray(rng.normal(size=(24, 32)).astype(np.float32))
+    cfg_p = HeteroMPConfig(hidden=32, k_cell=8, k_net=8,
+                           backend="pallas_fused", use_plan=True)
+    cfg_s = dataclasses.replace(cfg_p, use_plan=False)
+
+    from benchmarks.bench_drspmm import dispatch_count
+
+    def fwd(cfg):
+        return lambda xc: hetero_conv(lp, g, xc, x_net, cfg)[0]
+
+    def grad_both(cfg):
+        # sum over BOTH outputs, differentiate wrt BOTH inputs, so no
+        # direction's forward or backward is dead-code-eliminated
+        return lambda xc, xn: jax.grad(lambda qc, qn: sum(
+            jnp.sum(y ** 2) for y in hetero_conv(lp, g, qc, qn, cfg)),
+            argnums=(0, 1))(xc, xn)
+
+    assert dispatch_count(fwd(cfg_p), x_cell) == 1
+    assert dispatch_count(fwd(cfg_s), x_cell) == 3
+    assert dispatch_count(grad_both(cfg_p), x_cell, x_net) == 2
+    assert dispatch_count(grad_both(cfg_s), x_cell, x_net) == 6
+
+    # xla family: executor issues recorded while tracing.  Only the
+    # direction-group executors may appear — a serial per-relation tag
+    # ("xla:fwd"/"xla:bwd") would mean the plan path leaked back to the
+    # loop.  (custom_vjp traces the forward body twice under grad — primal
+    # + f_fwd — so the fwd tag may legitimately repeat.)
+    cfg_px = dataclasses.replace(cfg_p, backend="xla_fused")
+    n0 = len(ops.FUSED_DISPATCH_LOG)
+    jax.make_jaxpr(grad_both(cfg_px))(x_cell, x_net)
+    tags = list(ops.FUSED_DISPATCH_LOG)[n0:]
+    assert set(tags) == {"xla:multi_fwd", "xla:multi_bwd"}, tags
+    assert tags.count("xla:multi_bwd") == 1, tags
+
+
+def test_relation_plan_memoized(layer_setup):
+    g, lp, x_cell, x_net = layer_setup
+    assert relation_plan_of(g) is relation_plan_of(g)
+    pg = with_plan(g)
+    assert pg.plan is relation_plan_of(g)
+    assert with_plan(pg) is pg
+
+
+# --------------------- segment round-trip property ---------------------
+
+rt_plans = st.integers(0, 2 ** 31 - 1).flatmap(lambda seed: st.tuples(
+    st.just(seed), st.integers(9, 40), st.integers(5, 24)))
+
+
+@given(rt_plans)
+def test_relation_segment_roundtrip(args):
+    """Every relation's matrix reappears exactly at its segment's block of
+    the super-arena pair (fwd at (out_off, src_off), bwd transposed at
+    (src_out_off, out_off)), nothing lands outside the blocks, and the rel
+    chunk table tiles the arena by segment."""
+    seed, n_cell, n_net = args
+    rng = np.random.default_rng(seed)
+    rels = _mixed_relations(rng, n_cell, n_net)
+    plan = build_relation_plan(rels, {"cell": n_cell, "net": n_net})
+    A, B = plan.fwd.to_dense(), plan.bwd.to_dense()
+    off = dict(zip(plan.src_types, plan.src_off))
+    cov_a = np.zeros_like(A, bool)
+    cov_b = np.zeros_like(B, bool)
+    rel_tab = np.asarray(plan.fwd.rel)
+    for i, (seg, r) in enumerate(zip(plan.segments, rels)):
+        et, s_t, d_t, dst, src, w = r
+        dense = np.zeros((seg.n_dst, seg.n_src), np.float32)
+        np.add.at(dense, (dst, src), w)
+        so = off[seg.src_type]
+        np.testing.assert_allclose(
+            A[seg.out_off:seg.out_off + seg.n_dst, so:so + seg.n_src],
+            dense, atol=1e-6, err_msg=f"fwd {et}")
+        np.testing.assert_allclose(
+            B[seg.src_out_off:seg.src_out_off + seg.n_src,
+              seg.out_off:seg.out_off + seg.n_dst],
+            dense.T, atol=1e-6, err_msg=f"bwd {et}")
+        cov_a[seg.out_off:seg.out_off + seg.n_dst, so:so + seg.n_src] = True
+        cov_b[seg.src_out_off:seg.src_out_off + seg.n_src,
+              seg.out_off:seg.out_off + seg.n_dst] = True
+        lo, hi = seg.fwd_chunks
+        assert (rel_tab[lo:hi] == i).all()
+    assert A[~cov_a].sum() == 0 and B[~cov_b].sum() == 0
+    assert rel_tab.shape[0] == plan.fwd.n_chunks
+    assert plan.bwd_src_rows.shape[0] == plan.bwd.n_arena_rows
+
+
+# --------------------- collation rides the plan ------------------------
+
+@pytest.fixture(scope="module")
+def members():
+    return [_graph(60, 30, 0), _graph(101, 55, 1), _graph(37, 20, 2)]
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    return init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+
+
+@pytest.mark.parametrize("backend", ["pallas_fused", "xla_fused"])
+def test_collated_plan_padding_is_inert(members, model_params, backend):
+    """Quantized collation with an attached plan reproduces the exact
+    (serial, unquantized) collation on every member slice — through a jit
+    whose graph (plan included) is a TRACED argument, forward and grad."""
+    from repro.models.hgnn import batched_loss_fn
+
+    params = model_params
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend=backend,
+                         use_plan=True)
+    cfg_ref = dataclasses.replace(cfg, use_plan=False)
+    exact = collate_graphs(members, fused=False, quantize=False)
+    quant = collate_graphs(members, fused=True, quantize=True)
+    assert quant.graph.plan is not None
+    assert exact.graph.plan is None      # unfused collation stays plan-free
+
+    fwd = jax.jit(lambda p, g: drcircuitgnn_forward(p, g, cfg))
+    p_ref = exact.split_cell(
+        drcircuitgnn_forward(params, exact.graph, cfg_ref))
+    p_plan = quant.split_cell(fwd(params, quant.graph))
+    for i, (a, r) in enumerate(zip(p_plan, p_ref)):
+        _assert_close(np.asarray(a), np.asarray(r),
+                      f"member {i} {backend} padding")
+
+    g_q = jax.grad(batched_loss_fn)(params, quant.graph, quant.cell_weight,
+                                    cfg)
+    g_e = jax.grad(batched_loss_fn)(params, exact.graph, exact.cell_weight,
+                                    cfg_ref)
+    for (pa, a), (_, r) in zip(jax.tree_util.tree_leaves_with_path(g_q),
+                               jax.tree_util.tree_leaves_with_path(g_e)):
+        _assert_close(np.asarray(a), np.asarray(r),
+                      f"grad {jax.tree_util.keystr(pa)} {backend}")
+
+
+def test_collated_plan_filler_members_inert(members, model_params):
+    """Filler replicas change nothing for the real members on the plan
+    path (the deadline-batcher property)."""
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend="xla_fused",
+                         use_plan=True)
+    plain = collate_graphs(members)
+    padded = collate_graphs(members + [members[-1]], n_real=len(members))
+    a = plain.split_cell(
+        drcircuitgnn_forward(model_params, plain.graph, cfg))
+    b = padded.split_cell(
+        drcircuitgnn_forward(model_params, padded.graph, cfg))
+    assert len(a) == len(b) == len(members)
+    for i, (x, y) in enumerate(zip(a, b)):
+        _assert_close(np.asarray(y), np.asarray(x), f"member {i} filler")
+
+
+def test_collated_plan_signature_stable_in_bucket():
+    """Jittered same-class batches share one padded signature with a shared
+    BucketLayout — now including the plan's super-arena dims (plan_chunk
+    pinning + plan_min_chunks floors)."""
+    layout = BucketLayout()
+    b1 = collate_graphs([_graph(60, 30, 0), _graph(58, 29, 1)],
+                        node_bits=1, layout=layout)
+    b2 = collate_graphs([_graph(63, 31, 2), _graph(59, 28, 3)],
+                        node_bits=1, layout=layout)
+    assert b1.graph.plan is not None and b2.graph.plan is not None
+    assert b1.signature == b2.signature
+    assert layout.plan_chunk.keys() == {"fwd", "bwd"}
+
+
+# --------------------- shape-bucketed learnable nnz --------------------
+
+def test_edge_nnz_quantized_and_padding_inert():
+    """collate_graphs(with_eids=True) rounds the traced-weight nnz up the
+    arena grid (layout-floored), and the zero-padded tail is inert: the
+    learnable op over the padded vector equals the exact-nnz result, with
+    zero gradient on the pad slots."""
+    layout = BucketLayout()
+    b1 = collate_graphs([_graph(60, 30, 0), _graph(58, 29, 1)],
+                        node_bits=1, with_eids=True, layout=layout)
+    b2 = collate_graphs([_graph(63, 31, 2), _graph(59, 28, 3)],
+                        node_bits=1, with_eids=True, layout=layout)
+    et = "near"
+    assert b1.edge_nnz[et] >= b1.edge_nnz_exact[et]
+    # same bucket -> same padded nnz even though exact counts differ
+    assert b1.edge_nnz[et] == b2.edge_nnz[et]
+    assert b1.edge_nnz_exact[et] != b2.edge_nnz_exact[et]
+
+    rng = np.random.default_rng(0)
+    batch = b1
+    es = batch.graph.edges[et]
+    exact, padded = batch.edge_nnz_exact[et], batch.edge_nnz[et]
+    member_ws = [rng.normal(
+        size=batch.edge_eid_offsets[et][1] if i == 0
+        else exact - batch.edge_eid_offsets[et][1]).astype(np.float32)
+        for i in range(2)]
+    w_pad = batch.concat_edge_weights(et, member_ws)
+    assert w_pad.shape[0] == padded
+    d, k = 16, 4
+    n = batch.graph.n_cell
+    xv = jnp.asarray(rng.normal(size=(n, k)).astype(np.float32))
+    xi = jnp.asarray(rng.integers(0, d, size=(n, k)).astype(np.int32))
+
+    def f(wv, nnz):
+        return ops.drspmm_learnable(es.adj, es.adj_t, nnz, wv, xv, xi, d,
+                                    backend="xla_fused")
+
+    y_pad = f(w_pad, padded)
+    y_exact = f(w_pad[:exact], exact)
+    _assert_close(np.asarray(y_pad), np.asarray(y_exact), "padded nnz fwd")
+    gw = jax.grad(lambda wv: jnp.sum(jnp.sin(f(wv, padded))))(w_pad)
+    assert np.all(np.asarray(gw[exact:]) == 0.0), "pad slots got gradient"
+
+
+# ------------------------- params hot-swap -----------------------------
+
+def test_engine_params_hot_swap(members):
+    """update_params() swaps replicas between batches: post-swap requests
+    are served by the new weights and stamped with the new version; no
+    recompile is paid for the swap."""
+    from repro.serve import CircuitServeEngine
+
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend="xla_fused")
+    p0 = init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+    p1 = init_drcircuitgnn(jax.random.PRNGKey(1), 16, 16, 32)
+    eng = CircuitServeEngine(p0, cfg, max_batch=len(members))
+    g = members[0]
+
+    r0 = eng.submit(g)
+    eng.run()
+    assert eng.result(r0).params_version == 0
+    compiles_before = eng.compiles
+
+    assert eng.update_params(p1) == 1
+    assert eng.params_version == 1
+    r1 = eng.submit(g)
+    eng.run()
+    req1 = eng.result(r1)
+    assert req1.params_version == 1
+    assert eng.compiles == compiles_before, "hot swap must not recompile"
+    assert eng.stats()["params_version"] == 1
+
+    ref0 = np.asarray(drcircuitgnn_forward(p0, g, cfg))
+    ref1 = np.asarray(drcircuitgnn_forward(p1, g, cfg))
+    _assert_close(eng.result(r0).pred, ref0, "pre-swap prediction")
+    _assert_close(req1.pred, ref1, "post-swap prediction")
+    assert not np.allclose(ref0, ref1), "swap should change predictions"
