@@ -110,6 +110,40 @@ def bench_online(params, cfg, stream, max_batch: int,
                 deadline_flushes=cold["deadline_flushes"])
 
 
+def bench_degraded(params, cfg, stream, max_batch: int,
+                   max_wait_ms: float = 25.0):
+    """Online serving with 1-of-N ring slots force-quarantined (the state
+    after a device loss, or an ops drain for maintenance): the stream must
+    complete on the survivors with zero failures, and the row records the
+    throughput cost of losing a slot.  With a single local device the ring
+    gets two logical slots on it, so routing-around-quarantine is still
+    exercised.  The probe interval is pushed out so no re-admission
+    muddies the measurement."""
+    devs = list(jax.local_devices())
+    if len(devs) < 2:
+        devs = [devs[0], devs[0]]
+    eng = CircuitServeEngine(params, cfg, max_batch=max_batch,
+                             max_wait_ms=max_wait_ms, devices=devs,
+                             probe_interval_s=1e9)
+    lost = len(devs) - 1
+    eng.ring.quarantine(lost)
+    server = threading.Thread(target=eng.serve_forever)
+    server.start()
+    for g in stream:
+        eng.submit(g)
+    eng.stop()
+    server.join()
+    st = eng.stats()
+    assert st["failures"] == 0, st
+    assert st["dispatches_per_device"][lost] == 0, st
+    return dict(graphs_per_s=st["requests"] / max(st["wall_s"], 1e-9),
+                p50_ms=st["p50_ms"], p95_ms=st["p95_ms"],
+                devices=st["devices"], quarantined_slot=lost,
+                dispatches_per_device=st["dispatches_per_device"],
+                device_health=st["device_health"],
+                failures=st["failures"])
+
+
 def bench_batched(params, cfg, stream, max_batch: int):
     # pinned to one device so the row stays comparable across PRs (the
     # multi-device path gets its own `online` row)
@@ -145,6 +179,7 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
     seq = bench_sequential(params, cfg, stream)
     bat = bench_batched(params, cfg, stream, max_batch)
     onl = bench_online(params, cfg, stream, max_batch)
+    deg = bench_degraded(params, cfg, stream, max_batch)
 
     speedup = bat["graphs_per_s"] / max(seq["graphs_per_s"], 1e-9)
     warm_speedup = (bat["warm_graphs_per_s"]
@@ -162,11 +197,15 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
          f"graphs_per_s={onl['graphs_per_s']:.2f};"
          f"devices={onl['devices']};compiles={onl['compiles']};"
          f"warm_speedup={online_warm_speedup:.2f}x")
+    emit("serve/degraded", 1e6 / max(deg["graphs_per_s"], 1e-9),
+         f"graphs_per_s={deg['graphs_per_s']:.2f};"
+         f"devices={deg['devices']};"
+         f"quarantined_slot={deg['quarantined_slot']}")
     record = dict(ts=time.time(), kind="serve_circuit",
                   backend=jax.default_backend(),
                   n_graphs=len(stream), max_batch=max_batch, hidden=hidden,
                   classes=list(map(list, classes)),
-                  sequential=seq, batched=bat, online=onl,
+                  sequential=seq, batched=bat, online=onl, degraded=deg,
                   speedup=speedup, warm_speedup=warm_speedup,
                   online_warm_speedup=online_warm_speedup)
     append_json(out_json, record)
@@ -190,3 +229,8 @@ if __name__ == "__main__":
           f"{r['online_warm_speedup']:.2f}x sequential warm, "
           f"dispatches/device={o['dispatches_per_device']}, "
           f"{o['deadline_flushes']} deadline flushes")
+    d = r["degraded"]
+    print(f"[serve] degraded (slot {d['quarantined_slot']} of "
+          f"{d['devices']} quarantined): {d['graphs_per_s']:.2f} graphs/s, "
+          f"dispatches/device={d['dispatches_per_device']}, "
+          f"{d['failures']} failures")

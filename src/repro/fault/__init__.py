@@ -1,1 +1,4 @@
-from repro.fault.monitor import StepMonitor, ElasticController  # noqa: F401
+from repro.fault.monitor import (StepMonitor, ElasticController,  # noqa: F401
+                                 Heartbeat, StragglerEvent)
+from repro.fault.inject import (POINTS, FaultEvent, FaultInjector,  # noqa: F401
+                                FaultRule, InjectedFault)

@@ -1,0 +1,213 @@
+"""Deterministic chaos-injection harness for the serve and train paths.
+
+A :class:`FaultInjector` is a seed-scheduled set of :class:`FaultRule`\\ s
+bound to named **injection points** — the places in the serving/training
+pipeline where production faults actually land:
+
+    ``collate``      host-side collation raises (malformed batch)
+    ``device_put``   transfer onto a ring slot raises
+    ``dispatch``     the device dispatch raises
+    ``nan_output``   the batch output comes back NaN-poisoned
+    ``straggler``    the host packing stage stalls for ``delay_s``
+    ``device_loss``  a ring slot goes down for ``down_for`` touches
+
+The engine (serve/circuit_engine.py), the trainer
+(train/circuit_trainer.py), the chaos bench (benchmarks/bench_chaos.py)
+and the tests all consume the SAME harness, so a failure mode reproduced
+in a test is the failure mode the containment ladder is benched against.
+
+Scheduling is deterministic: a rule fires on explicit occurrence indices
+(``at=(0, 3)`` — the 0th and 3rd time its point is touched) and/or on
+Bernoulli draws from a per-rule ``random.Random`` seeded from
+``(seed, rule index)`` — the same seed replays the same fault sequence
+for the same sequence of touches.  Every firing is recorded in
+``injector.events`` for post-hoc assertions.
+
+``device_loss`` is stateful: when its rule triggers on a touch of the
+matching slot, that slot enters a *down window* and the next ``down_for``
+touches (``device_put``/``dispatch``) raise :class:`InjectedFault` with
+``point="device_loss"`` — long enough to trip the engine's K-consecutive-
+failures quarantine, short enough that the periodic probe finds the
+device healthy again and re-admits it.
+
+Zero-overhead contract: the pipeline guards every hook with
+``if chaos is not None`` — a ``chaos=None`` engine (the default) executes
+no injection code at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+POINTS = ("collate", "device_put", "dispatch", "nan_output", "straggler",
+          "device_loss")
+
+
+class InjectedFault(RuntimeError):
+    """Raised by an injection point; carries the point and ring slot so the
+    engine's failure classifier can attribute (or not) device blame."""
+
+    def __init__(self, point: str, occurrence: int,
+                 device: Optional[int] = None):
+        self.point = point
+        self.occurrence = occurrence
+        self.device = device
+        at = f" on ring slot {device}" if device is not None else ""
+        super().__init__(f"injected {point} fault{at} "
+                         f"(occurrence {occurrence})")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    """One scheduled fault.  ``at`` fires on those occurrence indices of the
+    rule's point (0-based, counted per rule, restricted to ``device`` when
+    set); ``rate`` additionally fires on seeded Bernoulli draws.  ``n``
+    caps total firings.  ``delay_s`` is the straggler stall; ``down_for``
+    the device-loss window length in touches."""
+    point: str
+    at: Tuple[int, ...] = ()
+    rate: float = 0.0
+    n: Optional[int] = None
+    device: Optional[int] = None
+    delay_s: float = 0.05
+    down_for: int = 3
+
+    def __post_init__(self):
+        if self.point not in POINTS:
+            raise ValueError(f"unknown injection point {self.point!r}; "
+                             f"expected one of {POINTS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    point: str
+    occurrence: int
+    device: Optional[int]
+    t: float
+
+
+class FaultInjector:
+    """Seed-scheduled fault source shared by every injection point.
+
+    Thread-safe: the engine touches points from the serve loop, the packing
+    pool, and healer threads concurrently.
+    """
+
+    def __init__(self, rules: Sequence[FaultRule], seed: int = 0):
+        self.rules = tuple(rules)
+        self.seed = seed
+        # distinct integer stream per rule (tuple seeds are deprecated)
+        self._rngs = [random.Random(None if seed is None
+                                    else (seed << 20) + i)
+                      for i in range(len(self.rules))]
+        self._touches = [0] * len(self.rules)   # per-rule occurrence counter
+        self._fired = [0] * len(self.rules)
+        self._down: Dict[int, int] = {}         # slot -> remaining failures
+        self.events: List[FaultEvent] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ core
+
+    def _eval(self, point: str, device: Optional[int]) -> Optional[int]:
+        """One touch of ``point``; returns the firing occurrence index or
+        None.  Caller holds the lock."""
+        hit = None
+        for i, rule in enumerate(self.rules):
+            if rule.point != point:
+                continue
+            if rule.device is not None and device is not None \
+                    and rule.device != device:
+                continue
+            occ = self._touches[i]
+            self._touches[i] += 1
+            if rule.n is not None and self._fired[i] >= rule.n:
+                continue
+            fire = occ in rule.at
+            if not fire and rule.rate > 0.0:
+                fire = self._rngs[i].random() < rule.rate
+            if fire:
+                self._fired[i] += 1
+                if hit is None:
+                    hit = occ
+                if point == "device_loss" and device is not None:
+                    # open the down window; the triggering touch itself is
+                    # the first failure of the window
+                    self._down[device] = max(self._down.get(device, 0),
+                                             rule.down_for - 1)
+        return hit
+
+    def _record(self, point: str, occ: int, device: Optional[int]):
+        self.events.append(FaultEvent(point, occ, device, time.time()))
+
+    # --------------------------------------------------- engine-facing
+
+    def raise_if(self, point: str, device: Optional[int] = None) -> None:
+        """Touch a raising point (``collate``/``device_put``/``dispatch``);
+        device touches also consult the ``device_loss`` state machine."""
+        with self._lock:
+            if device is not None:
+                # an open down window fails every touch of the slot first
+                if self._down.get(device, 0) > 0:
+                    self._down[device] -= 1
+                    occ = sum(self._fired)
+                    self._record("device_loss", occ, device)
+                    raise InjectedFault("device_loss", occ, device)
+                occ = self._eval("device_loss", device)
+                if occ is not None:
+                    self._record("device_loss", occ, device)
+                    raise InjectedFault("device_loss", occ, device)
+            occ = self._eval(point, device)
+            if occ is not None:
+                self._record(point, occ, device)
+                raise InjectedFault(point, occ, device)
+
+    def stall(self, point: str = "straggler") -> float:
+        """Touch the straggler point; sleeps (and returns) the injected
+        delay — 0.0 when the point stays quiet."""
+        with self._lock:
+            delay = 0.0
+            for i, rule in enumerate(self.rules):
+                if rule.point != point:
+                    continue
+                occ = self._touches[i]
+                self._touches[i] += 1
+                if rule.n is not None and self._fired[i] >= rule.n:
+                    continue
+                fire = occ in rule.at or (rule.rate > 0.0 and
+                                          self._rngs[i].random() < rule.rate)
+                if fire:
+                    self._fired[i] += 1
+                    delay = max(delay, rule.delay_s)
+                    self._record(point, occ, None)
+        if delay > 0.0:
+            time.sleep(delay)
+        return delay
+
+    def poison(self, out: np.ndarray,
+               point: str = "nan_output") -> np.ndarray:
+        """Touch the NaN-poisoning point; when it fires, the returned copy
+        of ``out`` is fully NaN (the output guard must catch it)."""
+        with self._lock:
+            occ = self._eval(point, None)
+            if occ is None:
+                return out
+            self._record(point, occ, None)
+        bad = np.array(out, copy=True)
+        bad[...] = np.nan
+        return bad
+
+    # -------------------------------------------------------- reporting
+
+    def counts(self) -> Dict[str, int]:
+        """Firings per point (from the event log)."""
+        out: Dict[str, int] = {}
+        with self._lock:
+            for ev in self.events:
+                out[ev.point] = out.get(ev.point, 0) + 1
+        return out

@@ -48,6 +48,12 @@ class StepMonitor:
         self.events: List[StragglerEvent] = []
 
     def record(self, step: int, host: int, duration: float) -> Optional[StragglerEvent]:
+        if host not in self.history:
+            # elastic mesh growth: hosts joining after construction must not
+            # crash the monitor — register them lazily
+            self.history[host] = []
+            self.strikes[host] = 0
+            self.n_hosts = max(self.n_hosts, host + 1)
         hist = self.history[host]
         hist.append(duration)
         if len(hist) > self.window:
@@ -135,8 +141,14 @@ class Heartbeat:
         self._last = now
         import json, os
         os.makedirs(self.path, exist_ok=True)
-        with open(f"{self.path}/host_{self.host}.json", "w") as f:
+        # write-then-rename so a concurrent dead_hosts() never reads a
+        # partially-written record (rename is atomic on POSIX); the tmp name
+        # is per-host, so concurrent beats of different hosts don't collide
+        final = f"{self.path}/host_{self.host}.json"
+        tmp = f"{final}.tmp"
+        with open(tmp, "w") as f:
             json.dump({"host": self.host, "step": step, "time": now}, f)
+        os.replace(tmp, final)
 
     @staticmethod
     def dead_hosts(path: str, timeout: float, now: Optional[float] = None
@@ -147,9 +159,16 @@ class Heartbeat:
         if not os.path.isdir(path):
             return dead
         for fn in os.listdir(path):
-            if fn.startswith("host_"):
+            if not (fn.startswith("host_") and fn.endswith(".json")):
+                continue                      # skip .tmp files and strays
+            try:
                 with open(os.path.join(path, fn)) as f:
                     rec = json.load(f)
-                if now - rec["time"] > timeout:
-                    dead.append(rec["host"])
+                host, t = rec["host"], rec["time"]
+            except (OSError, ValueError, KeyError, TypeError):
+                # unreadable/corrupt record: a monitor must degrade, not
+                # crash — treat it as no evidence either way
+                continue
+            if now - t > timeout:
+                dead.append(host)
         return sorted(dead)

@@ -1,3 +1,7 @@
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
 from repro.serve.circuit_engine import (CircuitRequest,  # noqa: F401
-                                        CircuitServeEngine, percentile)
+                                        CircuitServeEngine, percentile,
+                                        QueueFullError, LoadShedError,
+                                        WatchdogTimeoutError,
+                                        NonFiniteInputError,
+                                        NonFiniteOutputError)

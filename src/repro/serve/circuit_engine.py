@@ -41,7 +41,25 @@ block-diagonal collation (graphs/collate.py) instead:
 * **params hot-swap** — ``update_params()`` commits fresh per-device
   replicas between batches (in-flight batches finish on the old weights);
   every request records the ``params_version`` that served it — the
-  train-then-serve loop without a restart or a recompile.
+  train-then-serve loop without a restart or a recompile;
+* **self-healing containment ladder** (DESIGN.md §10) — a failed batch is
+  retried with exponential backoff on a freshly-routed device
+  (``max_retries``); a batch that keeps failing is *bisected* so only the
+  poison member errors while every healthy member is re-served with
+  results bit-identical to a fault-free run; device-attributable failures
+  feed the :class:`~repro.sharding.specs.DeviceRing` health state
+  (K-consecutive-failure quarantine, periodic probe re-admission); an
+  optional ``watchdog_s`` bounds per-attempt wall-clock so a wedged
+  dispatch becomes a timed-out request instead of a hung ``result()``;
+* **admission control** — ``max_queue`` bounds the intake queue with a
+  pluggable ``admission`` policy: ``"block"`` (backpressure the producer),
+  ``"reject"`` (raise :class:`QueueFullError` promptly), or
+  ``"shed_oldest"`` (evict the FIFO head with :class:`LoadShedError`);
+  ``validate_inputs`` rejects NaN/Inf-feature graphs at ``submit()`` and a
+  non-finite output guard fails poisoned predictions with diagnostics;
+* **chaos hook** — pass ``chaos=FaultInjector(...)``
+  (fault/inject.py) to exercise every injection point under a
+  deterministic seed; ``chaos=None`` (default) executes no injection code.
 
 Collated batches also carry a :class:`~repro.graphs.ell.RelationPlan`
 (``collate_graphs(with_plan=True)``, the default), so each hetero layer of
@@ -85,6 +103,7 @@ import jax
 
 from repro.core.hetero_mp import HeteroMPConfig
 from repro.core.parallel import prefetch
+from repro.fault.inject import FaultInjector, InjectedFault
 from repro.graphs.circuit import CircuitGraph
 from repro.graphs.collate import (ARENA_GRID_BITS, LayoutTable,
                                   collate_graphs, quantize_up)
@@ -93,6 +112,29 @@ from repro.sharding.specs import DeviceRing
 # Back-compat re-export: percentile lived here through PR 2; it is now a
 # train.metrics helper so benchmarks don't import the engine for stats.
 from repro.train.metrics import percentile  # noqa: F401
+
+
+class QueueFullError(RuntimeError):
+    """submit() under ``admission="reject"`` with the queue at capacity."""
+
+
+class LoadShedError(RuntimeError):
+    """Request evicted by ``admission="shed_oldest"`` to admit a newer one;
+    its ``result()`` re-raises with this cause."""
+
+
+class WatchdogTimeoutError(RuntimeError):
+    """Batch attempt exceeded ``watchdog_s``; its requests are failed so
+    ``result()`` returns instead of hanging on a wedged dispatch."""
+
+
+class NonFiniteInputError(ValueError):
+    """submit() rejected a graph whose features contain NaN/Inf."""
+
+
+class NonFiniteOutputError(RuntimeError):
+    """The output guard found NaN/Inf in a member's prediction (poisoned
+    input that slipped validation, or an unhealthy kernel/device)."""
 
 
 @dataclasses.dataclass
@@ -107,6 +149,10 @@ class CircuitRequest:
     # which params generation served this request (update_params bumps it);
     # stamped at dispatch, so callers can tell pre- from post-swap results
     params_version: int = 0
+    # finalized: result committed (pred or error).  The containment ladder
+    # may abandon a wedged attempt whose orphaned thread finishes later —
+    # the flag makes the first commit win and every later one a no-op.
+    final: bool = False
 
     @property
     def latency_ms(self) -> float:
@@ -121,6 +167,11 @@ class _BucketState:
     lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
     fwd: Optional[object] = None          # the bucket's jitted forward
     sigs: set = dataclasses.field(default_factory=set)  # live (sig, dev)
+
+
+# sentinel boxed through run()'s prefetch pipeline so a failed prepare
+# reaches the containment ladder instead of killing the iterator
+_PREP_FAILED = object()
 
 
 class CircuitServeEngine:
@@ -143,7 +194,19 @@ class CircuitServeEngine:
                  max_wait_ms: float = 50.0,
                  max_live_buckets: Optional[int] = None,
                  max_finished: Optional[int] = None,
-                 devices: Optional[Sequence] = None):
+                 devices: Optional[Sequence] = None,
+                 # --- self-healing / admission (DESIGN.md §10) ---
+                 max_retries: int = 2,
+                 retry_backoff_s: float = 0.02,
+                 watchdog_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 admission: str = "block",
+                 validate_inputs: bool = True,
+                 quarantine_after: int = 3,
+                 probe_interval_s: float = 1.0,
+                 chaos: Optional[FaultInjector] = None):
+        if admission not in ("block", "reject", "shed_oldest"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.mp_cfg = mp_cfg
         self.b = max_batch
         self.n_pack_threads = n_pack_threads
@@ -157,7 +220,15 @@ class CircuitServeEngine:
         # forever.  None keeps everything (the run()-and-read-back pattern);
         # online clients should either set it or result(..., pop=True).
         self.max_finished = max_finished
-        self.ring = DeviceRing(devices)
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
+        self.watchdog_s = watchdog_s
+        self.max_queue = max_queue
+        self.admission = admission
+        self.validate_inputs = validate_inputs
+        self.chaos = chaos
+        self.ring = DeviceRing(devices, quarantine_after=quarantine_after,
+                               probe_interval_s=probe_interval_s)
         self.params = params
         # one committed replica per ring device: a dispatch's placement
         # follows its (committed) arguments, so batch routing is just
@@ -185,9 +256,13 @@ class CircuitServeEngine:
                                     on_evict=self._evict_bucket)
         self._buckets: Dict[tuple, _BucketState] = {}
         self._n_compiles = 0        # cumulative, incl. eviction recompiles
+        self._healing = 0           # containment-ladder batches in flight
         self._counters = dict(batches=0, requests=0, real_cells=0,
                               padded_cells=0, wall_s=0.0, deadline_flushes=0,
-                              failures=0,
+                              failures=0, retries=0, bisects=0,
+                              watchdog_timeouts=0, nonfinite_outputs=0,
+                              rejected_inputs=0, admission_blocked=0,
+                              admission_rejected=0, admission_shed=0,
                               dispatches_per_device=[0] * len(self.ring))
 
     def _make_fwd(self):
@@ -196,19 +271,75 @@ class CircuitServeEngine:
 
     # ------------------------------------------------------------- intake
 
-    def submit(self, graph: CircuitGraph) -> int:
+    def submit(self, graph: CircuitGraph,
+               timeout: Optional[float] = None) -> int:
         """Enqueue one request; thread-safe, legal while serve_forever()
-        runs (the serving loop is woken immediately)."""
+        runs (the serving loop is woken immediately).
+
+        With ``max_queue`` set, admission is policy-dependent when the
+        queue is full: ``"block"`` waits for capacity (up to ``timeout``,
+        raising :class:`TimeoutError`) — backpressure on the producer;
+        ``"reject"`` raises :class:`QueueFullError` promptly;
+        ``"shed_oldest"`` evicts the FIFO head (its ``result()`` re-raises
+        :class:`LoadShedError`) and admits the newcomer.  With
+        ``validate_inputs`` (default), NaN/Inf-feature graphs raise
+        :class:`NonFiniteInputError` here instead of poisoning a batch."""
+        if self.validate_inputs:
+            self._validate(graph)
         rid = next(self._rid)
         # bucket key stamped once here, so the batcher's queue scans don't
         # recompute it under the engine lock on every wake
         req = CircuitRequest(rid=rid, graph=graph,
                              t_submit=time.perf_counter(),
                              key=self._group_key(graph))
+        deadline = None if timeout is None else time.perf_counter() + timeout
         with self._work:
+            if self.max_queue is not None and \
+                    len(self.queue) >= self.max_queue:
+                if self.admission == "reject":
+                    self._counters["admission_rejected"] += 1
+                    raise QueueFullError(
+                        f"queue at capacity ({self.max_queue}); request "
+                        f"rejected (admission='reject')")
+                if self.admission == "shed_oldest":
+                    while len(self.queue) >= self.max_queue:
+                        head = self.queue.popleft()
+                        self._counters["admission_shed"] += 1
+                        self._finalize_failed_locked(
+                            [head], LoadShedError(
+                                f"request {head.rid} shed (FIFO head) to "
+                                f"admit request {rid} under "
+                                f"admission='shed_oldest'"))
+                else:                       # "block": producer backpressure
+                    waited = False
+                    while len(self.queue) >= self.max_queue:
+                        if not waited:
+                            self._counters["admission_blocked"] += 1
+                            waited = True
+                        rem = None if deadline is None \
+                            else deadline - time.perf_counter()
+                        if rem is not None and rem <= 0:
+                            raise TimeoutError(
+                                f"submit blocked on full queue "
+                                f"({self.max_queue}) for {timeout}s")
+                        self._work.wait(rem)
             self.queue.append(req)
             self._work.notify_all()
         return rid
+
+    def _validate(self, g: CircuitGraph) -> None:
+        """Per-request input guard: NaN/Inf features are rejected at the
+        door — a poisoned member would otherwise fail (or silently corrupt)
+        the whole collated batch it lands in."""
+        for name in ("x_cell", "x_net"):
+            x = np.asarray(getattr(g, name))
+            if not np.isfinite(x).all():
+                bad = int(np.size(x) - np.count_nonzero(np.isfinite(x)))
+                with self._lock:
+                    self._counters["rejected_inputs"] += 1
+                raise NonFiniteInputError(
+                    f"graph.{name} contains {bad} non-finite value(s) "
+                    f"of {x.size}; rejected at submit")
 
     def result(self, rid: int, timeout: Optional[float] = None,
                pop: bool = False) -> CircuitRequest:
@@ -281,6 +412,8 @@ class CircuitServeEngine:
             r = self.queue.popleft()
             if id(r) not in chosen:
                 self.queue.append(r)
+        # the queue shrank: wake producers blocked on admission backpressure
+        self._work.notify_all()
         return groups[pick]
 
     def _next_deadline_s(self, max_wait_s: float) -> Optional[float]:
@@ -295,29 +428,47 @@ class CircuitServeEngine:
 
     def _prepare(self, reqs: List[CircuitRequest], dev_idx: int):
         """Host side (runs on the packing pool): collate, pad, transfer to
-        ring slot ``dev_idx``."""
-        graphs = [r.graph for r in reqs]
-        n_real = len(graphs)
-        if self.pad_to_full and n_real < self.b:
-            # replicate the last member as filler so partial batches keep
-            # the full-batch signature (outputs dropped, loss weight zero)
-            graphs = graphs + [graphs[-1]] * (self.b - n_real)
-        key = reqs[0].key
-        # The bucket layout pins chunk widths and floors chunk counts so
-        # same-bucket batches share a signature.  Locking is per bucket:
-        # prepares of different buckets (the common in-flight set for an
-        # interleaved stream) pack concurrently; only the rare same-bucket
-        # pair serializes on its layout.
-        with self._lock:
-            layout = self._layouts.get(key)      # LRU touch; may evict
-            lock = self._buckets.setdefault(key, _BucketState()).lock
-        with lock:
-            batch = collate_graphs(graphs, fused=True, quantize=True,
-                                   node_bits=self.node_bits,
-                                   arena_bits=self.arena_bits,
-                                   chunk=self.chunk, layout=layout,
-                                   n_real=n_real)
-        graph = self.ring.put(batch.graph, dev_idx)
+        ring slot ``dev_idx``.  Collation errors are the batch's fault;
+        transfer errors are the device's (ring health records them)."""
+        try:
+            if self.chaos is not None:
+                self.chaos.stall("straggler")
+                self.chaos.raise_if("collate")
+            graphs = [r.graph for r in reqs]
+            n_real = len(graphs)
+            if self.pad_to_full and n_real < self.b:
+                # replicate the last member as filler so partial batches
+                # keep the full-batch signature (outputs dropped, loss
+                # weight zero)
+                graphs = graphs + [graphs[-1]] * (self.b - n_real)
+            key = reqs[0].key
+            # The bucket layout pins chunk widths and floors chunk counts
+            # so same-bucket batches share a signature.  Locking is per
+            # bucket: prepares of different buckets (the common in-flight
+            # set for an interleaved stream) pack concurrently; only the
+            # rare same-bucket pair serializes on its layout.
+            with self._lock:
+                layout = self._layouts.get(key)  # LRU touch; may evict
+                lock = self._buckets.setdefault(key, _BucketState()).lock
+            with lock:
+                batch = collate_graphs(graphs, fused=True, quantize=True,
+                                       node_bits=self.node_bits,
+                                       arena_bits=self.arena_bits,
+                                       chunk=self.chunk, layout=layout,
+                                       n_real=n_real)
+        except Exception:
+            # host-side failure before the device was touched: the routed
+            # slot must not be blamed — but a probe handout must not stay
+            # in probing limbo either (it would never be re-probed)
+            self.ring.release(dev_idx)
+            raise
+        try:
+            if self.chaos is not None:
+                self.chaos.raise_if("device_put", device=dev_idx)
+            graph = self.ring.put(batch.graph, dev_idx)
+        except Exception:
+            self.ring.record_failure(dev_idx)
+            raise
         return reqs, batch, graph, key, dev_idx
 
     def _dispatch(self, prepared):
@@ -340,15 +491,52 @@ class CircuitServeEngine:
             # version B
             params_d = self._params_of[dev_idx]
             version = self._params_version
-        out = fwd(params_d, graph)                    # async dispatch
-        return reqs, batch, out, version
+        try:
+            if self.chaos is not None:
+                self.chaos.raise_if("dispatch", device=dev_idx)
+            out = fwd(params_d, graph)                # async dispatch
+        except Exception:
+            self.ring.record_failure(dev_idx)
+            raise
+        return reqs, batch, out, version, dev_idx
 
     def _complete(self, inflight):
-        reqs, batch, out, version = inflight
-        preds = np.asarray(out)                       # device barrier
+        reqs, batch, out, version, dev_idx = inflight
+        try:
+            preds = np.asarray(out)                   # device barrier
+        except Exception:
+            self.ring.record_failure(dev_idx)
+            raise
+        self.ring.record_success(dev_idx)
+        if self.chaos is not None:
+            preds = self.chaos.poison(preds)
+        # Output guard: a non-finite member prediction must surface as a
+        # diagnosed failure, never as a served result.  Raising for the
+        # whole batch hands it to the containment ladder — a transient
+        # (poisoned output) heals on retry, a poisoned member bisects down
+        # to a single diagnosed request.
+        bad = [(r, m) for r, m in zip(reqs, batch.members)
+               if not np.isfinite(preds[m.cell_off:m.cell_off + m.n_cell]
+                                  ).all()]
+        if bad:
+            with self._lock:
+                self._counters["nonfinite_outputs"] += 1
+            rids = [r.rid for r, _ in bad]
+            counts = [int((~np.isfinite(
+                preds[m.cell_off:m.cell_off + m.n_cell])).sum())
+                for _, m in bad]
+            raise NonFiniteOutputError(
+                f"non-finite predictions for request(s) {rids} "
+                f"({counts} bad cells of "
+                f"{[m.n_cell for _, m in bad]}) on ring slot {dev_idx}")
         now = time.perf_counter()
         with self._done:
+            committed = []
             for r, m in zip(reqs, batch.members):
+                if r.final:
+                    continue          # an abandoned attempt raced us; the
+                    #                   first committed result stands
+                r.final = True
                 # copy: a view would pin the whole padded batch array, so
                 # max_finished / result(pop=True) would bound nothing
                 r.pred = preds[m.cell_off:m.cell_off + m.n_cell].copy()
@@ -356,16 +544,17 @@ class CircuitServeEngine:
                 r.params_version = version
                 self.finished[r.rid] = r
                 self._lat_window.append(r.latency_ms)
+                committed.append(m)
             if self.max_finished is not None:
                 while len(self.finished) > self.max_finished:
                     # dict preserves insertion order: drop the oldest
                     self.finished.pop(next(iter(self.finished)))
-            c = self._counters
-            c["batches"] += 1
-            c["requests"] += len(reqs)
-            c["real_cells"] += sum(m.n_cell
-                                   for m in batch.members[:batch.n_real])
-            c["padded_cells"] += batch.graph.n_cell
+            if committed:
+                c = self._counters
+                c["batches"] += 1
+                c["requests"] += len(committed)
+                c["real_cells"] += sum(m.n_cell for m in committed)
+                c["padded_cells"] += batch.graph.n_cell
             self._done.notify_all()
 
     def _evict_bucket(self, key: tuple, layout) -> None:
@@ -379,17 +568,112 @@ class CircuitServeEngine:
         """Contain a batch failure: mark its requests failed (result()
         re-raises for them) and keep serving — one malformed request must
         not strand the rest of the stream."""
-        now = time.perf_counter()
         with self._done:
-            for r in reqs:
-                r.error = exc
-                r.t_done = now
-                self.finished[r.rid] = r
-            if self.max_finished is not None:
-                while len(self.finished) > self.max_finished:
-                    self.finished.pop(next(iter(self.finished)))
-            self._counters["failures"] += len(reqs)
-            self._done.notify_all()
+            self._finalize_failed_locked(reqs, exc)
+
+    def _finalize_failed_locked(self, reqs: List[CircuitRequest],
+                                exc: BaseException) -> None:
+        """Commit failures (engine lock held).  Already-finalized requests
+        are skipped — an abandoned watchdog attempt may have raced us."""
+        now = time.perf_counter()
+        failed = 0
+        for r in reqs:
+            if r.final:
+                continue
+            r.final = True
+            r.error = exc
+            r.t_done = now
+            self.finished[r.rid] = r
+            failed += 1
+        if self.max_finished is not None:
+            while len(self.finished) > self.max_finished:
+                self.finished.pop(next(iter(self.finished)))
+        self._counters["failures"] += failed
+        self._done.notify_all()
+
+    # ------------------------------------------- containment ladder (§10)
+
+    def _attempt(self, reqs: List[CircuitRequest]) -> None:
+        """One full serve attempt of ``reqs`` on a freshly-routed device
+        (quarantined slots are skipped by the ring; a due probe may be
+        handed out here — a healing retry doubling as the health probe)."""
+        dev_idx = self.ring.next_index()
+        self._complete(self._dispatch(self._prepare(reqs, dev_idx)))
+
+    def _timed_attempt(self, reqs: List[CircuitRequest]) -> None:
+        """``_attempt`` bounded by ``watchdog_s``: the attempt runs on a
+        disposable daemon thread; on expiry the thread is abandoned (its
+        eventual late commit is voided by the requests' ``final`` flags)
+        and :class:`WatchdogTimeoutError` raises instead of hanging."""
+        if self.watchdog_s is None:
+            return self._attempt(reqs)
+        box: Dict[str, BaseException] = {}
+
+        def attempt():
+            try:
+                self._attempt(reqs)
+            except BaseException as e:
+                box["exc"] = e
+
+        th = threading.Thread(target=attempt, daemon=True)
+        th.start()
+        th.join(self.watchdog_s)
+        if th.is_alive():
+            with self._lock:
+                self._counters["watchdog_timeouts"] += 1
+            raise WatchdogTimeoutError(
+                f"healing attempt for batch of {len(reqs)} exceeded "
+                f"watchdog {self.watchdog_s}s")
+        if "exc" in box:
+            raise box["exc"]
+
+    def _heal(self, reqs: List[CircuitRequest], exc: BaseException,
+              depth: int = 0) -> None:
+        """The containment ladder, run off the serve loop after a batch's
+        pipeline attempt failed with ``exc``:
+
+        1. **retry** — up to ``max_retries`` full re-serves with
+           exponential backoff, each on a freshly-routed (healthy) device;
+        2. **bisect** — a batch that keeps failing splits in half and each
+           half re-enters the ladder, so a single poison member is isolated
+           in O(log B) rounds and ONLY it ultimately fails;
+        3. **fail** — a singleton that keeps failing is marked failed with
+           the last error (``result()`` re-raises it).
+
+        Healthy members re-served here are bit-identical to a fault-free
+        run: collation is block-diagonal and the bucket layout pins the
+        padded shapes, so a member's output rows do not depend on which
+        companions shared its batch."""
+        for attempt in range(self.max_retries):
+            time.sleep(self.retry_backoff_s * (2 ** attempt))
+            with self._lock:
+                self._counters["retries"] += 1
+            try:
+                self._timed_attempt(reqs)
+                return
+            except Exception as e:
+                exc = e
+        if len(reqs) > 1:
+            with self._lock:
+                self._counters["bisects"] += 1
+            mid = len(reqs) // 2
+            self._heal(reqs[:mid], exc, depth + 1)
+            self._heal(reqs[mid:], exc, depth + 1)
+        else:
+            self._fail(reqs, exc)
+
+    def _on_watchdog(self, reqs: List[CircuitRequest],
+                     dev_idx: Optional[int] = None) -> None:
+        """An in-flight pipeline batch outlived ``watchdog_s``: fail its
+        requests now (result() returns a timed-out error instead of
+        hanging) and blame the device — a wedge IS a device fault."""
+        with self._lock:
+            self._counters["watchdog_timeouts"] += 1
+        if dev_idx is not None:
+            self.ring.record_failure(dev_idx)
+        self._fail(reqs, WatchdogTimeoutError(
+            f"batch of {len(reqs)} in flight past the "
+            f"{self.watchdog_s}s watchdog"))
 
     # ------------------------------------------------------------- modes
 
@@ -397,7 +681,9 @@ class CircuitServeEngine:
         """Drain a snapshot of the queue: partial batches flush immediately
         (no deadline wait), batches round-robin over the device ring, and
         the packing pool keeps one batch in flight per device — the pool
-        packs batches i+1..i+D while the D devices run batches i-D+1..i."""
+        packs batches i+1..i+D while the D devices run batches i-D+1..i.
+        Failed batches enter the containment ladder synchronously (drain
+        mode has no serve loop to hand off to)."""
         batches = []
         with self._lock:
             if self._serving:
@@ -409,14 +695,36 @@ class CircuitServeEngine:
         t0 = time.perf_counter()
         inflight: Deque = deque()
         n_dev = len(self.ring)
-        for prepared in prefetch(batches, lambda ba: self._prepare(*ba),
+
+        def prep_safe(reqs, dev_idx):
+            # prefetch's iterator re-raises worker exceptions, which would
+            # strand every later batch — box the failure instead
+            try:
+                return self._prepare(reqs, dev_idx)
+            except Exception as e:
+                return _PREP_FAILED, reqs, e
+
+        def retire(entry):
+            try:
+                self._complete(entry)
+            except Exception as e:
+                self._heal(entry[0], e)
+
+        for prepared in prefetch(batches, lambda ba: prep_safe(*ba),
                                  depth=n_dev,
                                  n_threads=max(self.n_pack_threads, n_dev)):
-            inflight.append(self._dispatch(prepared))
+            if prepared[0] is _PREP_FAILED:
+                self._heal(prepared[1], prepared[2])
+                continue
+            try:
+                inflight.append(self._dispatch(prepared))
+            except Exception as e:
+                self._heal(prepared[0], e)
+                continue
             if len(inflight) > n_dev:
-                self._complete(inflight.popleft())
+                retire(inflight.popleft())
         while inflight:
-            self._complete(inflight.popleft())
+            retire(inflight.popleft())
         self._counters["wall_s"] += time.perf_counter() - t0
         return self.finished
 
@@ -434,28 +742,60 @@ class CircuitServeEngine:
         whenever no batch is due — so results surface during lulls instead
         of waiting for the next submit.
 
-        Batch failures are contained: a prepare/dispatch/complete exception
-        marks that batch's requests failed (``result()`` re-raises for
-        them, ``stats()["failures"]`` counts them) and the loop keeps
-        serving the rest of the stream."""
+        Batch failures are contained by the self-healing ladder: a
+        prepare/dispatch/complete exception hands the batch to a healer
+        thread (retry with backoff → bisect → fail only the poison member;
+        ``stats()`` counts ``retries``/``bisects``/``failures``) and the
+        loop keeps serving the rest of the stream.  With ``watchdog_s``
+        set, a batch wedged in flight past the bound is failed with
+        :class:`WatchdogTimeoutError` — ``result()`` never hangs on it."""
         max_wait_s = self.max_wait_ms * 1e-3
         n_dev = len(self.ring)
-        prep: Deque = deque()       # (Future of _prepare, reqs), in order
-        inflight: Deque = deque()   # dispatched, completion order
+        prep: Deque = deque()       # (Future of _prepare, reqs, t0, dev)
+        inflight: Deque = deque()   # (Future of _complete, reqs, t0, dev)
+
+        def overdue(t_start: float) -> bool:
+            return (self.watchdog_s is not None
+                    and time.perf_counter() - t_start > self.watchdog_s)
+
+        def heal_async(reqs_h, exc):
+            # containment off the serve thread: backoff sleeps and bisect
+            # rounds must not stall the happy path.  _healing keeps the
+            # drain honest (stop() waits for outstanding heals).
+            with self._lock:
+                self._healing += 1
+
+            def heal():
+                try:
+                    self._heal(reqs_h, exc)
+                finally:
+                    with self._work:
+                        self._healing -= 1
+                        self._work.notify_all()
+
+            threading.Thread(target=heal, daemon=True).start()
 
         def dispatch_head():
-            fut, reqs_p = prep.popleft()
+            fut, reqs_p, t_start, _dev = prep.popleft()
             try:
-                inflight.append(self._dispatch(fut.result()))
+                entry = self._dispatch(fut.result())
             except Exception as e:
-                self._fail(reqs_p, e)
+                heal_async(reqs_p, e)
+                return
+            cfut = pool.submit(self._complete, entry)
+            cfut.add_done_callback(self._notify_work)
+            inflight.append((cfut, reqs_p, t_start, entry[4]))
 
-        def complete_head():
-            entry = inflight.popleft()
-            try:
-                self._complete(entry)
-            except Exception as e:
-                self._fail(entry[0], e)
+        def reap_head():
+            cfut, reqs_c, t_start, dev_idx = inflight.popleft()
+            if cfut.done():
+                exc = cfut.exception()
+                if exc is not None:
+                    heal_async(reqs_c, exc)
+            else:
+                # overdue and still running: abandon the attempt (the
+                # `final` flags void its late commit) and time it out
+                self._on_watchdog(reqs_c, dev_idx)
 
         with self._lock:
             if self._serving:
@@ -466,47 +806,77 @@ class CircuitServeEngine:
             # already-queued requests and returns).  _stop resets on exit,
             # so a later serve_forever() starts fresh.
         t0 = time.perf_counter()
+        # +2 workers: a wedged _complete occupying a worker past its
+        # watchdog must not starve the packing lookahead
         pool = ThreadPoolExecutor(
-            max_workers=max(self.n_pack_threads, n_dev))
+            max_workers=max(self.n_pack_threads, n_dev) + 2)
         try:
             while True:
                 while prep and prep[0][0].done():
                     dispatch_head()
-                while len(inflight) > n_dev:
-                    complete_head()
+                while inflight and (inflight[0][0].done()
+                                    or overdue(inflight[0][2])):
+                    reap_head()
+                if prep and overdue(prep[0][2]):
+                    # wedged prepare (e.g. a stalled host thread): the
+                    # whole batch times out, the orphaned future's result
+                    # is never dispatched; the routed slot takes the blame
+                    # (which also resolves a probe handout)
+                    fut, reqs_p, _, dev_p = prep.popleft()
+                    fut.cancel()
+                    self._on_watchdog(reqs_p, dev_p)
                 reqs = dev_idx = None
                 with self._work:
-                    # stopping flushes partials immediately — no deadline
-                    reqs = self._take_due_batch(
-                        0.0 if self._stop else max_wait_s)
+                    # stopping flushes partials immediately — no deadline;
+                    # one batch in flight per device bounds device queueing
+                    if len(inflight) <= n_dev:
+                        reqs = self._take_due_batch(
+                            0.0 if self._stop else max_wait_s)
                     if reqs is not None:
                         dev_idx = self.ring.next_index()
-                    elif prep or inflight:
-                        pass        # drain the pipeline below
+                    elif prep or inflight or self._healing:
+                        # pipeline busy: sleep until a future lands, a
+                        # submit arrives, or the next watchdog/queue
+                        # deadline — unless a head is already actionable
+                        if not ((prep and prep[0][0].done()) or
+                                (inflight and inflight[0][0].done())):
+                            self._work.wait(
+                                self._tick_s(prep, inflight, max_wait_s))
+                        continue
                     elif self._stop or (stop_when_idle and not self.queue):
-                        break       # queue empty, pipeline dry
+                        break       # queue empty, pipeline dry, heals done
                     else:
                         # nothing due and nothing in flight: sleep until
                         # the head's deadline / a submit / stop()
                         self._work.wait(self._next_deadline_s(max_wait_s))
                         continue
-                if reqs is not None:
-                    fut = pool.submit(self._prepare, reqs, dev_idx)
-                    fut.add_done_callback(self._notify_work)
-                    prep.append((fut, reqs))
-                elif prep:
-                    # pipeline head; dispatched (or failed) next iteration.
-                    # exception() blocks without re-raising here.
-                    prep[0][0].exception()
-                else:
-                    complete_head()
+                fut = pool.submit(self._prepare, reqs, dev_idx)
+                fut.add_done_callback(self._notify_work)
+                prep.append((fut, reqs, time.perf_counter(), dev_idx))
         finally:
-            pool.shutdown(wait=True)
+            pool.shutdown(wait=False)
             with self._lock:
                 self._serving = False
                 self._stop = False
             self._counters["wall_s"] += time.perf_counter() - t0
         return self.finished
+
+    def _tick_s(self, prep, inflight, max_wait_s: float) -> Optional[float]:
+        """Bounded sleep for the serve loop while the pipeline is busy:
+        the soonest of the queue-head deadline and the heads' watchdog
+        deadlines (None blocks until a notify)."""
+        cands = []
+        q = self._next_deadline_s(max_wait_s)
+        if q is not None:
+            cands.append(q)
+        if self.watchdog_s is not None:
+            now = time.perf_counter()
+            if prep:
+                cands.append(max(prep[0][2] + self.watchdog_s - now, 0.0))
+            if inflight:
+                cands.append(max(inflight[0][2] + self.watchdog_s - now,
+                                 0.0))
+        return min(cands) if cands else None
 
     def stop(self) -> None:
         """Ask serve_forever() to drain (queue + in-flight batches) and
@@ -576,6 +946,7 @@ class CircuitServeEngine:
             fwds = [s.fwd for s in self._buckets.values()
                     if s.fwd is not None]
             live = sum(len(s.sigs) for s in self._buckets.values())
+        health = self.ring.health()
         out = dict(requests=c["requests"], batches=c["batches"],
                    compiles=self.compiles,
                    graphs_per_s=c["requests"] / max(c["wall_s"], 1e-9),
@@ -585,6 +956,19 @@ class CircuitServeEngine:
                                        / max(c["real_cells"], 1)),
                    deadline_flushes=c["deadline_flushes"],
                    failures=c["failures"],
+                   retries=c["retries"],
+                   bisects=c["bisects"],
+                   watchdog_timeouts=c["watchdog_timeouts"],
+                   nonfinite_outputs=c["nonfinite_outputs"],
+                   rejected_inputs=c["rejected_inputs"],
+                   admission_blocked=c["admission_blocked"],
+                   admission_rejected=c["admission_rejected"],
+                   admission_shed=c["admission_shed"],
+                   queued=len(self.queue),
+                   device_health=health["states"],
+                   quarantines=health["quarantines"],
+                   probes=health["probes"],
+                   readmissions=health["readmissions"],
                    devices=len(self.ring),
                    dispatches_per_device=c["dispatches_per_device"],
                    live_buckets=self.live_buckets,

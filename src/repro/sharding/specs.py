@@ -44,6 +44,7 @@ from __future__ import annotations
 import contextlib
 import itertools
 import threading
+import time
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -159,26 +160,128 @@ def batch_devices(mesh: Optional[Mesh] = None) -> Tuple:
 
 
 class DeviceRing:
-    """Round-robin router for embarrassingly parallel dispatches.
+    """Round-robin router for embarrassingly parallel dispatches, with
+    per-slot health state.
 
     Independent collated batches (serving) and gradient shards (data-
     parallel training) have no cross-device dataflow, so routing them onto
     distinct devices is pure throughput.  ``devices=None`` resolves via
     :func:`batch_devices` at construction time; ``next_index`` is a
     thread-safe round-robin counter (callers on packing-pool threads share
-    one ring)."""
+    one ring).
 
-    def __init__(self, devices: Optional[Sequence] = None):
+    Health (opt-in — nothing changes until a caller reports failures):
+    ``record_failure(i)`` / ``record_success(i)`` track consecutive
+    failures per slot.  ``quarantine_after`` consecutive failures move a
+    slot to ``"quarantined"`` and ``next_index`` routes around it; after
+    ``probe_interval_s`` the slot is handed out ONCE as a probe
+    (``"probing"``) — a success re-admits it, a failure re-quarantines and
+    restarts the probe clock.  With every slot down the ring degrades to
+    plain round-robin over all slots (refusing service is strictly worse
+    than trying a sick device).  The serve engine is the caller
+    (serve/circuit_engine.py containment ladder); DESIGN.md §10."""
+
+    UP, QUARANTINED, PROBING = "up", "quarantined", "probing"
+
+    def __init__(self, devices: Optional[Sequence] = None, *,
+                 quarantine_after: int = 3,
+                 probe_interval_s: float = 1.0,
+                 clock=time.monotonic):
         self.devices = tuple(devices) if devices is not None \
             else batch_devices()
         assert self.devices, "DeviceRing needs at least one device"
+        self.quarantine_after = quarantine_after
+        self.probe_interval_s = probe_interval_s
+        self._clock = clock
         self._count = itertools.count()
+        n = len(self.devices)
+        self._hlock = threading.Lock()
+        self._state = [self.UP] * n
+        self._fails = [0] * n               # consecutive failures per slot
+        self._since = [0.0] * n             # quarantine timestamp per slot
+        self.quarantines = 0
+        self.probes = 0
+        self.readmissions = 0
 
     def __len__(self) -> int:
         return len(self.devices)
 
     def next_index(self) -> int:
-        return next(self._count) % len(self.devices)
+        with self._hlock:
+            now = self._clock()
+            for i, st in enumerate(self._state):
+                if st == self.QUARANTINED and \
+                        now - self._since[i] >= self.probe_interval_s:
+                    # one probe dispatch; PROBING keeps the slot out of the
+                    # healthy rotation until the probe resolves
+                    self._state[i] = self.PROBING
+                    self.probes += 1
+                    return i
+            healthy = [i for i, st in enumerate(self._state)
+                       if st == self.UP]
+            if not healthy:                 # no survivors: degrade, serve
+                return next(self._count) % len(self.devices)
+            return healthy[next(self._count) % len(healthy)]
+
+    def record_failure(self, index: int) -> None:
+        """A device-attributable failure on slot ``index`` (dispatch /
+        transfer / watchdog timeout — NOT data faults)."""
+        with self._hlock:
+            i = index % len(self.devices)
+            self._fails[i] += 1
+            if self._state[i] == self.PROBING:
+                self._state[i] = self.QUARANTINED     # probe failed
+                self._since[i] = self._clock()
+            elif self._state[i] == self.UP and \
+                    self._fails[i] >= self.quarantine_after:
+                self._state[i] = self.QUARANTINED
+                self._since[i] = self._clock()
+                self.quarantines += 1
+
+    def release(self, index: int) -> None:
+        """The caller obtained ``index`` but never exercised the device
+        (e.g. host-side collation failed first).  A probe handout must not
+        stay in ``"probing"`` limbo — put it back to ``"quarantined"``
+        WITHOUT resetting the probe clock, so the very next ``next_index``
+        re-probes; no failure is attributed (the device was untouched)."""
+        with self._hlock:
+            i = index % len(self.devices)
+            if self._state[i] == self.PROBING:
+                self._state[i] = self.QUARANTINED
+
+    def record_success(self, index: int) -> None:
+        with self._hlock:
+            i = index % len(self.devices)
+            self._fails[i] = 0
+            if self._state[i] != self.UP:
+                self._state[i] = self.UP              # probe succeeded
+                self.readmissions += 1
+
+    def quarantine(self, index: int) -> None:
+        """Force a slot down (ops/bench hook: degraded-mode measurement,
+        draining a device for maintenance)."""
+        with self._hlock:
+            i = index % len(self.devices)
+            if self._state[i] == self.UP:
+                self.quarantines += 1
+            self._state[i] = self.QUARANTINED
+            self._since[i] = self._clock()
+
+    @property
+    def quarantined(self) -> Tuple[int, ...]:
+        with self._hlock:
+            return tuple(i for i, st in enumerate(self._state)
+                         if st != self.UP)
+
+    def health(self) -> dict:
+        """Snapshot for ``stats()``: per-slot state plus lifetime
+        quarantine/probe/readmission counters."""
+        with self._hlock:
+            return dict(states=list(self._state),
+                        consecutive_failures=list(self._fails),
+                        quarantines=self.quarantines,
+                        probes=self.probes,
+                        readmissions=self.readmissions)
 
     def put(self, tree, index: int):
         """``jax.device_put`` a pytree onto ring slot ``index``."""

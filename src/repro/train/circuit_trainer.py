@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hetero_mp import HeteroMPConfig, plan_applicable
+from repro.fault.inject import FaultInjector
+from repro.fault.monitor import StepMonitor
 from repro.graphs.circuit import CircuitGraph, relation_plan_of
 from repro.graphs.collate import collate_graphs
 from repro.kernels import ops
@@ -50,8 +52,22 @@ class CircuitTrainConfig:
     batch_size: int = 1
 
 
+def _grads_finite(grads) -> jax.Array:
+    """Scalar bool: every gradient leaf is NaN/Inf-free (traceable)."""
+    return jnp.all(jnp.stack([jnp.all(jnp.isfinite(g))
+                              for g in jax.tree.leaves(grads)]))
+
+
+def _where_tree(ok, new, old):
+    """``new`` where ``ok`` else ``old``, leafwise — a skipped step is a
+    true no-op (params, moments, AND the opt step counter stay put)."""
+    return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+
 class CircuitTrainer:
-    def __init__(self, cfg: CircuitTrainConfig, f_cell: int, f_net: int):
+    def __init__(self, cfg: CircuitTrainConfig, f_cell: int, f_net: int, *,
+                 chaos: Optional[FaultInjector] = None,
+                 monitor: Optional[StepMonitor] = None):
         self.cfg = cfg
         self.mp_cfg = HeteroMPConfig(hidden=cfg.hidden, k_cell=cfg.k_cell,
                                      k_net=cfg.k_net, backend=cfg.backend,
@@ -68,6 +84,21 @@ class CircuitTrainer:
         self._apply_fn = self._build_apply()
         self._batch_cache = {}        # id-tuple of member graphs -> device batch
         self._plan_cache = {}         # id(graph) -> plan-attached graph
+        # Robustness (DESIGN.md §10): the chaos harness (fault/inject.py)
+        # can stall steps; the StepMonitor flags the resulting stragglers
+        # (slack -> rebalance -> restart escalation); non-finite-grad steps
+        # are skipped in-jit (update frozen leafwise) and counted here.
+        self.chaos = chaos
+        self.monitor = monitor if monitor is not None \
+            else StepMonitor(n_hosts=1)
+        self.nonfinite_grad_steps = 0
+        self._global_step = 0
+
+    def _tick(self, duration_s: float) -> None:
+        """Feed one step's wall-clock to the StepMonitor (host 0 — the
+        single-process trainer; multi-host callers own their monitor)."""
+        self.monitor.record(self._global_step, 0, duration_s)
+        self._global_step += 1
 
     def _build_step(self):
         mp_cfg, lr, wd = self.mp_cfg, self.lr, self.cfg.weight_decay
@@ -75,10 +106,12 @@ class CircuitTrainer:
         @jax.jit
         def step(params, opt_state, graph: CircuitGraph):
             loss, grads = jax.value_and_grad(loss_fn)(params, graph, mp_cfg)
-            params, opt_state = adamw_update(params, grads, opt_state,
-                                             lr(opt_state.step),
-                                             weight_decay=wd)
-            return params, opt_state, loss
+            ok = _grads_finite(grads)
+            new_p, new_o = adamw_update(params, grads, opt_state,
+                                        lr(opt_state.step),
+                                        weight_decay=wd)
+            return (_where_tree(ok, new_p, params),
+                    _where_tree(ok, new_o, opt_state), loss, ok)
 
         return step
 
@@ -89,10 +122,12 @@ class CircuitTrainer:
         def step(params, opt_state, graph: CircuitGraph, cell_w):
             loss, grads = jax.value_and_grad(batched_loss_fn)(
                 params, graph, cell_w, mp_cfg)
-            params, opt_state = adamw_update(params, grads, opt_state,
-                                             lr(opt_state.step),
-                                             weight_decay=wd)
-            return params, opt_state, loss
+            ok = _grads_finite(grads)
+            new_p, new_o = adamw_update(params, grads, opt_state,
+                                        lr(opt_state.step),
+                                        weight_decay=wd)
+            return (_where_tree(ok, new_p, params),
+                    _where_tree(ok, new_o, opt_state), loss, ok)
 
         return step
 
@@ -144,9 +179,14 @@ class CircuitTrainer:
             lambda *gs: sum((w / total) * jax.device_put(g, dev0)
                             for w, g in zip(weights, gs)),
             *[g for _, g in outs])
+        if not all(np.isfinite(np.asarray(g)).all()
+                   for g in jax.tree.leaves(grads)):
+            # poisoned shard: skip the whole combined update (the same
+            # no-op the jitted steps apply in-trace)
+            return float(np.average(losses, weights=weights)), total, False
         self.params, self.opt_state = self._apply_fn(
             jax.device_put(self.params, dev0), self.opt_state, grads)
-        return float(np.average(losses, weights=weights)), total
+        return float(np.average(losses, weights=weights)), total, True
 
     def _planned(self, g: CircuitGraph) -> CircuitGraph:
         """``g`` with its RelationPlan attached and device-resident, cached
@@ -201,25 +241,43 @@ class CircuitTrainer:
         if b <= 1:
             losses = []
             for g in graphs:
-                self.params, self.opt_state, loss = self._step_fn(
+                if self.chaos is not None:
+                    self.chaos.stall("straggler")
+                t_step = time.perf_counter()
+                self.params, self.opt_state, loss, ok = self._step_fn(
                     self.params, self.opt_state, self._planned(g))
+                ok = bool(ok)                  # device barrier ends the step
+                self._tick(time.perf_counter() - t_step)
+                if not ok:
+                    self.nonfinite_grad_steps += 1
+                    continue                   # skipped: a true no-op step
                 losses.append(float(loss))
-            return float(np.mean(losses))
+            return float(np.mean(losses)) if losses else float("nan")
         ring = None
         if devices is not None:
             ring = DeviceRing(None if devices is True else devices)
         losses, weights = [], []
         for i in range(0, len(graphs), b):
             chunk = graphs[i:i + b]
+            if self.chaos is not None:
+                self.chaos.stall("straggler")
+            t_step = time.perf_counter()
             if ring is not None and len(chunk) > 1:
-                loss, n_real = self._dp_step(chunk, ring)
+                loss, n_real, ok = self._dp_step(chunk, ring)
             else:
                 graph, cell_w, n_real = self._collate(chunk)
-                self.params, self.opt_state, loss = self._batched_step_fn(
-                    self.params, self.opt_state, graph, cell_w)
+                self.params, self.opt_state, loss, ok = \
+                    self._batched_step_fn(self.params, self.opt_state,
+                                          graph, cell_w)
+                ok = bool(ok)
+            self._tick(time.perf_counter() - t_step)
+            if not ok:
+                self.nonfinite_grad_steps += 1
+                continue
             losses.append(float(loss))
             weights.append(n_real)
-        return float(np.average(losses, weights=weights))
+        return float(np.average(losses, weights=weights)) if losses \
+            else float("nan")
 
     def profile_k(self, graphs: List[CircuitGraph]) -> Dict[str, int]:
         """The paper's preprocessing profiler (Sec. 4.3): pick the

@@ -1,0 +1,139 @@
+"""fault/inject.py unit coverage: rule validation, at-index scheduling,
+seeded Bernoulli determinism, firing caps, device filters, the straggler
+stall, NaN poisoning, and the stateful device-loss down window."""
+
+import numpy as np
+import pytest
+
+from repro.fault import FaultInjector, FaultRule, InjectedFault, POINTS
+
+
+def _fires(inj, point, n, device=None):
+    """Touch ``point`` n times; return the boolean firing pattern."""
+    pat = []
+    for _ in range(n):
+        try:
+            inj.raise_if(point, device=device)
+            pat.append(False)
+        except InjectedFault:
+            pat.append(True)
+    return pat
+
+
+def test_unknown_point_rejected():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        FaultRule("warp_drive")
+    for p in POINTS:
+        FaultRule(p)                        # every documented point is legal
+
+
+def test_at_fires_on_exact_occurrences():
+    inj = FaultInjector([FaultRule("collate", at=(1, 3))])
+    assert _fires(inj, "collate", 6) == [False, True, False, True,
+                                         False, False]
+    assert inj.counts() == {"collate": 2}
+
+
+def test_rate_schedule_is_seed_deterministic():
+    mk = lambda seed: FaultInjector([FaultRule("dispatch", rate=0.5)],
+                                    seed=seed)
+    a = _fires(mk(7), "dispatch", 100)
+    b = _fires(mk(7), "dispatch", 100)
+    c = _fires(mk(8), "dispatch", 100)
+    assert a == b                           # same seed -> same schedule
+    assert a != c                           # different seed -> different
+    assert 10 < sum(a) < 90                 # and it is actually Bernoulli
+
+
+def test_n_caps_total_firings():
+    inj = FaultInjector([FaultRule("collate", rate=1.0, n=2)])
+    assert _fires(inj, "collate", 5) == [True, True, False, False, False]
+
+
+def test_device_filter_scopes_rule():
+    inj = FaultInjector([FaultRule("device_put", at=(0,), device=1)])
+    assert _fires(inj, "device_put", 3, device=0) == [False] * 3
+    # occurrences count per matching device, so slot 1 still sees occ 0
+    assert _fires(inj, "device_put", 2, device=1) == [True, False]
+    ev = inj.events[0]
+    assert ev.point == "device_put" and ev.device == 1
+
+
+def test_fault_carries_point_and_device():
+    inj = FaultInjector([FaultRule("dispatch", at=(0,))])
+    with pytest.raises(InjectedFault) as ei:
+        inj.raise_if("dispatch", device=2)
+    assert ei.value.point == "dispatch" and ei.value.device == 2
+    assert "dispatch" in str(ei.value) and "slot 2" in str(ei.value)
+
+
+def test_stall_sleeps_scheduled_delay():
+    inj = FaultInjector([FaultRule("straggler", at=(1,), delay_s=0.01)])
+    assert inj.stall() == 0.0               # occurrence 0: quiet
+    assert inj.stall() == 0.01              # occurrence 1: fires
+    assert inj.stall() == 0.0
+    assert inj.counts() == {"straggler": 1}
+
+
+def test_poison_nans_full_output_once():
+    inj = FaultInjector([FaultRule("nan_output", at=(1,))])
+    out = np.ones((4, 2), np.float32)
+    same = inj.poison(out)
+    assert same is out                      # quiet touch: passthrough
+    bad = inj.poison(out)
+    assert np.isnan(bad).all() and bad.shape == out.shape
+    assert np.isfinite(out).all()           # the original is never mutated
+    assert inj.poison(out) is out
+
+
+def test_device_loss_opens_down_window():
+    """The triggering touch plus ``down_for - 1`` follow-ups fail on the
+    lost slot; other slots are untouched; the window then closes."""
+    inj = FaultInjector([FaultRule("device_loss", at=(0,), device=1,
+                                   down_for=3)])
+    # slot 0 is never down
+    assert _fires(inj, "device_put", 2, device=0) == [False, False]
+    pat = []
+    for _ in range(5):
+        try:
+            inj.raise_if("dispatch", device=1)
+            pat.append(None)
+        except InjectedFault as e:
+            pat.append(e.point)
+    assert pat == ["device_loss"] * 3 + [None, None]
+    assert inj.counts() == {"device_loss": 3}
+    # slot 0 stayed healthy throughout the window
+    assert _fires(inj, "device_put", 2, device=0) == [False, False]
+
+
+def test_down_window_blocks_every_point_touch_of_slot():
+    """Once a slot is down, device_put AND dispatch touches both fail —
+    the engine sees the loss wherever it next touches the device."""
+    inj = FaultInjector([FaultRule("device_loss", at=(0,), device=0,
+                                   down_for=2)])
+    with pytest.raises(InjectedFault):
+        inj.raise_if("device_put", device=0)
+    with pytest.raises(InjectedFault):
+        inj.raise_if("dispatch", device=0)
+    inj.raise_if("dispatch", device=0)      # window exhausted
+
+
+def test_thread_safety_under_concurrent_touches():
+    import threading
+    inj = FaultInjector([FaultRule("dispatch", rate=0.3, n=50)])
+    hits = []
+
+    def worker():
+        for _ in range(200):
+            try:
+                inj.raise_if("dispatch")
+            except InjectedFault:
+                hits.append(1)
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(hits) == 50                  # the n cap holds under races
+    assert inj.counts()["dispatch"] == 50

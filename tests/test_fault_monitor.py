@@ -1,0 +1,206 @@
+"""fault/monitor.py coverage: ElasticController shrink edge cases,
+shard_remap determinism, StepMonitor escalation + lazy host registration,
+Heartbeat atomic-write liveness and corruption tolerance."""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.fault import ElasticController, Heartbeat, StepMonitor
+
+
+# ------------------------------------------------------ ElasticController
+
+def test_shrink_partial_loss_shrinks_data_axis():
+    ctl = ElasticController(data=4, model=2, pods=1)
+    assert ctl.shrink(1) == (1, 2, 2)       # 3 survivors -> pow2 data = 2
+    assert ctl.shrink(2) == (1, 2, 2)
+    assert ctl.shrink(3) == (1, 1, 2)
+
+
+def test_shrink_whole_pod_loss_drops_pod_axis_first():
+    ctl = ElasticController(data=4, model=1, pods=2)
+    # losing a full pod's worth: the pod axis absorbs it, data survives
+    assert ctl.shrink(4) == (1, 4, 1)
+    # losing more than a pod: pod drops AND data shrinks
+    assert ctl.shrink(5) == (1, 2, 1)
+
+
+def test_shrink_single_survivor():
+    ctl = ElasticController(data=2, model=1, pods=2)
+    pods, data, model = ctl.shrink(3)       # one survivor of four
+    assert (pods, data, model) == (1, 1, 1)
+
+
+def test_shrink_no_survivors_raises():
+    ctl = ElasticController(data=2, model=1, pods=1)
+    with pytest.raises(RuntimeError, match="no survivors"):
+        ctl.shrink(2)
+    with pytest.raises(RuntimeError, match="no survivors"):
+        ctl.shrink(3)                       # over-reported loss still raises
+
+
+def test_shrink_model_axis_preserved():
+    ctl = ElasticController(data=8, model=4, pods=1)
+    for failed in (1, 3, 5, 7):
+        _, _, model = ctl.shrink(failed)
+        assert model == 4                   # layout-changing axis untouched
+
+
+def test_shard_remap_round_robin_and_deterministic():
+    ctl = ElasticController(data=8, model=1)
+    dead = [6, 1, 3]
+    remap = ctl.shard_remap(8, dead)
+    # dead shards only, each mapped to a survivor, round-robin over the
+    # sorted dead list
+    alive = [h for h in range(8) if h not in dead]
+    assert sorted(remap) == sorted(dead)
+    assert remap == {1: alive[0], 3: alive[1], 6: alive[2]}
+    assert all(t not in dead for t in remap.values())
+    # pure function of (n_shards, dead): same inputs, same remap
+    assert remap == ctl.shard_remap(8, [3, 6, 1])
+
+
+def test_shard_remap_wraps_over_few_survivors():
+    ctl = ElasticController(data=4, model=1)
+    remap = ctl.shard_remap(4, [0, 1, 2])   # one survivor takes all three
+    assert remap == {0: 3, 1: 3, 2: 3}
+
+
+# ----------------------------------------------------------- StepMonitor
+
+def _feed_steady(mon, host=0, n=10, dt=0.1):
+    for s in range(n):
+        assert mon.record(s, host, dt) is None
+
+
+def test_stepmonitor_slack_then_rebalance_escalation():
+    mon = StepMonitor(n_hosts=1, patience=3)
+    _feed_steady(mon, n=10)
+    actions = []
+    for s in range(10, 14):
+        ev = mon.record(s, 0, 0.5)          # straggling but under deadline
+        if ev is not None:
+            actions.append(ev.action)
+    # strikes accumulate: slack first, rebalance at patience
+    assert actions[:2] == ["slack", "slack"]
+    assert "rebalance" in actions[2:]
+
+
+def test_stepmonitor_deadline_restarts_immediately():
+    mon = StepMonitor(n_hosts=1)
+    _feed_steady(mon, n=10)
+    ev = mon.record(10, 0, 10.0 * 0.1 * 1.5)   # past median*deadline_factor
+    assert ev is not None and ev.action == "restart"
+
+
+def test_stepmonitor_recovery_decays_strikes():
+    mon = StepMonitor(n_hosts=1, patience=2)
+    _feed_steady(mon, n=10)
+    assert mon.record(10, 0, 0.5).action == "slack"
+    for s in range(11, 14):
+        mon.record(s, 0, 0.1)               # healthy steps decay the strike
+    ev = mon.record(14, 0, 0.5)
+    assert ev is not None and ev.action == "slack"   # not escalated
+
+
+def test_stepmonitor_lazy_host_registration():
+    """Hosts joining after construction (elastic mesh growth) register
+    lazily instead of raising KeyError."""
+    mon = StepMonitor(n_hosts=1)
+    assert mon.record(0, 5, 0.1) is None    # unseen host id
+    assert 5 in mon.history and mon.strikes[5] == 0
+    assert mon.n_hosts == 6
+    # the lazy host gets the same statistics treatment
+    for s in range(1, 10):
+        mon.record(s, 5, 0.1)
+    ev = mon.record(10, 5, 5.0)
+    assert ev is not None and ev.host == 5
+
+
+# ------------------------------------------------------------- Heartbeat
+
+def test_heartbeat_liveness_roundtrip(tmp_path):
+    path = str(tmp_path)
+    hb = Heartbeat(path, host=0, interval=0.0)
+    hb.beat(step=7)
+    t_beat = time.time()
+    assert Heartbeat.dead_hosts(path, timeout=60.0) == []
+    assert Heartbeat.dead_hosts(path, timeout=0.5, now=t_beat + 10) == [0]
+    rec = json.load(open(os.path.join(path, "host_0.json")))
+    assert rec["step"] == 7 and rec["host"] == 0
+
+
+def test_heartbeat_interval_rate_limits(tmp_path):
+    path = str(tmp_path)
+    hb = Heartbeat(path, host=1, interval=1000.0)
+    hb.beat(step=1)
+    hb.beat(step=2)                         # suppressed by the interval
+    rec = json.load(open(os.path.join(path, "host_1.json")))
+    assert rec["step"] == 1
+
+
+def test_heartbeat_write_is_atomic(tmp_path):
+    """beat() writes via temp-file + rename: no partially-written final
+    record ever exists, and leftover .tmp files are ignored by readers."""
+    path = str(tmp_path)
+    hb = Heartbeat(path, host=0, interval=0.0)
+    hb.beat(step=1)
+    assert not [f for f in os.listdir(path) if f.endswith(".tmp")]
+    # a stray tmp from a crashed writer must not confuse dead_hosts
+    with open(os.path.join(path, "host_3.json.tmp"), "w") as f:
+        f.write('{"host": 3, "time"')
+    assert Heartbeat.dead_hosts(path, timeout=60.0) == []
+
+
+def test_dead_hosts_skips_corrupt_records(tmp_path):
+    path = str(tmp_path)
+    hb = Heartbeat(path, host=0, interval=0.0)
+    hb.beat(step=1)
+    # truncated JSON (the failure mode non-atomic writes used to produce)
+    with open(os.path.join(path, "host_1.json"), "w") as f:
+        f.write('{"host": 1, "ti')
+    # wrong schema
+    with open(os.path.join(path, "host_2.json"), "w") as f:
+        json.dump({"hello": "world"}, f)
+    # stale but valid record on another host
+    with open(os.path.join(path, "host_4.json"), "w") as f:
+        json.dump({"host": 4, "step": 0, "time": time.time() - 1e6}, f)
+    dead = Heartbeat.dead_hosts(path, timeout=60.0)
+    assert dead == [4]                      # corrupt skipped, stale flagged
+
+
+def test_heartbeat_concurrent_beat_and_read(tmp_path):
+    """Hammer beat() while polling dead_hosts(): readers never crash on a
+    mid-write record (the regression the atomic rename fixes)."""
+    path = str(tmp_path)
+    hb = Heartbeat(path, host=0, interval=0.0)
+    stop = threading.Event()
+    errors = []
+
+    def writer():
+        step = 0
+        while not stop.is_set():
+            hb.beat(step)
+            step += 1
+
+    def reader():
+        while not stop.is_set():
+            try:
+                Heartbeat.dead_hosts(path, timeout=60.0)
+            except Exception as e:          # pragma: no cover
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=writer),
+               threading.Thread(target=reader)]
+    for t in threads:
+        t.start()
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10.0)
+    assert not errors

@@ -1,0 +1,445 @@
+"""Self-healing serving + training under deterministic chaos (DESIGN.md
+§10, ISSUE-6 acceptance).
+
+The containment ladder's promise is exact: healthy members of a failed
+batch are re-served with predictions **bit-identical** to a fault-free run
+(block-diagonal collation + bucket-pinned shapes make member outputs
+independent of batch companions), so every parity check below is
+``np.array_equal``, not allclose.
+
+Fault sources used here:
+
+* chaos harness (fault/inject.py) for transient dispatch/output faults,
+  stragglers, and device loss;
+* a *malformed* graph (feature rows disagree with ``n_cell``) as the
+  persistent poison member — it passes the finiteness gate at submit but
+  fails collation deterministically, so only bisection can isolate it.
+"""
+
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hetero_mp import HeteroMPConfig
+from repro.fault import FaultInjector, FaultRule, StepMonitor
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.models.hgnn import init_drcircuitgnn
+from repro.serve import (CircuitServeEngine, LoadShedError,
+                         NonFiniteInputError, NonFiniteOutputError,
+                         QueueFullError, WatchdogTimeoutError)
+from repro.train.circuit_trainer import CircuitTrainConfig, CircuitTrainer
+
+
+def _graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+
+def _malformed(g):
+    """Persistent poison: one feature row short of ``n_cell``.  Finite (so
+    it passes submit validation), same shape bucket, but collation raises
+    every time it is a batch member."""
+    return dataclasses.replace(g, x_cell=g.x_cell[:-1])
+
+
+def _nan_features(g):
+    return dataclasses.replace(g, x_cell=jnp.full_like(g.x_cell, jnp.nan))
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = HeteroMPConfig(hidden=32, k_cell=8, k_net=8, backend="xla_fused")
+    params = init_drcircuitgnn(jax.random.PRNGKey(0), 16, 16, 32)
+    return params, cfg
+
+
+def _engine(model, **kw):
+    params, cfg = model
+    kw.setdefault("max_wait_ms", 30.0)
+    return CircuitServeEngine(params, cfg, **kw)
+
+
+def _serve_on_thread(eng):
+    t = threading.Thread(target=eng.serve_forever)
+    t.start()
+    return t
+
+
+def _reference(model, graphs, **kw):
+    """Fault-free predictions for ``graphs`` (drain mode; member
+    independence makes batch composition irrelevant)."""
+    eng = _engine(model, **kw)
+    rids = [eng.submit(g) for g in graphs]
+    eng.run()
+    return [eng.result(r).pred for r in rids]
+
+
+# --------------------------------------------------- containment ladder
+
+def test_retry_recovers_transient_dispatch_fault(model):
+    chaos = FaultInjector([FaultRule("dispatch", at=(0,))])
+    eng = _engine(model, max_batch=2, max_retries=2,
+                  retry_backoff_s=0.01, chaos=chaos)
+    t = _serve_on_thread(eng)
+    try:
+        graphs = [_graph(80, 40, s) for s in range(2)]
+        rids = [eng.submit(g) for g in graphs]
+        preds = [eng.result(r, timeout=240.0).pred for r in rids]
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    assert not t.is_alive()
+    for p, ref in zip(preds, _reference(model, graphs)):
+        assert np.array_equal(p, ref)       # bit-identical to fault-free
+    st = eng.stats()
+    assert st["retries"] >= 1 and st["failures"] == 0, st
+    assert chaos.counts()["dispatch"] == 1
+
+
+def test_bisect_isolates_poison_member(model):
+    """A persistently-failing batch bisects down until ONLY the poison
+    member errors; every healthy member is re-served bit-identically."""
+    graphs = [_graph(80, 40, s) for s in range(4)]
+    poison = _malformed(_graph(80, 40, 99))
+    eng = _engine(model, max_batch=4, max_retries=1, retry_backoff_s=0.005)
+    t = _serve_on_thread(eng)
+    try:
+        # the poison lands inside a full batch of 4 (3 healthy + 1 poison)
+        rids = [eng.submit(g) for g in (graphs[0], graphs[1], poison,
+                                        graphs[2])]
+        healthy = {rids[0]: graphs[0], rids[1]: graphs[1],
+                   rids[3]: graphs[2]}
+        refs = dict(zip(healthy, _reference(model, list(healthy.values()))))
+        for rid in healthy:
+            assert np.array_equal(eng.result(rid, timeout=240.0).pred,
+                                  refs[rid])
+        with pytest.raises(RuntimeError) as ei:
+            eng.result(rids[2], timeout=240.0)
+        assert isinstance(ei.value.__cause__, ValueError)   # collate error
+        # the rest of the stream keeps serving after the poison is contained
+        r_after = eng.submit(graphs[3])
+        assert eng.result(r_after, timeout=240.0).pred is not None
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    assert not t.is_alive()
+    st = eng.stats()
+    assert st["bisects"] >= 1, st
+    assert st["failures"] == 1, st          # ONLY the poison request
+
+
+def test_transient_nan_output_heals_on_retry(model):
+    chaos = FaultInjector([FaultRule("nan_output", at=(0,))])
+    eng = _engine(model, max_batch=2, max_retries=2,
+                  retry_backoff_s=0.01, chaos=chaos)
+    t = _serve_on_thread(eng)
+    try:
+        graphs = [_graph(80, 40, s) for s in range(2)]
+        rids = [eng.submit(g) for g in graphs]
+        preds = [eng.result(r, timeout=240.0).pred for r in rids]
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    for p, ref in zip(preds, _reference(model, graphs)):
+        assert np.array_equal(p, ref)
+    st = eng.stats()
+    assert st["nonfinite_outputs"] == 1 and st["failures"] == 0, st
+    assert st["retries"] >= 1, st
+
+
+def test_persistent_nan_output_diagnosed(model):
+    """An output poisoned on every attempt ends as a diagnosed
+    NonFiniteOutputError, not a served NaN."""
+    chaos = FaultInjector([FaultRule("nan_output", rate=1.0)])
+    eng = _engine(model, max_batch=1, max_retries=1,
+                  retry_backoff_s=0.005, chaos=chaos)
+    t = _serve_on_thread(eng)
+    try:
+        rid = eng.submit(_graph(80, 40, 0))
+        with pytest.raises(RuntimeError) as ei:
+            eng.result(rid, timeout=240.0)
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    cause = ei.value.__cause__
+    assert isinstance(cause, NonFiniteOutputError)
+    assert "non-finite predictions" in str(cause)
+    assert eng.stats()["nonfinite_outputs"] >= 2   # initial + retry
+
+
+def test_watchdog_bounds_wedged_batch(model):
+    """A wedged prepare (chaos straggler far past the watchdog) becomes a
+    prompt WatchdogTimeoutError — result() never hangs on it — and the
+    engine keeps serving afterwards."""
+    chaos = FaultInjector([FaultRule("straggler", at=(1,), delay_s=5.0)])
+    eng = _engine(model, max_batch=1, max_retries=0, chaos=chaos)
+    t = _serve_on_thread(eng)
+    try:
+        g = _graph(80, 40, 0)
+        # warm the bucket (compile) before arming the watchdog, so the
+        # bound measures the wedge, not the first-dispatch compile
+        assert eng.result(eng.submit(g), timeout=240.0).pred is not None
+        eng.watchdog_s = 0.3
+        t0 = time.perf_counter()
+        rid = eng.submit(g)                 # straggler occurrence 1 wedges
+        with pytest.raises(RuntimeError) as ei:
+            eng.result(rid, timeout=240.0)
+        bounded = time.perf_counter() - t0
+        assert isinstance(ei.value.__cause__, WatchdogTimeoutError)
+        assert bounded < 4.0                # far less than the 5s wedge
+        # next request (straggler quiet) is served normally
+        rid2 = eng.submit(g)
+        assert eng.result(rid2, timeout=240.0).pred is not None
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    assert eng.stats()["watchdog_timeouts"] >= 1
+
+
+def test_device_loss_quarantine_probe_readmission(model):
+    """A lost ring slot accumulates consecutive failures -> quarantined
+    (routing continues on the survivor) -> periodically probed -> probe
+    succeeds once the loss window passes -> re-admitted.  Two logical slots
+    on the one local device stand in for two devices."""
+    d0 = jax.devices()[0]
+    chaos = FaultInjector([FaultRule("device_loss", at=(0,), device=1,
+                                     down_for=4)])
+    eng = _engine(model, max_batch=1, devices=[d0, d0],
+                  quarantine_after=2, probe_interval_s=0.15,
+                  max_retries=3, retry_backoff_s=0.01, chaos=chaos)
+    t = _serve_on_thread(eng)
+    g = _graph(80, 40, 0)
+    try:
+        saw_quarantine = False
+        deadline = time.time() + 240.0
+        while time.time() < deadline:
+            rid = eng.submit(g)
+            assert eng.result(rid, timeout=240.0).pred is not None
+            h = eng.ring.health()
+            saw_quarantine = saw_quarantine or "quarantined" in h["states"]
+            if h["readmissions"] >= 1:
+                break
+            time.sleep(0.03)
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    st = eng.stats()
+    assert saw_quarantine, st
+    assert st["quarantines"] >= 1 and st["probes"] >= 1, st
+    assert st["readmissions"] >= 1, st
+    assert st["failures"] == 0, st          # retries absorbed every loss
+    assert st["device_health"] == ["up", "up"], st
+
+
+def test_ring_probe_release_never_sticks():
+    """A probe handout whose attempt dies before touching the device is
+    released back to quarantined WITHOUT resetting the probe clock — the
+    slot is re-probed immediately instead of rotting in probing limbo."""
+    from repro.sharding.specs import DeviceRing
+    t = [0.0]
+    ring = DeviceRing([object(), object()], quarantine_after=1,
+                      probe_interval_s=1.0, clock=lambda: t[0])
+    ring.record_failure(1)
+    assert ring.health()["states"][1] == "quarantined"
+    t[0] = 1.5
+    assert ring.next_index() == 1           # probe handout
+    assert ring.health()["states"][1] == "probing"
+    ring.release(1)                         # attempt never reached the slot
+    assert ring.health()["states"][1] == "quarantined"
+    assert ring.next_index() == 1           # re-probed at once
+    ring.record_success(1)
+    h = ring.health()
+    assert h["states"][1] == "up" and h["readmissions"] == 1
+    assert h["probes"] == 2
+    ring.release(0)                         # no-op on a healthy slot
+    assert ring.health()["states"][0] == "up"
+
+
+# ------------------------------------------------------ admission control
+
+def test_admission_reject(model):
+    eng = _engine(model, max_queue=2, admission="reject")
+    g = _graph(60, 30, 0)
+    eng.submit(g)
+    eng.submit(g)
+    with pytest.raises(QueueFullError):
+        eng.submit(g)
+    st = eng.stats()
+    assert st["admission_rejected"] == 1 and st["queued"] == 2, st
+
+
+def test_admission_shed_oldest(model):
+    eng = _engine(model, max_queue=2, admission="shed_oldest")
+    g = _graph(60, 30, 0)
+    r1, r2 = eng.submit(g), eng.submit(g)
+    r3 = eng.submit(g)                      # sheds r1, admits r3
+    with pytest.raises(RuntimeError) as ei:
+        eng.result(r1, timeout=1.0)         # already finalized: no serving
+    assert isinstance(ei.value.__cause__, LoadShedError)
+    st = eng.stats()
+    assert st["admission_shed"] == 1 and st["failures"] == 1, st
+    eng.run()                               # survivors still serve fine
+    assert eng.result(r2).pred is not None
+    assert eng.result(r3).pred is not None
+
+
+def test_admission_block_backpressures_producer(model):
+    eng = _engine(model, max_queue=1, admission="block", max_batch=1)
+    t = _serve_on_thread(eng)
+    try:
+        g = _graph(60, 30, 0)
+        rids = [eng.submit(g) for _ in range(6)]   # blocks while compiling
+        for r in rids:
+            assert eng.result(r, timeout=240.0).pred is not None
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    st = eng.stats()
+    assert st["admission_blocked"] >= 1, st
+    assert st["failures"] == 0 and st["requests"] == 6, st
+
+
+def test_admission_block_timeout(model):
+    eng = _engine(model, max_queue=1, admission="block")
+    g = _graph(60, 30, 0)
+    eng.submit(g)
+    with pytest.raises(TimeoutError, match="blocked on full queue"):
+        eng.submit(g, timeout=0.05)         # nothing draining the queue
+    assert eng.stats()["admission_blocked"] == 1
+
+
+def test_nonfinite_input_rejected_at_submit(model):
+    eng = _engine(model)
+    with pytest.raises(NonFiniteInputError, match="x_cell"):
+        eng.submit(_nan_features(_graph(60, 30, 0)))
+    st = eng.stats()
+    assert st["rejected_inputs"] == 1 and st["queued"] == 0, st
+    # validation off lets the same graph through (the output guard and the
+    # ladder own containment then)
+    eng2 = _engine(model, validate_inputs=False)
+    eng2.submit(_nan_features(_graph(60, 30, 0)))
+    assert eng2.stats()["queued"] == 1
+
+
+# ----------------------------------------- the seeded end-to-end schedule
+
+def test_seeded_chaos_schedule_end_to_end(model):
+    """ISSUE-6 acceptance: one stream under a seeded schedule mixing a
+    transient dispatch failure, a straggler, a simulated device loss, and
+    one persistent poison graph.  Every healthy prediction is bit-identical
+    to a fault-free run, ONLY the poison request errors, the lost slot is
+    quarantined then probed back, and no result() call hangs."""
+    d0 = jax.devices()[0]
+    chaos = FaultInjector([
+        FaultRule("dispatch", at=(1,)),
+        FaultRule("straggler", at=(2,), delay_s=0.05),
+        FaultRule("device_loss", at=(0,), device=1, down_for=3),
+    ], seed=42)
+    eng = _engine(model, max_batch=2, devices=[d0, d0], max_wait_ms=20.0,
+                  validate_inputs=False, watchdog_s=60.0,
+                  max_retries=3, retry_backoff_s=0.01,
+                  quarantine_after=2, probe_interval_s=0.1, chaos=chaos)
+    bucket_a = [_graph(80, 40, s) for s in range(6)]
+    bucket_b = [_graph(150, 75, 10 + s) for s in range(4)]
+    poison = _malformed(_graph(150, 75, 99))
+    t = _serve_on_thread(eng)
+    try:
+        rids = {}
+        for g in bucket_a[:2] + bucket_b[:2] + bucket_a[2:4]:
+            rids[eng.submit(g)] = g
+            time.sleep(0.01)
+        poison_rid = eng.submit(poison)     # pairs with the next submit:
+        rids[eng.submit(bucket_b[2])] = bucket_b[2]     # a full B-batch
+        for g in bucket_a[4:] + bucket_b[3:]:
+            rids[eng.submit(g)] = g
+            time.sleep(0.01)
+        # every result() returns (bounded by its timeout, i.e. no hang)
+        for rid in rids:
+            assert eng.result(rid, timeout=240.0).pred is not None
+        with pytest.raises(RuntimeError) as ei:
+            eng.result(poison_rid, timeout=240.0)
+        assert isinstance(ei.value.__cause__, ValueError)
+        # keep a trickle flowing until the lost slot is probed back in
+        g = bucket_a[0]
+        deadline = time.time() + 240.0
+        while eng.ring.health()["readmissions"] < 1 \
+                and time.time() < deadline:
+            assert eng.result(eng.submit(g),
+                              timeout=240.0).pred is not None
+            time.sleep(0.03)
+    finally:
+        eng.stop()
+        t.join(timeout=240.0)
+    assert not t.is_alive()
+    st = eng.stats()
+    # bit-identical healthy parity against a fault-free engine
+    order = list(rids.values())
+    refs = _reference(model, order)
+    for (rid, _), ref in zip(rids.items(), refs):
+        assert np.array_equal(eng.result(rid).pred, ref), rid
+    assert st["failures"] == 1, st          # ONLY the poison request
+    assert st["retries"] >= 1 and st["bisects"] >= 1, st
+    assert st["quarantines"] >= 1 and st["probes"] >= 1, st
+    assert st["readmissions"] >= 1, st
+    assert st["device_health"] == ["up", "up"], st
+    counts = chaos.counts()
+    assert counts.get("dispatch") == 1 and counts.get("straggler") == 1
+    assert counts.get("device_loss", 0) >= 1
+
+
+# ------------------------------------------------------- trainer guards
+
+def _tcfg():
+    return CircuitTrainConfig(hidden=16, n_layers=1, k_cell=4, k_net=4,
+                              epochs=1, backend="xla_fused")
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+def test_trainer_skips_nonfinite_grad_steps():
+    """A poisoned graph's step is a true no-op: params AND optimizer state
+    end bit-identical to a run that never saw the bad graph."""
+    g1, g2 = _graph(40, 20, 0), _graph(40, 20, 1)
+    bad = _nan_features(_graph(40, 20, 2))
+    tr_a = CircuitTrainer(_tcfg(), 16, 16)
+    loss_a = tr_a.train_epoch([g1, bad, g2])
+    tr_b = CircuitTrainer(_tcfg(), 16, 16)
+    loss_b = tr_b.train_epoch([g1, g2])
+    assert tr_a.nonfinite_grad_steps == 1
+    assert tr_b.nonfinite_grad_steps == 0
+    assert np.isfinite(loss_a) and np.isclose(loss_a, loss_b)
+    assert _trees_equal(tr_a.params, tr_b.params)
+    assert _trees_equal(tr_a.opt_state, tr_b.opt_state)
+
+
+def test_trainer_batched_step_skips_poisoned_batch():
+    g1 = _graph(40, 20, 0)
+    bad = _nan_features(_graph(40, 20, 2))
+    tr = CircuitTrainer(_tcfg(), 16, 16)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), tr.params)
+    loss = tr.train_epoch([g1, bad], batch_size=2)   # one collated step
+    assert tr.nonfinite_grad_steps == 1
+    assert np.isnan(loss)                   # every step skipped
+    assert _trees_equal(tr.params, before)  # the no-op really is one
+
+
+def test_trainer_straggler_feeds_step_monitor():
+    chaos = FaultInjector([FaultRule("straggler", at=(0,), delay_s=0.01)])
+    mon = StepMonitor(n_hosts=1)
+    tr = CircuitTrainer(_tcfg(), 16, 16, chaos=chaos, monitor=mon)
+    g1, g2 = _graph(40, 20, 0), _graph(40, 20, 1)
+    tr.train_epoch([g1, g2])
+    assert chaos.counts() == {"straggler": 1}
+    assert len(mon.history[0]) == 2         # every step ticked the monitor
+    assert tr._global_step == 2
