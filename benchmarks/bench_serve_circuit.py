@@ -35,6 +35,7 @@ import numpy as np
 
 from benchmarks.common import append_json, emit
 from repro.core.hetero_mp import HeteroMPConfig
+from repro.fault.inject import FaultInjector, FaultRule
 from repro.graphs.generator import generate_partition, pack_graph_parallel
 from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
 from repro.serve import CircuitServeEngine
@@ -144,6 +145,71 @@ def bench_degraded(params, cfg, stream, max_batch: int,
                 failures=st["failures"])
 
 
+def bench_sustained(params, cfg, stream, max_batch: int, *,
+                    target_qps: float = 80.0, n_producers: int = 2,
+                    max_wait_ms: float = 8.0, chaos=None):
+    """Sustained-load serving: ``n_producers`` threads submit at an
+    aggregate ``target_qps``, paced so inter-arrival gaps exceed
+    ``max_wait_ms`` per bucket — the **deadline-flush** regime (partial
+    batches shipped when their oldest request's deadline expires), which
+    the burst benchmarks above never enter.  Latency percentiles come from
+    the engine's metrics registry (``serve.latency_ms`` histogram), and the
+    row records flush/shed counts; the chaos variant overlays a seeded
+    fault schedule to price the healing ladder under load."""
+    eng = CircuitServeEngine(params, cfg, max_batch=max_batch,
+                             max_wait_ms=max_wait_ms, chaos=chaos,
+                             max_queue=max(4 * max_batch, 16),
+                             admission="shed_oldest")
+    # warm pass through the SAME engine (run(), unpaced) so the paced phase
+    # measures steady-state serving, not bucket compilation; paced-phase
+    # numbers below are deltas over this snapshot
+    for g in stream:
+        eng.submit(g)
+    eng.run()
+    cold = eng.stats()
+    hist = eng.metrics.histogram("serve.latency_ms")
+    n_warm = len(hist.window())
+
+    server = threading.Thread(target=eng.serve_forever)
+    server.start()
+    gap_s = n_producers / max(target_qps, 1e-9)
+
+    def produce(shard):
+        for g in shard:
+            t_next = time.perf_counter() + gap_s
+            eng.submit(g)
+            dt = t_next - time.perf_counter()
+            if dt > 0:
+                time.sleep(dt)
+
+    t0 = time.perf_counter()
+    producers = [threading.Thread(target=produce,
+                                  args=(stream[i::n_producers],))
+                 for i in range(n_producers)]
+    for p in producers:
+        p.start()
+    for p in producers:
+        p.join()
+    eng.stop()
+    server.join()
+    wall = time.perf_counter() - t0
+    st = eng.stats()
+    lat = sorted(hist.window()[n_warm:])   # paced-phase latencies only
+    return dict(target_qps=target_qps,
+                achieved_qps=(st["requests"] - cold["requests"]) / wall,
+                n_producers=n_producers, max_wait_ms=max_wait_ms,
+                p50_ms=percentile(lat, 0.50), p95_ms=percentile(lat, 0.95),
+                p99_ms=percentile(lat, 0.99),
+                deadline_flushes=(st["deadline_flushes"]
+                                  - cold["deadline_flushes"]),
+                shed=st["admission_shed"] - cold["admission_shed"],
+                failures=st["failures"] - cold["failures"],
+                retries=st["retries"] - cold["retries"],
+                requests=st["requests"] - cold["requests"],
+                batches=st["batches"] - cold["batches"],
+                chaos=chaos is not None)
+
+
 def bench_batched(params, cfg, stream, max_batch: int):
     # pinned to one device so the row stays comparable across PRs (the
     # multi-device path gets its own `online` row)
@@ -180,6 +246,12 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
     bat = bench_batched(params, cfg, stream, max_batch)
     onl = bench_online(params, cfg, stream, max_batch)
     deg = bench_degraded(params, cfg, stream, max_batch)
+    sus = bench_sustained(params, cfg, stream, max_batch)
+    sus_chaos = bench_sustained(
+        params, cfg, stream, max_batch,
+        chaos=FaultInjector([FaultRule("dispatch", rate=0.05),
+                             FaultRule("straggler", rate=0.05,
+                                       delay_s=0.01)], seed=7))
 
     speedup = bat["graphs_per_s"] / max(seq["graphs_per_s"], 1e-9)
     warm_speedup = (bat["warm_graphs_per_s"]
@@ -201,11 +273,21 @@ def bench(n_per_class: int = 8, max_batch: int = 4, hidden: int = 64,
          f"graphs_per_s={deg['graphs_per_s']:.2f};"
          f"devices={deg['devices']};"
          f"quarantined_slot={deg['quarantined_slot']}")
+    emit("serve/sustained", 1e3 * sus["p99_ms"],
+         f"qps={sus['achieved_qps']:.1f}/{sus['target_qps']:.0f};"
+         f"p50={sus['p50_ms']:.1f}ms;p99={sus['p99_ms']:.1f}ms;"
+         f"deadline_flushes={sus['deadline_flushes']};shed={sus['shed']}")
+    emit("serve/sustained_chaos", 1e3 * sus_chaos["p99_ms"],
+         f"qps={sus_chaos['achieved_qps']:.1f};"
+         f"p99={sus_chaos['p99_ms']:.1f}ms;"
+         f"retries={sus_chaos['retries']};"
+         f"failures={sus_chaos['failures']}")
     record = dict(ts=time.time(), kind="serve_circuit",
                   backend=jax.default_backend(),
                   n_graphs=len(stream), max_batch=max_batch, hidden=hidden,
                   classes=list(map(list, classes)),
                   sequential=seq, batched=bat, online=onl, degraded=deg,
+                  sustained=sus, sustained_chaos=sus_chaos,
                   speedup=speedup, warm_speedup=warm_speedup,
                   online_warm_speedup=online_warm_speedup)
     append_json(out_json, record)
@@ -217,6 +299,9 @@ if __name__ == "__main__":
         # CI-sized run: tiny classes, small stream
         r = bench(n_per_class=4, max_batch=2, hidden=32,
                   classes=((80, 40), (150, 75)))
+        # paced producers must actually enter the deadline-flush regime —
+        # the gap ISSUE-6 closed ("deadline_flushes: 0" on burst streams)
+        assert r["sustained"]["deadline_flushes"] > 0, r["sustained"]
     else:
         r = bench()
     print(f"[serve] batched vs sequential: {r['speedup']:.2f}x cold, "
@@ -234,3 +319,12 @@ if __name__ == "__main__":
           f"{d['devices']} quarantined): {d['graphs_per_s']:.2f} graphs/s, "
           f"dispatches/device={d['dispatches_per_device']}, "
           f"{d['failures']} failures")
+    s = r["sustained"]
+    print(f"[serve] sustained @{s['target_qps']:.0f} qps "
+          f"(achieved {s['achieved_qps']:.1f}): "
+          f"p50={s['p50_ms']:.1f}ms p95={s['p95_ms']:.1f}ms "
+          f"p99={s['p99_ms']:.1f}ms, "
+          f"{s['deadline_flushes']} deadline flushes, {s['shed']} shed")
+    sc = r["sustained_chaos"]
+    print(f"[serve] sustained+chaos: p99={sc['p99_ms']:.1f}ms, "
+          f"{sc['retries']} retries, {sc['failures']} failures")

@@ -6,9 +6,12 @@ import time
 
 import jax
 
+from repro.train.metrics import percentile
+
 
 def time_jit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
-    """Median wall-time (µs) of a jitted callable."""
+    """Median wall-time (µs) of a jitted callable (nearest-rank p50 via the
+    shared train/metrics helper — no local percentile math)."""
     jfn = jax.jit(fn) if not hasattr(fn, "lower") else fn
     for _ in range(warmup):
         jax.block_until_ready(jfn(*args))
@@ -17,8 +20,7 @@ def time_jit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(jfn(*args))
         times.append((time.perf_counter() - t0) * 1e6)
-    times.sort()
-    return times[len(times) // 2]
+    return percentile(sorted(times), 0.5)
 
 
 def emit(name: str, us: float, derived: str = ""):

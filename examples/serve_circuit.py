@@ -33,7 +33,7 @@ from repro.core.hetero_mp import HeteroMPConfig
 from repro.graphs.generator import (generate_design, generate_partition,
                                     pack_graph_parallel)
 from repro.models.hgnn import drcircuitgnn_forward, init_drcircuitgnn
-from repro.serve import CircuitServeEngine
+from repro.serve import CircuitServeEngine, TraceRecorder
 
 
 def _smoke_stream(n_per_class=6, classes=((90, 45), (170, 85)),
@@ -69,6 +69,10 @@ def main():
                          "round-robin over all devices)")
     ap.add_argument("--max-wait-ms", type=float, default=30.0,
                     help="online mode: partial-bucket flush deadline")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record a request trace and dump Chrome "
+                         "trace-event JSON here (open in Perfetto); "
+                         "validate with tools/check_trace.py")
     args = ap.parse_args()
 
     if args.smoke:
@@ -86,8 +90,10 @@ def main():
     cfg = HeteroMPConfig(hidden=args.hidden, k_cell=args.k, k_net=args.k)
     params = init_drcircuitgnn(jax.random.PRNGKey(0), f_cell, f_net,
                                args.hidden)
+    recorder = TraceRecorder() if args.trace else None
     eng = CircuitServeEngine(params, cfg, max_batch=args.batch,
-                             max_wait_ms=args.max_wait_ms)
+                             max_wait_ms=args.max_wait_ms,
+                             recorder=recorder)
 
     if args.online:
         server = threading.Thread(target=eng.serve_forever)
@@ -113,6 +119,10 @@ def main():
     r0 = out[rids[0]]
     print(f"request {r0.rid}: {r0.pred.shape[0]} cells, congestion "
           f"mean {r0.pred.mean():.3f} max {r0.pred.max():.3f}")
+    if args.trace:
+        eng.dump_trace(args.trace)
+        print(f"trace: {len(eng.recorder)} events -> {args.trace} "
+              f"(load in https://ui.perfetto.dev)")
 
     if args.smoke:
         n_dev = st["devices"]

@@ -111,6 +111,11 @@ class FaultInjector:
         self._down: Dict[int, int] = {}         # slot -> remaining failures
         self.events: List[FaultEvent] = []
         self._lock = threading.Lock()
+        # Optional obs hook (repro.obs.trace.Recorder): when set (the serve
+        # engine wires its own recorder in), every injected fault is also an
+        # annotated instant on the "chaos" trace track.  The recorder never
+        # calls back into the injector, so emitting under self._lock is safe.
+        self.recorder = None
 
     # ------------------------------------------------------------ core
 
@@ -144,6 +149,13 @@ class FaultInjector:
 
     def _record(self, point: str, occ: int, device: Optional[int]):
         self.events.append(FaultEvent(point, occ, device, time.time()))
+        rec = self.recorder
+        if rec is not None and rec.enabled:
+            if device is None:
+                rec.instant("chaos", f"inject:{point}", occurrence=occ)
+            else:
+                rec.instant("chaos", f"inject:{point}", occurrence=occ,
+                            device=device)
 
     # --------------------------------------------------- engine-facing
 

@@ -24,6 +24,8 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.train.metrics import median
+
 
 @dataclasses.dataclass
 class StragglerEvent:
@@ -60,8 +62,8 @@ class StepMonitor:
             hist.pop(0)
         if len(hist) < 5:
             return None
-        med = _median(hist)
-        mad = _median([abs(x - med) for x in hist]) + 1e-9
+        med = median(hist)
+        mad = median([abs(x - med) for x in hist]) + 1e-9
         threshold = med + self.mad_k * mad
         deadline = med * self.deadline_factor
         if duration > deadline:
@@ -76,12 +78,6 @@ class StepMonitor:
             return None
         self.events.append(ev)
         return ev
-
-
-def _median(xs: List[float]) -> float:
-    s = sorted(xs)
-    n = len(s)
-    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
 
 
 class ElasticController:

@@ -41,9 +41,10 @@ import jax.numpy as jnp
 from repro.graphs.circuit import (CircuitGraph, EDGE_SCHEMA, EDGE_TYPES,
                                   EdgeSet)
 from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, RelationPlan,
-                              build_relation_plan, ell_to_coo, fuse_bucketed,
-                              pack_ell, pack_ell_pair, pack_fused_eid_pair,
-                              pad_fused_arena, _round_up)
+                              arena_stats, build_relation_plan, ell_to_coo,
+                              fuse_bucketed, pack_ell, pack_ell_pair,
+                              pack_fused_eid_pair, pad_fused_arena, _round_up)
+from repro.obs.metrics import DEFAULT_REGISTRY as _METRICS
 
 # Default bucket-grid resolutions (mantissa bits of the geometric grid):
 # node slabs pay padding linearly (features, gather), so they get a finer
@@ -121,11 +122,18 @@ class LayoutTable:
 
     def __init__(self, max_live: Optional[int] = None,
                  on_evict: Optional[Callable[[tuple, "BucketLayout"],
-                                             None]] = None):
+                                             None]] = None,
+                 metrics=None, recorder=None):
         assert max_live is None or max_live >= 1, max_live
         self.max_live = max_live
         self.on_evict = on_evict
         self.evictions = 0
+        # obs hooks (DESIGN.md §11): ``metrics`` (a MetricsRegistry) counts
+        # layout.creates / layout.evictions; ``recorder`` annotates each
+        # create/evict as an instant on the "layout" trace track.  Both
+        # default to off — no observability state is touched when unset.
+        self.metrics = metrics
+        self.recorder = recorder
         self._table: "OrderedDict[tuple, BucketLayout]" = OrderedDict()
 
     def get(self, key: tuple) -> BucketLayout:
@@ -134,10 +142,20 @@ class LayoutTable:
         layout = self._table.get(key)
         if layout is None:
             layout = self._table[key] = BucketLayout()
+            if self.metrics is not None:
+                self.metrics.inc("layout.creates")
+            if self.recorder is not None and self.recorder.enabled:
+                self.recorder.instant("layout", "bucket_create",
+                                      bucket=str(key))
         self._table.move_to_end(key)
         while self.max_live is not None and len(self._table) > self.max_live:
             k, v = self._table.popitem(last=False)
             self.evictions += 1
+            if self.metrics is not None:
+                self.metrics.inc("layout.evictions")
+            if self.recorder is not None and self.recorder.enabled:
+                self.recorder.instant("layout", "bucket_evict",
+                                      bucket=str(k))
             if self.on_evict is not None:
                 self.on_evict(k, v)
         return layout
@@ -381,6 +399,14 @@ def collate_graphs(graphs: Sequence[CircuitGraph], *,
                 a = fuse_bucketed(bucketed[dname], chunk=ck)
                 if layout is not None:
                     layout.chunk.setdefault((et, dname), a.chunk)
+                # Pack-time arena efficiency gauges (DESIGN.md §11): cheap
+                # — static fields and bucket shapes only, no array scans —
+                # and labeled by (etype, dir), a bounded cardinality.
+                st = arena_stats(a, bucketed[dname])
+                for gname in ("fill_ratio", "padded_slots", "slots",
+                              "chunk", "slot_saving"):
+                    _METRICS.set(f"arena.{gname}", st[gname],
+                                 etype=et, dir=dname)
                 if quantize:
                     a = _quantize_arena(a, arena_bits, bounds, layout,
                                         (et, dname))
@@ -483,6 +509,19 @@ def _build_batch_plan(coo_of: Dict[str, tuple],
     if layout is not None:
         layout.plan_chunk.setdefault("fwd", plan.fwd.chunk)
         layout.plan_chunk.setdefault("bwd", plan.bwd.chunk)
+    # Super-arena efficiency gauges: real slots are the summed relation
+    # edge counts (known from the merged COO — padded plan arenas reset
+    # ``nnz``, and scanning the arena per batch would not be cheap).
+    real = sum(int(r[3].shape[0]) for r in relations)
+    for dname, arena in (("fwd", plan.fwd), ("bwd", plan.bwd)):
+        c, br, ec = (int(s) for s in np.shape(arena.nbr))
+        slots = c * br * ec
+        _METRICS.set("arena.slots", slots, etype="__plan__", dir=dname)
+        _METRICS.set("arena.padded_slots", slots - real,
+                     etype="__plan__", dir=dname)
+        _METRICS.set("arena.fill_ratio", real / slots if slots else 0.0,
+                     etype="__plan__", dir=dname)
+        _METRICS.set("arena.chunk", ec, etype="__plan__", dir=dname)
     return plan
 
 

@@ -46,6 +46,7 @@ from repro.graphs.ell import (BucketedELL, ELLBucket, FusedELL, RelationPlan,
 from repro.kernels import drspmm as _k
 from repro.kernels import learnable as _learn
 from repro.kernels import ref as _ref
+from repro.obs.metrics import DEFAULT_REGISTRY as _METRICS
 
 Backend = Literal["pallas_fused", "xla_fused", "pallas", "xla", "dense"]
 # The fused single-dispatch executor is the paper-faithful hot path on real
@@ -68,6 +69,12 @@ FUSED_DISPATCH_LOG: "deque[str]" = deque(maxlen=4096)
 
 def _record_dispatch(tag: str) -> None:
     FUSED_DISPATCH_LOG.append(tag)
+    # Generalized per-backend dispatch counters (DESIGN.md §11): the same
+    # trace-time semantics as the log, but labeled, unbounded-total, and
+    # exportable — ``ops.dispatch{family=...,kind=...}`` in the default
+    # metrics registry.  The deque stays the test-facing drainable probe.
+    family, _, kind = tag.partition(":")
+    _METRICS.inc("ops.dispatch", family=family, kind=kind)
 
 
 def _fused_of(adj) -> FusedELL:

@@ -1,0 +1,293 @@
+"""Metrics registry: counters, gauges, and bounded-reservoir histograms.
+
+The serving/training pipeline accumulated ad-hoc counter dicts as it grew
+(the engine's ``_counters``, the trainer's loose attributes, the module-level
+``FUSED_DISPATCH_LOG``).  This registry replaces them with one typed,
+thread-safe home — the same bounded-state discipline the memory side applies
+(LRU layout tables, bounded latency windows) applied to telemetry:
+
+* :class:`Counter` — monotonically increasing float (``inc``);
+* :class:`Gauge` — last-write-wins float (``set``);
+* :class:`Histogram` — bounded reservoir (deque of the most recent
+  ``reservoir`` observations) plus exact ``count``/``sum``/``min``/``max``;
+  percentiles (p50/p95/p99) come from the SAME nearest-rank helper the
+  benchmarks use (:func:`repro.train.metrics.percentile`), so there is
+  exactly one percentile definition in the repo.
+
+Instruments are keyed by ``(name, labels)``: ``registry.counter("x",
+device="0")`` and ``registry.counter("x", device="1")`` are two series of
+one metric.  Label cardinality is the caller's responsibility — label with
+small enums (device slot, edge type, direction), never with request ids.
+
+Naming scheme (DESIGN.md §11): dotted lowercase paths, ``<subsystem>.<what>``
+— ``serve.requests``, ``serve.latency_ms``, ``train.step_ms``,
+``ops.dispatch``, ``layout.evictions``, ``arena.fill_ratio``.  The
+Prometheus writer maps dots to underscores (``serve_latency_ms``).
+
+Two export formats:
+
+* ``snapshot()`` — one JSON-able dict (counters/gauges as numbers,
+  histograms as ``{count, sum, min, max, p50, p95, p99}``);
+* ``to_prometheus()`` — Prometheus text exposition (``# TYPE`` lines,
+  ``name{label="v"} value``; histograms as gauge-typed quantile series
+  plus ``_count``/``_sum``), scrapable or diff-able in tests.
+
+``DEFAULT_REGISTRY`` is the module-level registry that context-free emitters
+(the ops dispatch counters, the collator's pack-time arena gauges) write
+into; engines and trainers own per-instance registries so concurrent
+instances never mix series.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import threading
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.train.metrics import percentile
+
+# label key/value and metric names kept printable-simple so the Prometheus
+# writer never needs escaping beyond quoting
+_NAME_RE = re.compile(r"[^a-zA-Z0-9_:]")
+
+DEFAULT_RESERVOIR = 4096
+
+
+class Counter:
+    """Monotonic counter (float increments allowed: wall-clock totals)."""
+
+    __slots__ = ("_lock", "_v")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0.0
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._v += n
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+
+    __slots__ = ("_lock", "_v")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._v = 0.0
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._v = float(v)
+
+    def add(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._v += n
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class Histogram:
+    """Bounded-reservoir distribution: keeps the most recent ``reservoir``
+    observations (deque, O(1) per observe) plus exact running aggregates.
+    Percentiles are nearest-rank over the reservoir — for a long-lived loop
+    that is a sliding window over recent behavior, which is what latency
+    SLOs want; ``count``/``sum`` stay exact over the full lifetime."""
+
+    __slots__ = ("_lock", "_window", "count", "sum", "min", "max")
+
+    def __init__(self, reservoir: int = DEFAULT_RESERVOIR):
+        self._lock = threading.Lock()
+        self._window: Deque[float] = deque(maxlen=reservoir)
+        self.count = 0
+        self.sum = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        with self._lock:
+            self._window.append(v)
+            self.count += 1
+            self.sum += v
+            if v < self.min:
+                self.min = v
+            if v > self.max:
+                self.max = v
+
+    def percentile(self, p: float) -> float:
+        """Nearest-rank percentile over the reservoir window — the one
+        percentile definition (train/metrics.py) everything routes
+        through."""
+        with self._lock:
+            window = sorted(self._window)
+        return percentile(window, p)
+
+    def percentiles(self, ps=(0.50, 0.95, 0.99)) -> Tuple[float, ...]:
+        with self._lock:
+            window = sorted(self._window)
+        return tuple(percentile(window, p) for p in ps)
+
+    def window(self) -> List[float]:
+        """Snapshot of the reservoir in observation order (oldest first) —
+        lets callers slice off a phase of observations (e.g. a benchmark's
+        steady-state tail) while ``count`` stays within the reservoir."""
+        with self._lock:
+            return list(self._window)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        p50, p95, p99 = self.percentiles()
+        return dict(count=self.count, sum=self.sum,
+                    min=self.min if self.count else 0.0,
+                    max=self.max if self.count else 0.0,
+                    mean=self.mean, p50=p50, p95=p95, p99=p99)
+
+
+def _labels_key(labels: Dict[str, object]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+class MetricsRegistry:
+    """Thread-safe get-or-create home for instruments, keyed by
+    ``(name, sorted labels)``.
+
+    The getter methods double as the hot-path API: ``counter(...)`` on an
+    existing series is one dict lookup, so pipeline code can call
+    ``registry.inc("serve.retries")`` without holding its own references
+    (though holding one is cheaper still — the engine caches its per-device
+    dispatch counters).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[Tuple[str, tuple], object] = {}
+        self._kinds: Dict[str, str] = {}      # metric name -> kind
+
+    # ------------------------------------------------------ get-or-create
+
+    def _get(self, cls, kind: str, name: str, labels: dict, **kw):
+        key = (name, _labels_key(labels))
+        m = self._metrics.get(key)
+        if m is not None:
+            prev = self._kinds.get(name)
+            if prev != kind:
+                raise ValueError(
+                    f"metric {name!r} already registered as {prev}, "
+                    f"requested {kind}")
+            return m
+        with self._lock:
+            m = self._metrics.get(key)
+            if m is None:
+                prev = self._kinds.setdefault(name, kind)
+                if prev != kind:
+                    raise ValueError(
+                        f"metric {name!r} already registered as {prev}, "
+                        f"requested {kind}")
+                m = self._metrics[key] = cls(**kw)
+        return m
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(Counter, "counter", name, labels)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(Gauge, "gauge", name, labels)
+
+    def histogram(self, name: str, reservoir: int = DEFAULT_RESERVOIR,
+                  **labels) -> Histogram:
+        return self._get(Histogram, "histogram", name, labels,
+                         reservoir=reservoir)
+
+    # ------------------------------------------------------- conveniences
+
+    def inc(self, name: str, n: float = 1.0, **labels) -> None:
+        self.counter(name, **labels).inc(n)
+
+    def set(self, name: str, v: float, **labels) -> None:
+        self.gauge(name, **labels).set(v)
+
+    def observe(self, name: str, v: float, **labels) -> None:
+        self.histogram(name, **labels).observe(v)
+
+    def value(self, name: str, default: float = 0.0, **labels) -> float:
+        """Current value of a counter/gauge series (``default`` when the
+        series was never touched — reading must not create series)."""
+        m = self._metrics.get((name, _labels_key(labels)))
+        return default if m is None else m.value
+
+    def series(self, name: str) -> Dict[tuple, object]:
+        """Every (labels → instrument) of one metric name."""
+        return {k[1]: m for k, m in self._metrics.items() if k[0] == name}
+
+    # ----------------------------------------------------------- exports
+
+    def snapshot(self) -> Dict[str, object]:
+        """JSON-able view: ``{name{label="v"}: number-or-summary}``."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out: Dict[str, object] = {}
+        for (name, labels), m in sorted(items, key=lambda kv: kv[0]):
+            key = name if not labels else (
+                name + "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}")
+            if isinstance(m, Histogram):
+                out[key] = m.summary()
+            else:
+                out[key] = m.value
+        return out
+
+    def snapshot_json(self, **json_kw) -> str:
+        return json.dumps(self.snapshot(), **json_kw)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition (format 0.0.4 subset)."""
+        with self._lock:
+            items = sorted(self._metrics.items(), key=lambda kv: kv[0])
+            kinds = dict(self._kinds)
+        lines = []
+        seen_type = set()
+        for (name, labels), m in items:
+            pname = _NAME_RE.sub("_", name.replace(".", "_"))
+            if pname not in seen_type:
+                seen_type.add(pname)
+                kind = kinds.get(name, "gauge")
+                ptype = {"counter": "counter",
+                         "histogram": "summary"}.get(kind, "gauge")
+                lines.append(f"# TYPE {pname} {ptype}")
+            lab = "" if not labels else (
+                "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}")
+            if isinstance(m, Histogram):
+                s = m.summary()
+                base_lab = [f'{k}="{v}"' for k, v in labels]
+                for q, phi in (("p50", "0.5"), ("p95", "0.95"),
+                               ("p99", "0.99")):
+                    ql = "{" + ",".join(
+                        base_lab + [f'quantile="{phi}"']) + "}"
+                    lines.append(f"{pname}{ql} {s[q]:.17g}")
+                lines.append(f"{pname}_count{lab} {s['count']}")
+                lines.append(f"{pname}_sum{lab} {s['sum']:.17g}")
+            else:
+                lines.append(f"{pname}{lab} {m.value:.17g}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def __len__(self) -> int:
+        return len(self._metrics)
+
+
+# Module-level registry for emitters that have no engine/trainer handle:
+# the ops-layer dispatch counters and the collator's pack-time arena gauges.
+DEFAULT_REGISTRY = MetricsRegistry()
+
+
+def default_registry() -> MetricsRegistry:
+    return DEFAULT_REGISTRY

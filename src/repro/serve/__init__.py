@@ -5,3 +5,5 @@ from repro.serve.circuit_engine import (CircuitRequest,  # noqa: F401
                                         WatchdogTimeoutError,
                                         NonFiniteInputError,
                                         NonFiniteOutputError)
+from repro.obs import (MetricsRegistry, Recorder,  # noqa: F401
+                       TraceRecorder)

@@ -59,7 +59,15 @@ block-diagonal collation (graphs/collate.py) instead:
   non-finite output guard fails poisoned predictions with diagnostics;
 * **chaos hook** — pass ``chaos=FaultInjector(...)``
   (fault/inject.py) to exercise every injection point under a
-  deterministic seed; ``chaos=None`` (default) executes no injection code.
+  deterministic seed; ``chaos=None`` (default) executes no injection code;
+* **observability** (DESIGN.md §11) — every counter/latency stat lives in a
+  per-engine :class:`~repro.obs.metrics.MetricsRegistry` (``stats()`` is a
+  back-compat view; ``metrics_text()`` is Prometheus exposition), and
+  passing ``recorder=TraceRecorder()`` traces every request through
+  submit → admit/shed → bucket → collate → device_put → dispatch → commit
+  — healing-ladder steps and chaos injections included — exportable as
+  Chrome trace-event JSON (``dump_trace(path)``, perfetto-loadable).  The
+  default no-op recorder keeps the happy path allocation-free.
 
 Collated batches also carry a :class:`~repro.graphs.ell.RelationPlan`
 (``collate_graphs(with_plan=True)``, the default), so each hetero layer of
@@ -108,6 +116,8 @@ from repro.graphs.circuit import CircuitGraph
 from repro.graphs.collate import (ARENA_GRID_BITS, LayoutTable,
                                   collate_graphs, quantize_up)
 from repro.models.hgnn import drcircuitgnn_forward
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_RECORDER, NULL_SPAN, Recorder
 from repro.sharding.specs import DeviceRing
 # Back-compat re-export: percentile lived here through PR 2; it is now a
 # train.metrics helper so benchmarks don't import the engine for stats.
@@ -173,6 +183,20 @@ class _BucketState:
 # reaches the containment ladder instead of killing the iterator
 _PREP_FAILED = object()
 
+# Per-thread trace track names for the host-side packing spans: a track
+# maps 1:1 onto a thread, so B/E prepare spans never interleave within a
+# track (the trace validator asserts matched pairs per track).  Pool
+# workers and healer threads alike get "worker/<k>" on first emission.
+_track_local = threading.local()
+_track_counter = itertools.count()
+
+
+def _worker_track() -> str:
+    name = getattr(_track_local, "name", None)
+    if name is None:
+        name = _track_local.name = f"worker/{next(_track_counter)}"
+    return name
+
 
 class CircuitServeEngine:
     """Micro-batching congestion-prediction server over a fixed model."""
@@ -204,7 +228,10 @@ class CircuitServeEngine:
                  validate_inputs: bool = True,
                  quarantine_after: int = 3,
                  probe_interval_s: float = 1.0,
-                 chaos: Optional[FaultInjector] = None):
+                 chaos: Optional[FaultInjector] = None,
+                 # --- observability (DESIGN.md §11) ---
+                 recorder: Optional[Recorder] = None,
+                 registry: Optional[MetricsRegistry] = None):
         if admission not in ("block", "reject", "shed_oldest"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.mp_cfg = mp_cfg
@@ -238,32 +265,47 @@ class CircuitServeEngine:
         self._params_version = 0
         self.queue: Deque[CircuitRequest] = deque()
         self.finished: Dict[int, CircuitRequest] = {}
-        # latency stats live in their own bounded window so trimming
-        # `finished` (max_finished / result(pop=True)) can't skew them
-        self._lat_window: Deque[float] = deque(maxlen=4096)
         self._rid = itertools.count()
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)   # submit/prep/stop
         self._done = threading.Condition(self._lock)   # result() waiters
         self._stop = False
         self._serving = False
+        # --- observability: per-engine metrics registry + trace recorder.
+        # The recorder defaults to the shared no-op (enabled=False), so the
+        # happy path's entire tracing cost is dead `if rec.enabled` checks;
+        # pass obs.TraceRecorder() to capture a Chrome trace (dump_trace).
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._rec = recorder if recorder is not None else NULL_RECORDER
+        if self.chaos is not None and self._rec.enabled:
+            # injected faults become annotated instants on the chaos track
+            self.chaos.recorder = self._rec
+        # Counter handles cached once (get-or-create is lock-free only on
+        # the hit path; the hot path should be a plain .inc()).  These
+        # replace the PR-2..6 ad-hoc `_counters` dict; stats() rebuilds the
+        # same keys from the registry.
+        m = self.metrics
+        self._c = {name: m.counter("serve." + name) for name in (
+            "batches", "requests", "real_cells", "padded_cells", "wall_s",
+            "deadline_flushes", "failures", "retries", "bisects",
+            "watchdog_timeouts", "nonfinite_outputs", "rejected_inputs",
+            "admission_blocked", "admission_rejected", "admission_shed")}
+        self._disp = [m.counter("serve.dispatches", device=i)
+                      for i in range(len(self.ring))]
+        # latency stats live in their own bounded reservoir so trimming
+        # `finished` (max_finished / result(pop=True)) can't skew them
+        self._lat = m.histogram("serve.latency_ms")
         # Per-bucket state, all evicted together by the LayoutTable LRU:
         # the arena layout (the table's value) plus the engine-side
         # _BucketState — pack lock, the bucket's jitted forward (owning its
         # compile cache; dropping it is what releases the executables), and
         # its live (signature, device) set.
         self._layouts = LayoutTable(max_live=max_live_buckets,
-                                    on_evict=self._evict_bucket)
+                                    on_evict=self._evict_bucket,
+                                    metrics=m, recorder=self._rec)
         self._buckets: Dict[tuple, _BucketState] = {}
         self._n_compiles = 0        # cumulative, incl. eviction recompiles
         self._healing = 0           # containment-ladder batches in flight
-        self._counters = dict(batches=0, requests=0, real_cells=0,
-                              padded_cells=0, wall_s=0.0, deadline_flushes=0,
-                              failures=0, retries=0, bisects=0,
-                              watchdog_timeouts=0, nonfinite_outputs=0,
-                              rejected_inputs=0, admission_blocked=0,
-                              admission_rejected=0, admission_shed=0,
-                              dispatches_per_device=[0] * len(self.ring))
 
     def _make_fwd(self):
         cfg = self.mp_cfg
@@ -297,14 +339,20 @@ class CircuitServeEngine:
             if self.max_queue is not None and \
                     len(self.queue) >= self.max_queue:
                 if self.admission == "reject":
-                    self._counters["admission_rejected"] += 1
+                    self._c["admission_rejected"].inc()
+                    if self._rec.enabled:
+                        self._rec.instant("intake", "admission_reject",
+                                          rid=rid)
                     raise QueueFullError(
                         f"queue at capacity ({self.max_queue}); request "
                         f"rejected (admission='reject')")
                 if self.admission == "shed_oldest":
                     while len(self.queue) >= self.max_queue:
                         head = self.queue.popleft()
-                        self._counters["admission_shed"] += 1
+                        self._c["admission_shed"].inc()
+                        if self._rec.enabled:
+                            self._rec.instant("intake", "admission_shed",
+                                              rid=head.rid, admitted=rid)
                         self._finalize_failed_locked(
                             [head], LoadShedError(
                                 f"request {head.rid} shed (FIFO head) to "
@@ -314,7 +362,10 @@ class CircuitServeEngine:
                     waited = False
                     while len(self.queue) >= self.max_queue:
                         if not waited:
-                            self._counters["admission_blocked"] += 1
+                            self._c["admission_blocked"].inc()
+                            if self._rec.enabled:
+                                self._rec.instant(
+                                    "intake", "admission_block", rid=rid)
                             waited = True
                         rem = None if deadline is None \
                             else deadline - time.perf_counter()
@@ -325,6 +376,9 @@ class CircuitServeEngine:
                         self._work.wait(rem)
             self.queue.append(req)
             self._work.notify_all()
+        if self._rec.enabled:
+            self._rec.instant("intake", "submit", rid=rid,
+                              bucket=str(req.key))
         return rid
 
     def _validate(self, g: CircuitGraph) -> None:
@@ -335,8 +389,9 @@ class CircuitServeEngine:
             x = np.asarray(getattr(g, name))
             if not np.isfinite(x).all():
                 bad = int(np.size(x) - np.count_nonzero(np.isfinite(x)))
-                with self._lock:
-                    self._counters["rejected_inputs"] += 1
+                self._c["rejected_inputs"].inc()
+                if self._rec.enabled:
+                    self._rec.instant("intake", "input_rejected", field=name)
                 raise NonFiniteInputError(
                     f"graph.{name} contains {bad} non-finite value(s) "
                     f"of {x.size}; rejected at submit")
@@ -402,7 +457,12 @@ class CircuitServeEngine:
             if max_wait_s <= 0 or age >= max_wait_s:
                 pick = head
                 if max_wait_s > 0 and len(groups[head]) < self.b:
-                    self._counters["deadline_flushes"] += 1
+                    self._c["deadline_flushes"].inc()
+                    if self._rec.enabled:
+                        self._rec.instant("intake", "deadline_flush",
+                                          bucket=str(head),
+                                          size=len(groups[head]),
+                                          waited_ms=age * 1e3)
         if pick is None:
             return None
         chosen = {id(r) for r in groups[pick]}
@@ -414,6 +474,10 @@ class CircuitServeEngine:
                 self.queue.append(r)
         # the queue shrank: wake producers blocked on admission backpressure
         self._work.notify_all()
+        if self._rec.enabled:
+            self._rec.instant("intake", "batch_formed", bucket=str(pick),
+                              size=len(groups[pick]),
+                              rids=[r.rid for r in groups[pick]])
         return groups[pick]
 
     def _next_deadline_s(self, max_wait_s: float) -> Optional[float]:
@@ -429,33 +493,43 @@ class CircuitServeEngine:
     def _prepare(self, reqs: List[CircuitRequest], dev_idx: int):
         """Host side (runs on the packing pool): collate, pad, transfer to
         ring slot ``dev_idx``.  Collation errors are the batch's fault;
-        transfer errors are the device's (ring health records them)."""
+        transfer errors are the device's (ring health records them).
+
+        Traced as B/E spans on the calling thread's ``worker/<k>`` track
+        (collate and device_put separately) — a track maps 1:1 onto a
+        thread, so the pairs per track are strictly nested."""
+        rec = self._rec
+        track = _worker_track() if rec.enabled else None
         try:
-            if self.chaos is not None:
-                self.chaos.stall("straggler")
-                self.chaos.raise_if("collate")
-            graphs = [r.graph for r in reqs]
-            n_real = len(graphs)
-            if self.pad_to_full and n_real < self.b:
-                # replicate the last member as filler so partial batches
-                # keep the full-batch signature (outputs dropped, loss
-                # weight zero)
-                graphs = graphs + [graphs[-1]] * (self.b - n_real)
-            key = reqs[0].key
-            # The bucket layout pins chunk widths and floors chunk counts
-            # so same-bucket batches share a signature.  Locking is per
-            # bucket: prepares of different buckets (the common in-flight
-            # set for an interleaved stream) pack concurrently; only the
-            # rare same-bucket pair serializes on its layout.
-            with self._lock:
-                layout = self._layouts.get(key)  # LRU touch; may evict
-                lock = self._buckets.setdefault(key, _BucketState()).lock
-            with lock:
-                batch = collate_graphs(graphs, fused=True, quantize=True,
-                                       node_bits=self.node_bits,
-                                       arena_bits=self.arena_bits,
-                                       chunk=self.chunk, layout=layout,
-                                       n_real=n_real)
+            with (rec.span(track, "collate", batch=len(reqs),
+                           bucket=str(reqs[0].key), device=dev_idx)
+                  if rec.enabled else NULL_SPAN):
+                if self.chaos is not None:
+                    self.chaos.stall("straggler")
+                    self.chaos.raise_if("collate")
+                graphs = [r.graph for r in reqs]
+                n_real = len(graphs)
+                if self.pad_to_full and n_real < self.b:
+                    # replicate the last member as filler so partial batches
+                    # keep the full-batch signature (outputs dropped, loss
+                    # weight zero)
+                    graphs = graphs + [graphs[-1]] * (self.b - n_real)
+                key = reqs[0].key
+                # The bucket layout pins chunk widths and floors chunk
+                # counts so same-bucket batches share a signature.  Locking
+                # is per bucket: prepares of different buckets (the common
+                # in-flight set for an interleaved stream) pack
+                # concurrently; only the rare same-bucket pair serializes
+                # on its layout.
+                with self._lock:
+                    layout = self._layouts.get(key)  # LRU touch; may evict
+                    lock = self._buckets.setdefault(key, _BucketState()).lock
+                with lock:
+                    batch = collate_graphs(graphs, fused=True, quantize=True,
+                                           node_bits=self.node_bits,
+                                           arena_bits=self.arena_bits,
+                                           chunk=self.chunk, layout=layout,
+                                           n_real=n_real)
         except Exception:
             # host-side failure before the device was touched: the routed
             # slot must not be blamed — but a probe handout must not stay
@@ -463,9 +537,11 @@ class CircuitServeEngine:
             self.ring.release(dev_idx)
             raise
         try:
-            if self.chaos is not None:
-                self.chaos.raise_if("device_put", device=dev_idx)
-            graph = self.ring.put(batch.graph, dev_idx)
+            with (rec.span(track, "device_put", device=dev_idx)
+                  if rec.enabled else NULL_SPAN):
+                if self.chaos is not None:
+                    self.chaos.raise_if("device_put", device=dev_idx)
+                graph = self.ring.put(batch.graph, dev_idx)
         except Exception:
             self.ring.record_failure(dev_idx)
             raise
@@ -474,6 +550,9 @@ class CircuitServeEngine:
     def _dispatch(self, prepared):
         reqs, batch, graph, key, dev_idx = prepared
         sig = batch.signature
+        rec = self._rec
+        t_disp = rec.now() if rec.enabled else 0.0
+        compile_new = False
         with self._lock:
             st = self._buckets.setdefault(key, _BucketState())
             if st.fwd is None:
@@ -485,12 +564,17 @@ class CircuitServeEngine:
             if (sig, dev_idx) not in st.sigs:
                 st.sigs.add((sig, dev_idx))
                 self._n_compiles += 1
-            self._counters["dispatches_per_device"][dev_idx] += 1
+                compile_new = True
+            self._disp[dev_idx].inc()
             # snapshot replicas + version under the lock so a concurrent
             # update_params() can't hand this batch replica A and stamp it
             # version B
             params_d = self._params_of[dev_idx]
             version = self._params_version
+        if compile_new:
+            self.metrics.inc("serve.compiles")
+            if rec.enabled:
+                rec.instant(f"device/{dev_idx}", "compile", bucket=str(key))
         try:
             if self.chaos is not None:
                 self.chaos.raise_if("dispatch", device=dev_idx)
@@ -498,10 +582,12 @@ class CircuitServeEngine:
         except Exception:
             self.ring.record_failure(dev_idx)
             raise
-        return reqs, batch, out, version, dev_idx
+        # t_disp rides at the END of the tuple: downstream consumers
+        # (serve_forever) index dev_idx as entry[4], so never insert before
+        return reqs, batch, out, version, dev_idx, t_disp
 
     def _complete(self, inflight):
-        reqs, batch, out, version, dev_idx = inflight
+        reqs, batch, out, version, dev_idx, t_disp = inflight
         try:
             preds = np.asarray(out)                   # device barrier
         except Exception:
@@ -519,8 +605,11 @@ class CircuitServeEngine:
                if not np.isfinite(preds[m.cell_off:m.cell_off + m.n_cell]
                                   ).all()]
         if bad:
-            with self._lock:
-                self._counters["nonfinite_outputs"] += 1
+            self._c["nonfinite_outputs"].inc()
+            if self._rec.enabled:
+                self._rec.instant("healing", "nonfinite_output",
+                                  device=dev_idx,
+                                  rids=[r.rid for r, _ in bad])
             rids = [r.rid for r, _ in bad]
             counts = [int((~np.isfinite(
                 preds[m.cell_off:m.cell_off + m.n_cell])).sum())
@@ -543,19 +632,26 @@ class CircuitServeEngine:
                 r.t_done = now
                 r.params_version = version
                 self.finished[r.rid] = r
-                self._lat_window.append(r.latency_ms)
+                self._lat.observe(r.latency_ms)
                 committed.append(m)
             if self.max_finished is not None:
                 while len(self.finished) > self.max_finished:
                     # dict preserves insertion order: drop the oldest
                     self.finished.pop(next(iter(self.finished)))
             if committed:
-                c = self._counters
-                c["batches"] += 1
-                c["requests"] += len(committed)
-                c["real_cells"] += sum(m.n_cell for m in committed)
-                c["padded_cells"] += batch.graph.n_cell
+                self._c["batches"].inc()
+                self._c["requests"].inc(len(committed))
+                self._c["real_cells"].inc(sum(m.n_cell for m in committed))
+                self._c["padded_cells"].inc(batch.graph.n_cell)
             self._done.notify_all()
+        if self._rec.enabled:
+            # one X (complete) event per committed batch attempt on the
+            # slot's track: attempts may overlap on a slot (pipeline batch
+            # vs healing re-dispatch), which B/E pairs cannot express
+            self._rec.complete(
+                f"device/{dev_idx}", "batch", t_disp,
+                self._rec.now() - t_disp, requests=len(committed),
+                batch=len(reqs), params_version=version)
 
     def _evict_bucket(self, key: tuple, layout) -> None:
         """LayoutTable eviction hook (fires under self._lock, from the
@@ -588,7 +684,12 @@ class CircuitServeEngine:
         if self.max_finished is not None:
             while len(self.finished) > self.max_finished:
                 self.finished.pop(next(iter(self.finished)))
-        self._counters["failures"] += failed
+        if failed:
+            self._c["failures"].inc(failed)
+            if self._rec.enabled:
+                self._rec.instant("healing", "fail", count=failed,
+                                  error=type(exc).__name__,
+                                  rids=[r.rid for r in reqs])
         self._done.notify_all()
 
     # ------------------------------------------- containment ladder (§10)
@@ -619,8 +720,10 @@ class CircuitServeEngine:
         th.start()
         th.join(self.watchdog_s)
         if th.is_alive():
-            with self._lock:
-                self._counters["watchdog_timeouts"] += 1
+            self._c["watchdog_timeouts"].inc()
+            if self._rec.enabled:
+                self._rec.instant("healing", "watchdog_timeout",
+                                  batch=len(reqs), where="healing_attempt")
             raise WatchdogTimeoutError(
                 f"healing attempt for batch of {len(reqs)} exceeded "
                 f"watchdog {self.watchdog_s}s")
@@ -646,16 +749,22 @@ class CircuitServeEngine:
         companions shared its batch."""
         for attempt in range(self.max_retries):
             time.sleep(self.retry_backoff_s * (2 ** attempt))
-            with self._lock:
-                self._counters["retries"] += 1
+            self._c["retries"].inc()
+            if self._rec.enabled:
+                self._rec.instant("healing", "retry", attempt=attempt,
+                                  depth=depth, batch=len(reqs),
+                                  error=type(exc).__name__)
             try:
                 self._timed_attempt(reqs)
                 return
             except Exception as e:
                 exc = e
         if len(reqs) > 1:
-            with self._lock:
-                self._counters["bisects"] += 1
+            self._c["bisects"].inc()
+            if self._rec.enabled:
+                self._rec.instant("healing", "bisect", depth=depth,
+                                  batch=len(reqs),
+                                  error=type(exc).__name__)
             mid = len(reqs) // 2
             self._heal(reqs[:mid], exc, depth + 1)
             self._heal(reqs[mid:], exc, depth + 1)
@@ -667,8 +776,11 @@ class CircuitServeEngine:
         """An in-flight pipeline batch outlived ``watchdog_s``: fail its
         requests now (result() returns a timed-out error instead of
         hanging) and blame the device — a wedge IS a device fault."""
-        with self._lock:
-            self._counters["watchdog_timeouts"] += 1
+        self._c["watchdog_timeouts"].inc()
+        if self._rec.enabled:
+            self._rec.instant("healing", "watchdog_timeout",
+                              batch=len(reqs), device=dev_idx,
+                              where="pipeline")
         if dev_idx is not None:
             self.ring.record_failure(dev_idx)
         self._fail(reqs, WatchdogTimeoutError(
@@ -725,7 +837,7 @@ class CircuitServeEngine:
                 retire(inflight.popleft())
         while inflight:
             retire(inflight.popleft())
-        self._counters["wall_s"] += time.perf_counter() - t0
+        self._c["wall_s"].inc(time.perf_counter() - t0)
         return self.finished
 
     def serve_forever(self, *, stop_when_idle: bool = False
@@ -858,7 +970,7 @@ class CircuitServeEngine:
             with self._lock:
                 self._serving = False
                 self._stop = False
-            self._counters["wall_s"] += time.perf_counter() - t0
+            self._c["wall_s"].inc(time.perf_counter() - t0)
         return self.finished
 
     def _tick_s(self, prep, inflight, max_wait_s: float) -> Optional[float]:
@@ -938,39 +1050,43 @@ class CircuitServeEngine:
         return self._layouts.evictions
 
     def stats(self) -> Dict[str, float]:
+        """Back-compat stats dict, now a VIEW over the metrics registry:
+        every pre-PR-7 key is preserved (tests pin the key set), counters
+        are integer-valued where they were, and p99_ms rides along from the
+        latency histogram.  ``metrics_snapshot()``/``metrics_text()`` expose
+        the full registry."""
         with self._lock:
-            lat = sorted(self._lat_window)
-            c = dict(self._counters,
-                     dispatches_per_device=list(
-                         self._counters["dispatches_per_device"]))
             fwds = [s.fwd for s in self._buckets.values()
                     if s.fwd is not None]
             live = sum(len(s.sigs) for s in self._buckets.values())
         health = self.ring.health()
-        out = dict(requests=c["requests"], batches=c["batches"],
+        ci = {name: int(cnt.value) for name, cnt in self._c.items()}
+        wall_s = self._c["wall_s"].value
+        p50, p95, p99 = self._lat.percentiles((0.50, 0.95, 0.99))
+        out = dict(requests=ci["requests"], batches=ci["batches"],
                    compiles=self.compiles,
-                   graphs_per_s=c["requests"] / max(c["wall_s"], 1e-9),
-                   p50_ms=percentile(lat, 0.50), p95_ms=percentile(lat, 0.95),
-                   wall_s=c["wall_s"],
-                   cell_padding_ratio=(c["padded_cells"]
-                                       / max(c["real_cells"], 1)),
-                   deadline_flushes=c["deadline_flushes"],
-                   failures=c["failures"],
-                   retries=c["retries"],
-                   bisects=c["bisects"],
-                   watchdog_timeouts=c["watchdog_timeouts"],
-                   nonfinite_outputs=c["nonfinite_outputs"],
-                   rejected_inputs=c["rejected_inputs"],
-                   admission_blocked=c["admission_blocked"],
-                   admission_rejected=c["admission_rejected"],
-                   admission_shed=c["admission_shed"],
+                   graphs_per_s=ci["requests"] / max(wall_s, 1e-9),
+                   p50_ms=p50, p95_ms=p95, p99_ms=p99,
+                   wall_s=wall_s,
+                   cell_padding_ratio=(ci["padded_cells"]
+                                       / max(ci["real_cells"], 1)),
+                   deadline_flushes=ci["deadline_flushes"],
+                   failures=ci["failures"],
+                   retries=ci["retries"],
+                   bisects=ci["bisects"],
+                   watchdog_timeouts=ci["watchdog_timeouts"],
+                   nonfinite_outputs=ci["nonfinite_outputs"],
+                   rejected_inputs=ci["rejected_inputs"],
+                   admission_blocked=ci["admission_blocked"],
+                   admission_rejected=ci["admission_rejected"],
+                   admission_shed=ci["admission_shed"],
                    queued=len(self.queue),
                    device_health=health["states"],
                    quarantines=health["quarantines"],
                    probes=health["probes"],
                    readmissions=health["readmissions"],
                    devices=len(self.ring),
-                   dispatches_per_device=c["dispatches_per_device"],
+                   dispatches_per_device=[int(c.value) for c in self._disp],
                    live_buckets=self.live_buckets,
                    evictions=self.evictions,
                    live_compiles=live,
@@ -982,3 +1098,24 @@ class CircuitServeEngine:
             # with no evictions this equals the cumulative `compiles`
             out["jit_cache_size"] = sum(sizes)
         return out
+
+    # ----------------------------------------------------- obs exports
+
+    @property
+    def recorder(self) -> Recorder:
+        return self._rec
+
+    def dump_trace(self, path: str) -> None:
+        """Write the engine's Chrome trace-event JSON to ``path`` (open in
+        https://ui.perfetto.dev or chrome://tracing).  With the default
+        no-op recorder this writes an empty-but-valid trace."""
+        self._rec.dump(path)
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """JSON-able registry snapshot (counters/gauges as numbers,
+        histograms as count/sum/min/max/percentile summaries)."""
+        return self.metrics.snapshot()
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition of the engine's registry."""
+        return self.metrics.to_prometheus()

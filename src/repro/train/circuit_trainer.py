@@ -24,6 +24,8 @@ from repro.kernels import ops
 from repro.models.hgnn import (DRCircuitGNNParams, batched_loss_fn,
                                drcircuitgnn_forward, init_drcircuitgnn,
                                loss_fn)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_RECORDER, Recorder
 from repro.optim import adamw_init, adamw_update, constant
 from repro.sharding.specs import DeviceRing
 from repro.train import metrics as M
@@ -67,7 +69,9 @@ def _where_tree(ok, new, old):
 class CircuitTrainer:
     def __init__(self, cfg: CircuitTrainConfig, f_cell: int, f_net: int, *,
                  chaos: Optional[FaultInjector] = None,
-                 monitor: Optional[StepMonitor] = None):
+                 monitor: Optional[StepMonitor] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 recorder: Optional[Recorder] = None):
         self.cfg = cfg
         self.mp_cfg = HeteroMPConfig(hidden=cfg.hidden, k_cell=cfg.k_cell,
                                      k_net=cfg.k_net, backend=cfg.backend,
@@ -91,14 +95,39 @@ class CircuitTrainer:
         self.chaos = chaos
         self.monitor = monitor if monitor is not None \
             else StepMonitor(n_hosts=1)
-        self.nonfinite_grad_steps = 0
+        # Observability (DESIGN.md §11): per-trainer registry; counters
+        # replace the ad-hoc ints but keep attribute-read back-compat via
+        # the ``nonfinite_grad_steps`` property below.
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        self._rec = recorder if recorder is not None else NULL_RECORDER
+        if self.chaos is not None and self._rec.enabled:
+            self.chaos.recorder = self._rec
+        self._c_steps = self.metrics.counter("train.steps")
+        self._c_nonfinite = self.metrics.counter("train.nonfinite_grad_steps")
+        self._h_step_ms = self.metrics.histogram("train.step_ms")
         self._global_step = 0
+
+    @property
+    def nonfinite_grad_steps(self) -> int:
+        """Skipped-step count (back-compat attribute over the registry)."""
+        return int(self._c_nonfinite.value)
+
+    def stats(self) -> Dict[str, float]:
+        """Registry-backed trainer counters + step-time percentiles."""
+        p50, p95, p99 = self._h_step_ms.percentiles((0.50, 0.95, 0.99))
+        return {
+            "steps": int(self._c_steps.value),
+            "nonfinite_grad_steps": int(self._c_nonfinite.value),
+            "step_p50_ms": p50, "step_p95_ms": p95, "step_p99_ms": p99,
+        }
 
     def _tick(self, duration_s: float) -> None:
         """Feed one step's wall-clock to the StepMonitor (host 0 — the
         single-process trainer; multi-host callers own their monitor)."""
         self.monitor.record(self._global_step, 0, duration_s)
         self._global_step += 1
+        self._c_steps.inc()
+        self._h_step_ms.observe(duration_s * 1e3)
 
     def _build_step(self):
         mp_cfg, lr, wd = self.mp_cfg, self.lr, self.cfg.weight_decay
@@ -249,7 +278,10 @@ class CircuitTrainer:
                 ok = bool(ok)                  # device barrier ends the step
                 self._tick(time.perf_counter() - t_step)
                 if not ok:
-                    self.nonfinite_grad_steps += 1
+                    self._c_nonfinite.inc()
+                    if self._rec.enabled:
+                        self._rec.instant("train", "nonfinite_grads_skip",
+                                          step=self._global_step)
                     continue                   # skipped: a true no-op step
                 losses.append(float(loss))
             return float(np.mean(losses)) if losses else float("nan")
@@ -272,7 +304,10 @@ class CircuitTrainer:
                 ok = bool(ok)
             self._tick(time.perf_counter() - t_step)
             if not ok:
-                self.nonfinite_grad_steps += 1
+                self._c_nonfinite.inc()
+                if self._rec.enabled:
+                    self._rec.instant("train", "nonfinite_grads_skip",
+                                      step=self._global_step)
                 continue
             losses.append(float(loss))
             weights.append(n_real)

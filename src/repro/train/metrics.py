@@ -18,6 +18,21 @@ def percentile(sorted_values, p: float) -> float:
     return sorted_values[i]
 
 
+def median(values) -> float:
+    """Midpoint-averaging median (exact for even n; 0 for empty input) —
+    the convention the straggler monitor's MAD thresholds were built on
+    (fault/monitor.py).  Nearest-rank consumers use
+    ``percentile(sorted_values, 0.5)`` instead; these are the repo's only
+    two central-tendency definitions."""
+    s = sorted(values)
+    n = len(s)
+    if not n:
+        return 0.0
+    if n % 2:
+        return float(s[n // 2])
+    return 0.5 * (float(s[n // 2 - 1]) + float(s[n // 2]))
+
+
 def pearson(pred, label) -> float:
     p, l = np.asarray(pred, np.float64), np.asarray(label, np.float64)
     p, l = p - p.mean(), l - l.mean()

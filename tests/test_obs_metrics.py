@@ -1,0 +1,172 @@
+"""Metrics registry unit tests: counters/gauges/bounded-reservoir
+histograms, labeled series, snapshot/Prometheus exposition, and the
+thread-safety contract every engine/trainer emitter relies on."""
+
+import json
+import threading
+
+import pytest
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               default_registry)
+from repro.train.metrics import percentile
+
+
+def test_counter_inc_and_value():
+    c = Counter()
+    assert c.value == 0
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+
+
+def test_gauge_set_add():
+    g = Gauge()
+    g.set(4.0)
+    assert g.value == 4.0
+    g.add(-1.5)
+    assert g.value == 2.5
+
+
+def test_histogram_percentiles_match_single_definition():
+    """Histogram percentiles ARE train/metrics.py nearest-rank — one
+    percentile definition repo-wide (the dedup this PR enforces)."""
+    h = Histogram()
+    vals = [float(v) for v in range(1, 101)]
+    for v in vals:
+        h.observe(v)
+    for p in (0.50, 0.95, 0.99):
+        assert h.percentile(p) == percentile(sorted(vals), p)
+    p50, p95, p99 = h.percentiles((0.50, 0.95, 0.99))
+    assert (p50, p95, p99) == tuple(
+        percentile(sorted(vals), p) for p in (0.50, 0.95, 0.99))
+    s = h.summary()
+    assert s["count"] == 100 and s["min"] == 1.0 and s["max"] == 100.0
+    assert s["mean"] == pytest.approx(50.5)
+    assert set(s) == {"count", "sum", "min", "max", "mean",
+                      "p50", "p95", "p99"}
+
+
+def test_histogram_reservoir_bounds_window_not_count():
+    h = Histogram(reservoir=8)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100          # exact lifetime count
+    assert len(h.window()) == 8    # bounded sliding window
+    assert h.window() == [float(v) for v in range(92, 100)]
+    assert h.percentile(0.0) == 92.0  # percentiles over the window only
+
+
+def test_empty_histogram_is_zero_not_nan():
+    h = Histogram()
+    assert h.percentile(0.5) == 0.0
+    assert h.mean == 0.0
+
+
+def test_registry_get_or_create_identity_and_labels():
+    r = MetricsRegistry()
+    a = r.counter("serve.requests")
+    b = r.counter("serve.requests")
+    assert a is b
+    d0 = r.counter("serve.dispatches", device=0)
+    d1 = r.counter("serve.dispatches", device=1)
+    assert d0 is not d1
+    assert r.counter("serve.dispatches", device=0) is d0
+    d0.inc(3)
+    assert r.value("serve.dispatches", device=0) == 3
+    assert r.value("serve.dispatches", device=2, default=-1) == -1
+    assert set(r.series("serve.dispatches")) == {(("device", "0"),),
+                                                 (("device", "1"),)}
+
+
+def test_registry_kind_conflict_raises():
+    r = MetricsRegistry()
+    r.counter("x")
+    with pytest.raises(ValueError):
+        r.gauge("x")
+    with pytest.raises(ValueError):
+        r.histogram("x")
+
+
+def test_registry_conveniences():
+    r = MetricsRegistry()
+    r.inc("c", 2)
+    r.inc("c")
+    r.set("g", 7.0)
+    for v in (1.0, 2.0, 3.0):
+        r.observe("h", v)
+    assert r.value("c") == 3
+    assert r.value("g") == 7.0
+    assert r.histogram("h").count == 3
+
+
+def test_snapshot_and_json_round_trip():
+    r = MetricsRegistry()
+    r.inc("serve.requests", 5)
+    r.set("arena.fill_ratio", 0.75, etype="near", dir="fwd")
+    r.observe("serve.latency_ms", 12.0)
+    snap = r.snapshot()
+    assert snap["serve.requests"] == 5
+    assert snap['arena.fill_ratio{dir="fwd",etype="near"}'] == 0.75
+    assert snap["serve.latency_ms"]["count"] == 1
+    loaded = json.loads(r.snapshot_json())
+    assert loaded == json.loads(json.dumps(snap))
+
+
+def test_prometheus_exposition():
+    r = MetricsRegistry()
+    r.inc("serve.requests", 5)
+    r.set("arena.fill_ratio", 0.75, etype="near", dir="fwd")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        r.observe("serve.latency_ms", v)
+    text = r.to_prometheus()
+    assert "# TYPE serve_requests counter" in text
+    assert "serve_requests 5" in text
+    assert "# TYPE arena_fill_ratio gauge" in text
+    assert 'arena_fill_ratio{dir="fwd",etype="near"} 0.75' in text
+    assert "# TYPE serve_latency_ms summary" in text
+    assert 'serve_latency_ms{quantile="0.5"}' in text
+    assert "serve_latency_ms_count 4" in text
+    assert "serve_latency_ms_sum 10" in text
+
+
+def test_default_registry_is_shared():
+    assert default_registry() is default_registry()
+
+
+def test_thread_safety_exact_counts():
+    """N threads hammering one counter + one histogram lose nothing."""
+    r = MetricsRegistry()
+    c = r.counter("hits")
+    h = r.histogram("lat")
+    n_threads, per = 8, 500
+
+    def work():
+        for i in range(per):
+            c.inc()
+            h.observe(float(i))
+
+    ts = [threading.Thread(target=work) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per
+    assert h.count == n_threads * per
+
+
+def test_concurrent_get_or_create_single_instance():
+    r = MetricsRegistry()
+    got = []
+    barrier = threading.Barrier(8)
+
+    def work():
+        barrier.wait()
+        got.append(r.counter("shared", lane=1))
+
+    ts = [threading.Thread(target=work) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert all(g is got[0] for g in got)

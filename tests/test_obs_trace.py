@@ -1,0 +1,164 @@
+"""Trace recorder unit tests: Chrome trace-event export schema, monotonic
+timestamps, matched B/E pairs per track, bounded buffers, and the no-op
+recorder's zero-emission contract — validated with the same checker CI's
+trace-smoke leg runs (tools/check_trace.py)."""
+
+import importlib.util
+import json
+import os
+import threading
+
+from repro.obs.trace import (NULL_RECORDER, NULL_SPAN, Recorder,
+                             TraceRecorder)
+
+_spec = importlib.util.spec_from_file_location(
+    "check_trace",
+    os.path.join(os.path.dirname(__file__), "..", "tools", "check_trace.py"))
+check_trace_mod = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_trace_mod)
+check_trace = check_trace_mod.check_trace
+
+
+# ------------------------------------------------------- no-op recorder
+
+def test_null_recorder_emits_nothing_and_allocates_nothing():
+    rec = NULL_RECORDER
+    assert rec.enabled is False
+    rec.begin("t", "a")
+    rec.end("t", "a")
+    rec.instant("t", "b", k=1)
+    rec.complete("t", "c", 0.0, 1.0)
+    with rec.span("t", "d"):
+        pass
+    assert rec.export() == {"traceEvents": []}
+    # the span context is ONE shared instance — the tracing-off path
+    # allocates nothing per call (the overhead contract ISSUE-7 pins)
+    assert rec.span("t", "x") is rec.span("u", "y") is NULL_SPAN
+    assert rec.now() == 0.0
+
+
+def test_null_recorder_dump_is_valid_empty_trace(tmp_path):
+    p = tmp_path / "trace.json"
+    NULL_RECORDER.dump(str(p))
+    doc = json.loads(p.read_text())
+    assert doc == {"traceEvents": []}
+    assert check_trace(doc) == []
+
+
+def test_trace_recorder_is_a_recorder():
+    assert isinstance(TraceRecorder(), Recorder)
+    assert TraceRecorder().enabled is True
+
+
+# --------------------------------------------------------- live recorder
+
+def test_export_schema_and_round_trip(tmp_path):
+    rec = TraceRecorder()
+    rec.instant("intake", "submit", rid=0)
+    with rec.span("worker/0", "collate", batch=2):
+        with rec.span("worker/0", "device_put"):
+            pass
+    t0 = rec.now()
+    rec.complete("device/0", "batch", t0, rec.now() - t0, requests=2)
+    rec.instant("healing", "retry", attempt=1)
+    p = tmp_path / "t.json"
+    rec.dump(str(p))
+    doc = json.loads(p.read_text())
+    assert check_trace(doc, expect_device_tracks=1) == []
+    evs = doc["traceEvents"]
+    # metadata first: process_name + one thread_name per track
+    names = {e["args"]["name"] for e in evs if e.get("ph") == "M"
+             and e["name"] == "thread_name"}
+    assert names == {"intake", "worker/0", "device/0", "healing"}
+    assert evs[0]["name"] == "process_name"
+    # every non-meta event carries pid/tid/ts; ts monotonic per export
+    data = [e for e in evs if e["ph"] != "M"]
+    assert all(e["pid"] == 1 and e["tid"] >= 1 for e in data)
+    ts = [e["ts"] for e in data]
+    assert ts == sorted(ts)
+    assert [e["ph"] for e in data].count("X") == 1
+
+
+def test_span_pairs_match_and_annotate_errors():
+    rec = TraceRecorder()
+    try:
+        with rec.span("worker/0", "collate"):
+            raise RuntimeError("boom")
+    except RuntimeError:
+        pass
+    doc = rec.export()
+    assert check_trace(doc) == []      # B/E still matched on the error path
+    b, e = [ev for ev in doc["traceEvents"] if ev["ph"] in "BE"]
+    assert (b["ph"], e["ph"]) == ("B", "E")
+    assert e["args"]["error"] == "RuntimeError"
+
+
+def test_crossed_spans_fail_the_checker():
+    rec = TraceRecorder()
+    rec.begin("t", "outer")
+    rec.begin("t", "inner")
+    rec.end("t", "outer")              # crosses `inner`
+    rec.end("t", "inner")
+    assert check_trace(rec.export()) != []
+
+
+def test_unclosed_span_fails_the_checker():
+    rec = TraceRecorder()
+    rec.begin("t", "open")
+    assert any("unclosed" in p for p in check_trace(rec.export()))
+
+
+def test_bounded_buffer_counts_drops():
+    rec = TraceRecorder(max_events=4)
+    for i in range(10):
+        rec.instant("t", f"e{i}")
+    assert len(rec) == 4
+    assert rec.dropped == 6
+    doc = rec.export()
+    assert doc["otherData"]["dropped_events"] == 6
+    assert check_trace(doc) == []
+
+
+def test_tracks_get_stable_distinct_tids():
+    rec = TraceRecorder()
+    for track in ("device/0", "device/1", "intake", "device/0"):
+        rec.instant(track, "x")
+    doc = rec.export()
+    tids = {e["args"]["name"]: e["tid"] for e in doc["traceEvents"]
+            if e.get("ph") == "M" and e["name"] == "thread_name"}
+    assert len(tids) == 3
+    assert len(set(tids.values())) == 3
+    evs = [e for e in doc["traceEvents"] if e["ph"] == "i"]
+    assert evs[0]["tid"] == evs[3]["tid"] == tids["device/0"]
+
+
+def test_concurrent_emission_thread_safe():
+    rec = TraceRecorder()
+    n_threads, per = 8, 200
+
+    def work(k):
+        for i in range(per):
+            with rec.span(f"worker/{k}", "step", i=i):
+                pass
+
+    ts = [threading.Thread(target=work, args=(k,))
+          for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert len(rec) == n_threads * per * 2
+    assert check_trace(rec.export(), expect_device_tracks=0) == []
+
+
+def test_checker_rejects_garbage():
+    assert check_trace([]) != []
+    assert check_trace({"traceEvents": [{"ph": "B"}]}) != []
+    assert check_trace({"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": -5.0}]}) != []
+    ok = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0,
+         "dur": 5.0}]}
+    assert check_trace(ok) == []
+    assert check_trace(ok, expect_events=("missing",)) != []

@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace-event JSON dump (the CI trace-smoke leg).
+
+Checks, in order:
+
+* the file round-trips as JSON and has a ``traceEvents`` list;
+* every event carries ``ph``/``pid``/``tid`` (and ``name`` except bare
+  ``E`` ends), with a numeric non-negative ``ts`` on non-metadata events;
+* per ``(pid, tid)`` track, ``ts`` is monotonically non-decreasing once
+  sorted order is asserted (the exporter sorts; a raw concatenation that
+  interleaves out of order fails here);
+* per track, ``B``/``E`` duration events are strictly nested: every ``E``
+  matches the most recent open ``B`` of the same name, and no ``B`` is
+  left open at end-of-track;
+* ``X`` events carry a non-negative ``dur``;
+* with ``--expect-device-tracks N``, the metadata names at least N
+  distinct ``device/<i>`` tracks (per-ring-slot dispatch lanes);
+* with ``--expect-event NAME`` (repeatable), at least one event with that
+  name exists (e.g. ``inject:dispatch`` for chaos annotations,
+  ``deadline_flush`` for the deadline regime).
+
+Exit code 0 when the trace is well-formed; 1 with one line per problem.
+
+    python tools/check_trace.py TRACE.json [--expect-device-tracks N]
+                                           [--expect-event NAME ...]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from collections import defaultdict
+
+
+def check_trace(doc: object, expect_device_tracks: int = 0,
+                expect_events: tuple = ()) -> list:
+    """Return a list of problem strings (empty == valid)."""
+    problems = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["top level: expected an object with a 'traceEvents' list"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["traceEvents: expected a list"]
+
+    track_names = {}
+    last_ts = {}
+    open_spans = defaultdict(list)
+    seen_names = set()
+    for i, ev in enumerate(events):
+        ph = ev.get("ph")
+        if ph is None or "pid" not in ev or "tid" not in ev:
+            problems.append(f"event {i}: missing ph/pid/tid: {ev}")
+            continue
+        if ph == "M":
+            if ev.get("name") == "thread_name":
+                track_names[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+            continue
+        name = ev.get("name")
+        if name is None and ph != "E":
+            problems.append(f"event {i}: ph={ph!r} missing name")
+            continue
+        seen_names.add(name)
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            problems.append(f"event {i} ({name!r}): bad ts {ts!r}")
+            continue
+        key = (ev["pid"], ev["tid"])
+        if ts < last_ts.get(key, 0.0):
+            problems.append(
+                f"event {i} ({name!r}): ts {ts} < previous "
+                f"{last_ts[key]} on track {track_names.get(key, key)}")
+        last_ts[key] = ts
+        if ph == "B":
+            open_spans[key].append(name)
+        elif ph == "E":
+            stack = open_spans[key]
+            if not stack:
+                problems.append(
+                    f"event {i}: E {name!r} with no open B on track "
+                    f"{track_names.get(key, key)}")
+            elif name is not None and stack[-1] != name:
+                problems.append(
+                    f"event {i}: E {name!r} crosses open B "
+                    f"{stack[-1]!r} on track {track_names.get(key, key)}")
+                stack.pop()
+            else:
+                stack.pop()
+        elif ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                problems.append(f"event {i} ({name!r}): X bad dur {dur!r}")
+    for key, stack in open_spans.items():
+        if stack:
+            problems.append(
+                f"track {track_names.get(key, key)}: unclosed B span(s) "
+                f"{stack}")
+    n_dev = sum(1 for n in track_names.values()
+                if n.startswith("device/"))
+    if n_dev < expect_device_tracks:
+        problems.append(
+            f"expected >= {expect_device_tracks} device/<i> tracks, "
+            f"found {n_dev} ({sorted(track_names.values())})")
+    for want in expect_events:
+        if want not in seen_names:
+            problems.append(f"expected at least one {want!r} event; "
+                            f"names seen: {sorted(map(str, seen_names))}")
+    return problems
+
+
+def main(argv) -> int:
+    if not argv or argv[0].startswith("-"):
+        print(__doc__)
+        return 2
+    path, args = argv[0], argv[1:]
+    expect_dev = 0
+    expect_events = []
+    i = 0
+    while i < len(args):
+        if args[i] == "--expect-device-tracks":
+            expect_dev = int(args[i + 1])
+            i += 2
+        elif args[i] == "--expect-event":
+            expect_events.append(args[i + 1])
+            i += 2
+        else:
+            print(f"unknown arg {args[i]!r}")
+            return 2
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"{path}: {e}")
+        return 1
+    problems = check_trace(doc, expect_dev, tuple(expect_events))
+    for p in problems:
+        print(f"{path}: {p}")
+    if not problems:
+        n = sum(1 for e in doc["traceEvents"] if e.get("ph") != "M")
+        print(f"{path}: OK ({n} events)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
