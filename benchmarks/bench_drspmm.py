@@ -305,7 +305,123 @@ def bench_hetero(scale=0.08, size="medium", dim=64, k=16,
     return stats
 
 
+def bench_sharded(scale=0.08, size="medium", dim=64, k=16,
+                  out_json="BENCH_drspmm.json", iters=10, smoke=False,
+                  device_counts=(2, 4)):
+    """Mesh-sharded mega-dispatch (DESIGN.md §12) vs the single-device plan
+    path, per shard count.
+
+    XLA's device count locks at the first jax import, so every shard count
+    runs in a child interpreter with
+    ``--xla_force_host_platform_device_count=n`` (the tests/_multidev.py
+    pattern); the child prints one ``SHARDED_RESULT`` JSON line this parent
+    collects.  Wall-clock follows the repo convention — the xla family on
+    CPU (Pallas interpret-mode is not wall-clock-representative, see
+    ``bench()``); each leg additionally records the per-device arena
+    footprint (owned slabs + halo tables) against full-graph replication.
+    ``smoke=True`` makes the child assert numeric parity with
+    ``drspmm_multi`` AND that every shard's footprint stays strictly below
+    replicating the whole super-arena — the reason sharding exists.
+    """
+    import json
+    import os
+    import subprocess
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    entries = []
+    for n in device_counts:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                                   if env.get("PYTHONPATH") else "")
+        flags = [t for t in env.get("XLA_FLAGS", "").split()
+                 if not t.startswith("--xla_force_host_platform_device_count")]
+        env["XLA_FLAGS"] = " ".join(
+            flags + [f"--xla_force_host_platform_device_count={n}"])
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_drspmm",
+             "--_sharded-child", str(n), str(scale), size, str(dim),
+             str(k), str(iters), str(int(smoke))],
+            env=env, cwd=root, capture_output=True, text=True, timeout=1200)
+        assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+        line = [ln for ln in r.stdout.splitlines()
+                if ln.startswith("SHARDED_RESULT ")][-1]
+        res = json.loads(line[len("SHARDED_RESULT "):])
+        emit(f"sharded_fwd/{size}/n{n}/d{dim}/k{k}", res["sharded_fwd_us"],
+             f"vs_single={res['single_fwd_us'] / res['sharded_fwd_us']:.2f}x;"
+             f"shard_bytes={res['max_shard_bytes']}"
+             f"(full={res['full_arena_bytes']})")
+        emit(f"sharded_grad/{size}/n{n}/d{dim}/k{k}", res["sharded_grad_us"],
+             f"vs_single={res['single_grad_us'] / res['sharded_grad_us']:.2f}x;"
+             f"halo_rows={res['total_halo_rows']}(pad={res['halo_pad']})")
+        entries.append(res)
+    append_json(out_json, dict(
+        ts=time.time(), kind="sharded", size=size, scale=scale, dim=dim,
+        k=k, backend=jax.default_backend(), entries=entries))
+    return entries
+
+
+def _bench_sharded_child(n, scale, size, dim, k, iters, smoke):
+    """Child half of :func:`bench_sharded` — runs under a forced n-device
+    XLA runtime and prints one ``SHARDED_RESULT`` JSON line."""
+    import json
+
+    from repro.graphs.circuit import relation_plan_of, sharded_plan_of
+
+    assert jax.device_count() == n, (jax.device_count(), n)
+    rng = np.random.default_rng(0)
+    g = generate_design(1, size, scale=scale)[0]
+    plan = relation_plan_of(g)
+    splan = sharded_plan_of(g, n)
+    cc = cbsr_from_dense(drelu(jnp.asarray(
+        rng.normal(size=(g.n_cell, dim)).astype(np.float32)), k), k)
+    cn = cbsr_from_dense(drelu(jnp.asarray(
+        rng.normal(size=(g.n_net, dim)).astype(np.float32)), k), k)
+
+    def call(op, p, vc, vn):
+        return op(p, {"cell": (vc, cc.idx), "net": (vn, cn.idx)}, dim,
+                  backend="xla_fused")
+
+    def grad_call(op, p):
+        return lambda vc, vn: jax.grad(
+            lambda qc, qn: sum(jnp.sum(jnp.sin(y)) for y in
+                               call(op, p, qc, qn).values()),
+            argnums=(0, 1))(vc, vn)
+
+    stats = {}
+    for name, op, p in (("sharded", ops.drspmm_multi_sharded, splan),
+                        ("single", ops.drspmm_multi, plan)):
+        stats[f"{name}_fwd_us"] = time_jit(
+            lambda vc, vn: call(op, p, vc, vn), cc.values, cn.values,
+            iters=iters)
+        stats[f"{name}_grad_us"] = time_jit(
+            grad_call(op, p), cc.values, cn.values, iters=iters)
+
+    hs = splan.halo_stats()
+    if smoke:
+        y_sh = call(ops.drspmm_multi_sharded, splan, cc.values, cn.values)
+        y_1 = call(ops.drspmm_multi, plan, cc.values, cn.values)
+        for et in y_1:
+            ref = np.asarray(y_1[et])
+            atol = 1e-4 * max(1.0, float(np.abs(ref).max()))
+            np.testing.assert_allclose(np.asarray(y_sh[et]), ref,
+                                       atol=atol, rtol=1e-5,
+                                       err_msg=f"sharded parity {et}")
+        assert hs["max_shard_bytes"] < hs["full_arena_bytes"], hs
+    print("SHARDED_RESULT " + json.dumps(dict(
+        n_shards=n, n_cell=g.n_cell, n_net=g.n_net,
+        max_shard_bytes=hs["max_shard_bytes"],
+        full_arena_bytes=hs["full_arena_bytes"],
+        total_halo_rows=hs["total_halo_rows"], halo_pad=hs["halo_pad"],
+        **stats)))
+
+
 if __name__ == "__main__":
+    if "--_sharded-child" in sys.argv:
+        a = sys.argv[sys.argv.index("--_sharded-child") + 1:]
+        _bench_sharded_child(int(a[0]), float(a[1]), a[2], int(a[3]),
+                             int(a[4]), int(a[5]), bool(int(a[6])))
+        sys.exit(0)
     if "--smoke" in sys.argv:
         # CI-sized run: tiny graph, fused-vs-bucketed + plan-vs-serial
         # comparisons (fixed-weight, learnable, and hetero-layer legs),
@@ -313,8 +429,10 @@ if __name__ == "__main__":
         bench_fused(scale=0.02, size="small", iters=3)
         bench_learnable(scale=0.02, size="small", iters=3)
         bench_hetero(scale=0.02, size="small", iters=3, smoke=True)
+        bench_sharded(scale=0.02, size="small", iters=3, smoke=True)
     else:
         bench_fused()
         bench_learnable()
         bench_hetero()
+        bench_sharded()
         bench()

@@ -37,9 +37,11 @@ import jax.numpy as jnp
 
 from repro.core.cbsr import cbsr_from_dense
 from repro.core.drelu import drelu
-from repro.graphs.circuit import CircuitGraph, relation_plan_of
+from repro.graphs.circuit import (CircuitGraph, relation_plan_of,
+                                  sharded_plan_of)
 from repro.graphs.ell import FusedELL, RelationPlan
 from repro.kernels import ops
+from repro.sharding.plan_shard import ShardedRelationPlan
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +59,12 @@ class HeteroMPConfig:
     # via the graph's RelationPlan.  False pins the serial per-direction
     # reference loop (exact parity: tests/test_relation_plan.py).
     use_plan: bool = True
+    # Giant-graph mesh sharding (DESIGN.md §12): > 1 partitions the plan
+    # over that many mesh devices and routes the layer through
+    # ``ops.drspmm_multi_sharded`` (needs that many visible devices).  A
+    # graph arriving with a ShardedRelationPlan already attached uses it
+    # regardless of this knob.
+    n_shards: int = 0
 
 
 class HeteroLayerParams(NamedTuple):
@@ -118,12 +126,14 @@ def plan_applicable(cfg: HeteroMPConfig, hidden: int) -> bool:
 
 
 def _plan_for(graph: CircuitGraph, cfg: HeteroMPConfig,
-              hidden: int) -> RelationPlan | None:
-    """The layer's RelationPlan, or None when the serial path must run.
+              hidden: int) -> RelationPlan | ShardedRelationPlan | None:
+    """The layer's RelationPlan (possibly mesh-partitioned), or None when
+    the serial path must run.
 
     Beyond :func:`plan_applicable`, a plan must actually be available:
-    attached to the graph (collated batches — works traced), or buildable
-    host-side (concrete bucketed adjacencies, memoized per graph)."""
+    attached to the graph (collated batches / ``with_sharded_plan`` — works
+    traced), or buildable host-side (concrete bucketed adjacencies,
+    memoized per graph; partitioned when ``cfg.n_shards > 1``)."""
     if not plan_applicable(cfg, hidden):
         return None
     if graph.plan is not None:
@@ -133,6 +143,8 @@ def _plan_for(graph: CircuitGraph, cfg: HeteroMPConfig,
         return None    # pre-fused (collated) graph without an attached plan
     if isinstance(adj.buckets[0].nbr, jax.core.Tracer):
         return None    # traced graph argument: host packing impossible
+    if cfg.n_shards > 1:
+        return sharded_plan_of(graph, cfg.n_shards)
     return relation_plan_of(graph)
 
 
@@ -163,7 +175,9 @@ def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
     if plan is not None:
         c_cell = _sparsify(x_cell, cfg.k_cell, cfg)
         c_net = _sparsify(x_net, cfg.k_net, cfg)
-        aggs = ops.drspmm_multi(
+        op = ops.drspmm_multi_sharded \
+            if isinstance(plan, ShardedRelationPlan) else ops.drspmm_multi
+        aggs = op(
             plan, {"cell": (c_cell.values, c_cell.idx),
                    "net": (c_net.values, c_net.idx)},
             x_cell.shape[-1], backend=cfg.backend)

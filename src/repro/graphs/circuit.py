@@ -23,6 +23,8 @@ import jax.numpy as jnp
 
 from repro.graphs.ell import (BucketedELL, RelationPlan, build_relation_plan,
                               degree_stats, ell_to_coo, pack_ell_pair)
+from repro.sharding.plan_shard import (ShardedRelationPlan,
+                                       shard_relation_plan)
 
 EDGE_TYPES = ("near", "pin", "pinned")
 # (source node type, destination node type) per edge type.
@@ -47,12 +49,14 @@ class CircuitGraph:
     x_net: jax.Array             # (n_net, f_net)
     y_cell: jax.Array            # (n_cell,) congestion label
     # Optional relation-fused super-arena pair for the whole-layer
-    # message-passing dispatch (graphs/ell.py::RelationPlan, DESIGN.md §9).
-    # Attached by the collator / ``with_plan`` so plan-driven layers work
-    # even when the graph is a TRACED jit argument (host packing is
-    # impossible there); ``None`` falls back to the serial per-direction
-    # path in core/hetero_mp.py.
-    plan: Optional[RelationPlan] = None
+    # message-passing dispatch (graphs/ell.py::RelationPlan, DESIGN.md §9),
+    # or its mesh-partitioned form (sharding/plan_shard.py::
+    # ShardedRelationPlan, DESIGN.md §12) for graphs larger than one
+    # device.  Attached by the collator / ``with_plan`` /
+    # ``with_sharded_plan`` so plan-driven layers work even when the graph
+    # is a TRACED jit argument (host packing is impossible there); ``None``
+    # falls back to the serial per-direction path in core/hetero_mp.py.
+    plan: Optional[RelationPlan | ShardedRelationPlan] = None
 
     def n_nodes(self, ntype: str) -> int:
         return self.n_cell if ntype == "cell" else self.n_net
@@ -68,7 +72,7 @@ def relation_plan_of(graph: CircuitGraph) -> RelationPlan:
     ``graph`` — the one-kernel-per-direction-group packing of its whole
     hetero layer.  Requires concrete (non-traced) bucketed adjacencies; the
     collator attaches pre-quantized plans to collated graphs instead."""
-    if graph.plan is not None:
+    if isinstance(graph.plan, RelationPlan):
         return graph.plan
     key = id(graph)
     hit = _PLAN_CACHE.get(key)
@@ -97,6 +101,41 @@ def with_plan(graph: CircuitGraph) -> CircuitGraph:
     if graph.plan is not None:
         return graph
     return dataclasses.replace(graph, plan=relation_plan_of(graph))
+
+
+# (id(graph), n_shards)-keyed memo, weakref-guarded like _PLAN_CACHE: the
+# mesh partition is host-side numpy work done once per (graph, mesh size).
+_SHARDED_PLAN_CACHE: Dict[tuple, tuple] = {}
+
+
+def sharded_plan_of(graph: CircuitGraph, n_shards: int,
+                    registry=None) -> ShardedRelationPlan:
+    """Memoized mesh partition of ``graph``'s relation plan (DESIGN.md
+    §12): every device of a ``("shard",)`` mesh owns one destination slab
+    of the super-arena plus the halo index tables for its cross-shard
+    source rows.  Consumed by ``ops.drspmm_multi_sharded``."""
+    key = (id(graph), int(n_shards))
+    hit = _SHARDED_PLAN_CACHE.get(key)
+    if hit is not None and hit[0]() is graph:
+        return hit[1]
+    splan = shard_relation_plan(relation_plan_of(graph), n_shards,
+                                registry=registry)
+    _SHARDED_PLAN_CACHE[key] = (
+        weakref.ref(graph, lambda _: _SHARDED_PLAN_CACHE.pop(key, None)),
+        splan)
+    return splan
+
+
+def with_sharded_plan(graph: CircuitGraph, n_shards: int) -> CircuitGraph:
+    """``graph`` with its mesh-partitioned plan attached as a pytree child
+    — the giant-graph analogue of :func:`with_plan` for jitted steps that
+    take the graph as a traced argument."""
+    if isinstance(graph.plan, ShardedRelationPlan) \
+            and graph.plan.n_shards == n_shards:
+        return graph
+    base = dataclasses.replace(graph, plan=None) \
+        if graph.plan is not None else graph
+    return dataclasses.replace(base, plan=sharded_plan_of(graph, n_shards))
 
 
 def build_circuit_graph(coo: Dict[str, Tuple[np.ndarray, np.ndarray]],

@@ -599,6 +599,28 @@ def pad_fused_arena(f: FusedELL, n_chunks: int, n_rows: int) -> FusedELL:
         row_block=f.row_block, chunk=f.chunk, eid=eid, rel=rel)
 
 
+def fused_to_coo(f: FusedELL) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side inverse of :func:`fuse_bucketed`: (dst, src, w) of the
+    non-zero slots, in the arena's OWN coordinates.
+
+    For a plain arena that means original row ids; for a super-arena
+    (:func:`build_relation_plan`) dst comes out in relation-concat output
+    coordinates and src in the type-concat source slab — exactly the global
+    coordinate pair the mesh partitioner (sharding/plan_shard.py) shards on.
+    Zero-weight slots are padding by construction, so the round trip yields
+    exactly the edges the packing represents (vectorized, no chunk loop).
+    """
+    w = np.asarray(f.w, np.float32)                       # (C, BR, Ec)
+    blk = np.asarray(f.block_of, np.int64)
+    rows = np.asarray(f.rows, np.int64)
+    br = f.row_block
+    slot_row = rows[blk[:, None] * br + np.arange(br)]    # (C, BR)
+    mask = w != 0
+    dst = np.broadcast_to(slot_row[:, :, None], w.shape)[mask]
+    src = np.asarray(f.nbr, np.int64)[mask]
+    return dst, src, w[mask]
+
+
 # ---------------------------------------------------------------------------
 # RelationPlan — cross-relation super-arena (DESIGN.md §9)
 # ---------------------------------------------------------------------------

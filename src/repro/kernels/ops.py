@@ -779,3 +779,182 @@ def drspmm_multi(plan: RelationPlan, cbsr, dim: int, *,
     else:
         ys = _multi_executable(plan, dim, eff)(vals, idxs)
     return {s.etype: y for s, y in zip(plan.segments, ys)}
+
+
+# ---------------------------------------------------------------------------
+# drspmm_multi_sharded — the giant-graph path (DESIGN.md §12): the
+# super-arena partitioned by destination row-block over a ("shard",) mesh
+# (sharding/plan_shard.py), executed under shard_map with ONE all-to-all
+# halo exchange per direction.  Each device holds only its local arenas +
+# owned operand slabs; the §1/§5 per-shard contraction is unchanged.
+# ---------------------------------------------------------------------------
+
+def _sharded_effective_backend(backend: Backend) -> Backend:
+    """The sharded path only has the fused per-shard executors (local
+    arenas are always pre-fused; the dense oracle lives host-side as
+    ``plan_shard.reference_forward``), so every name maps to the fused
+    executor of its family."""
+    return "pallas_fused" if backend in ("pallas", "pallas_fused") \
+        else "xla_fused"
+
+
+def _local_fused(tabs, n_dst: int, n_src: int, row_block: int,
+                 chunk: int) -> FusedELL:
+    """This device's arena from shard_map operand slices (leading shard
+    axis of size 1) — traced leaves, static geometry."""
+    nbr, w, blk, start, rows, gather = (t[0] for t in tabs)
+    return FusedELL(nbr=nbr, w=w, block_of=blk, start=start, rows=rows,
+                    gather=gather, n_dst=n_dst, n_src=n_src, nnz=-1,
+                    row_block=row_block, chunk=chunk)
+
+
+def _build_multi_sharded(splan, dim: int, backend: Backend, trace_key=None):
+    """Custom-vjp callable over (vals_tuple, idxs_tuple), SPMD over the
+    ("shard",) mesh.
+
+    Forward: each device gathers the source rows its peers requested
+    (``send_idx``), one ``all_to_all`` delivers every halo owner-major, the
+    local slab ``[own | halo]`` feeds the unchanged fused contraction, and
+    each device writes its contiguous output slab.  Backward reverses the
+    exchange: the transposed local arena produces dx over the local slab;
+    the halo segment travels back through the same ``all_to_all`` and is
+    scatter-added into the owner shards' dx rows (two-coordinate backward,
+    DESIGN.md §12).  Padded slots carry zero weights end to end — inert.
+    """
+    from repro.sharding.specs import shard_map_compat, shard_mesh
+    from jax.sharding import PartitionSpec as P
+
+    n, s_slab, t_slab, h = (splan.n_shards, splan.src_slab, splan.out_slab,
+                            splan.halo_pad)
+    local_src = splan.local_src
+    mesh = shard_mesh(n)
+    spec = P("shard")
+
+    def probe():
+        if trace_key is not None:
+            _SHARDED_TRACES.append(trace_key)
+
+    def fwd_inner(xv, xi, nbr, w, blk, start, rows, gather, send):
+        # xv/xi: (S, k) owned slab; tables: (1, ...) shard slices
+        send2 = send[0]                               # (n, H) rows peers want
+        hv = jax.lax.all_to_all(jnp.take(xv, send2, axis=0), "shard", 0, 0)
+        hi = jax.lax.all_to_all(jnp.take(xi, send2, axis=0), "shard", 0, 0)
+        slab_v = jnp.concatenate([xv, hv.reshape(-1, xv.shape[1])])
+        slab_i = jnp.concatenate([xi, hi.reshape(-1, xi.shape[1])])
+        f = _local_fused((nbr, w, blk, start, rows, gather), t_slab,
+                         local_src, splan.row_block, splan.fwd_chunk)
+        if backend == "pallas_fused":
+            ya = _k.drspmm_fwd_fused(f, slab_v, slab_i, dim)
+            return jnp.take(ya, f.gather, axis=0).astype(xv.dtype)
+        return _fwd_fused_xla(f, slab_v, slab_i, dim)
+
+    def bwd_inner(gy, xi, nbr, w, blk, start, rows, gather, send):
+        # gy: (T, D) owned output cotangent; xi: (S, k) owned indices
+        send2 = send[0]
+        hi = jax.lax.all_to_all(jnp.take(xi, send2, axis=0), "shard", 0, 0)
+        slab_i = jnp.concatenate([xi, hi.reshape(-1, xi.shape[1])])
+        ft = _local_fused((nbr, w, blk, start, rows, gather), local_src,
+                          t_slab, splan.row_block, splan.bwd_chunk)
+        if backend == "pallas_fused":
+            xi_arena = jnp.take(slab_i, ft.rows, axis=0)
+            ga = _k.drspmm_bwd_fused(ft, gy, xi_arena)
+            dx_slab = jnp.take(ga, ft.gather, axis=0).astype(gy.dtype)
+        else:
+            dx_slab = _bwd_fused_xla(ft, gy, slab_i)  # (S + n·H, k)
+        # reverse exchange: halo dx goes home, owners scatter-add it.  Both
+        # padded send slots (local row 0) and the self segment add exact
+        # zeros — unreferenced dx-slab rows gather from the sentinel block.
+        back = jax.lax.all_to_all(
+            dx_slab[s_slab:].reshape(n, h, -1), "shard", 0, 0)
+        return dx_slab[:s_slab].at[send2.reshape(-1)].add(
+            back.reshape(n * h, -1))
+
+    sm = dict(mesh=mesh, check_vma=False)
+    fwd_sm = shard_map_compat(in_specs=(spec,) * 9, out_specs=spec,
+                              **sm)(fwd_inner)
+    bwd_sm = shard_map_compat(in_specs=(spec,) * 9, out_specs=spec,
+                              **sm)(bwd_inner)
+    fwd_tabs = (splan.fwd_nbr, splan.fwd_w, splan.fwd_block_of,
+                splan.fwd_start, splan.fwd_rows, splan.fwd_gather)
+    bwd_tabs = (splan.bwd_nbr, splan.bwd_w, splan.bwd_block_of,
+                splan.bwd_start, splan.bwd_rows, splan.bwd_gather)
+    family = "pallas" if backend == "pallas_fused" else "xla"
+
+    def _pad_rows(a, total):
+        return jnp.pad(a, ((0, total - a.shape[0]), (0, 0)))
+
+    @jax.custom_vjp
+    def f(vals, idxs):
+        probe()
+        _record_dispatch(f"{family}:shard_fwd")
+        xv, xi, _ = _multi_concat(splan, vals, idxs)
+        y_full = fwd_sm(_pad_rows(xv, n * s_slab), _pad_rows(xi, n * s_slab),
+                        *fwd_tabs, splan.send_idx)
+        return _split_out(splan, y_full[:splan.n_out_total])
+
+    def f_fwd(vals, idxs):
+        return f(vals, idxs), idxs                # xi is the only residual
+
+    def f_bwd(idxs, gys):
+        _record_dispatch(f"{family}:shard_bwd")
+        gy_cat = jnp.concatenate(list(gys))
+        _, xi, _ = _multi_concat(splan, [jnp.zeros_like(i, jnp.float32)
+                                         for i in idxs], idxs)
+        dx_full = bwd_sm(_pad_rows(gy_cat, n * t_slab),
+                         _pad_rows(xi, n * s_slab), *bwd_tabs,
+                         splan.send_idx)
+        dx = dx_full[:splan.n_src_total]          # already type-concat
+        outs = tuple(dx[o:o + sz][:, :int(i.shape[1])]
+                     for o, sz, i in zip(splan.src_off, splan.src_sizes,
+                                         idxs))
+        return (outs, tuple(np.zeros(np.shape(i), jax.dtypes.float0)
+                            for i in idxs))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f
+
+
+_SHARDED_EXE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_SHARDED_EXE_MAX = 32
+_SHARDED_TRACES: list = []
+
+
+def _sharded_executable(splan, dim: int, backend: Backend):
+    key = (id(splan), dim, backend)
+    hit = _SHARDED_EXE.get(key)
+    if hit is not None and hit[0] is splan:
+        _SHARDED_EXE.move_to_end(key)
+        return hit[1]
+    exe = jax.jit(_build_multi_sharded(splan, dim, backend, trace_key=key))
+    _SHARDED_EXE[key] = (splan, exe)
+    _SHARDED_EXE.move_to_end(key)
+    while len(_SHARDED_EXE) > _SHARDED_EXE_MAX:
+        _SHARDED_EXE.popitem(last=False)
+    return exe
+
+
+def drspmm_multi_sharded(splan, cbsr, dim: int, *,
+                         backend: Backend = DEFAULT_BACKEND):
+    """Whole-direction-group DR-SpMM over a mesh-partitioned plan
+    (:class:`~repro.sharding.plan_shard.ShardedRelationPlan`).
+
+    Same contract as :func:`drspmm_multi` — ``cbsr`` maps source node types
+    to CBSR pairs, returns ``{etype: y}``, gradients flow to every type's
+    ``vals`` — but the execution is SPMD over the ``("shard",)`` mesh: one
+    all-to-all halo exchange + one local fused contraction per direction,
+    with each device holding only its arena slices (fwd/grad parity vs the
+    single-device plan path: tests/test_sharded_parity.py).  Needs
+    ``splan.n_shards`` visible devices (virtual CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  A concrete
+    plan routes through the id-keyed LRU; a traced plan (e.g. a sharded
+    trainer step taking the graph as a jit argument) traces inline and the
+    outer jit owns the caching.
+    """
+    eff = _sharded_effective_backend(backend)
+    vals = tuple(cbsr[t][0] for t in splan.src_types)
+    idxs = tuple(cbsr[t][1] for t in splan.src_types)
+    if isinstance(splan.fwd_nbr, jax.core.Tracer):
+        ys = _build_multi_sharded(splan, dim, eff)(vals, idxs)
+    else:
+        ys = _sharded_executable(splan, dim, eff)(vals, idxs)
+    return {s.etype: y for s, y in zip(splan.segments, ys)}

@@ -1,0 +1,348 @@
+"""Mesh-partitioned RelationPlan: giant-graph sharded execution (DESIGN §12).
+
+Everything up to PR 7 assumes one device holds the whole circuit; the
+paper's headline workload (full-size CircuitNet) does not fit.  This module
+splits a :class:`~repro.graphs.ell.RelationPlan` super-arena by destination
+row-block across a 1-D ``("shard",)`` mesh at PACK time:
+
+* Device ``d`` owns the contiguous OUTPUT slab ``[d·T, (d+1)·T)`` of the
+  relation-concat output space and the contiguous SOURCE slab
+  ``[d·S, (d+1)·S)`` of the type-concat source space (``T``/``S`` are the
+  ceil-divided slab sizes; the ragged tail is inert padding).
+* Every edge lands on the shard owning its destination row.  Source rows a
+  shard needs but does not own form its HALO: a per-owner sorted-unique
+  request list, baked into two index tables —
+
+    - ``send_idx[s, p]``  — local coords (at owner ``s``) of the rows peer
+      ``p`` requested: the all-to-all SEND gather.
+    - ``halo_rows[d, s]`` — global source row ids behind shard ``d``'s halo
+      slots from owner ``s`` (−1 = padding): the audit table the property
+      suite checks bijectivity on (tests/test_plan_shard.py).
+
+* Each shard's edges are re-packed (``pack_ell`` → ``fuse_bucketed`` at the
+  plan's pinned chunk widths) into LOCAL fwd/bwd arenas over the local
+  coordinate space ``[own slab | halo slab]`` (halo slot ``(s, j)`` lives at
+  ``S + s·H + j``).  The §1/§5 kernels run UNCHANGED per shard; all shards'
+  arenas are padded to one stacked shape so ``shard_map`` sees uniform
+  operands and each device holds exactly its slice.
+
+The executor (kernels/ops.py::drspmm_multi_sharded) runs the halo exchange
+as ONE ``jax.lax.all_to_all`` per direction: forward gathers requested
+source rows to the shards that read them; backward reverses the exchange —
+the halo segment of the local dx slab travels back to the owner shards,
+which scatter-add it into their owned dx rows.  Padded slots carry zero
+weights end to end, so every padding path is inert (property-tested).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+
+from repro.graphs.ell import (FusedELL, RelationPlan, RelationSegment,
+                              fuse_bucketed, fused_to_coo, pack_ell,
+                              pad_fused_arena)
+from repro.obs.metrics import DEFAULT_REGISTRY as _METRICS
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _arena_nbytes(f: FusedELL) -> int:
+    """Device footprint of one arena's tables (slot tables dominate)."""
+    return sum(np.asarray(a).nbytes
+               for a in (f.nbr, f.w, f.block_of, f.start, f.rows, f.gather))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedRelationPlan:
+    """A RelationPlan partitioned over ``n_shards`` mesh devices.
+
+    Array fields are STACKED per-shard tables with a leading ``n_shards``
+    axis; under ``shard_map`` with ``P("shard")`` each device holds exactly
+    its slice — the whole point: no shard ever materializes another shard's
+    arena.  Static fields mirror :class:`RelationPlan`'s aux data plus the
+    slab geometry, so the executor's jit cache keys stay shape-stable.
+    """
+
+    # fwd local arenas (stacked): (n, Cf, BR, Ec) slots + per-chunk metadata
+    fwd_nbr: jax.Array
+    fwd_w: jax.Array
+    fwd_block_of: jax.Array      # (n, Cf)
+    fwd_start: jax.Array         # (n, Cf)
+    fwd_rows: jax.Array          # (n, Rf) local output row per arena row
+    fwd_gather: jax.Array        # (n, T)  arena row per local output row
+    # bwd (transposed) local arenas: dx over the local [own | halo] slab
+    bwd_nbr: jax.Array
+    bwd_w: jax.Array
+    bwd_block_of: jax.Array
+    bwd_start: jax.Array
+    bwd_rows: jax.Array          # (n, Rb) local source-slab row per arena row
+    bwd_gather: jax.Array        # (n, S + n·H)
+    # halo exchange tables
+    send_idx: jax.Array          # (n, n, H) local rows owner s sends peer p
+    halo_rows: jax.Array         # (n, n, H) global src row per halo slot; −1 pad
+
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+    src_slab: int = dataclasses.field(metadata=dict(static=True))    # S
+    out_slab: int = dataclasses.field(metadata=dict(static=True))    # T
+    halo_pad: int = dataclasses.field(metadata=dict(static=True))    # H
+    n_src_total: int = dataclasses.field(metadata=dict(static=True))
+    n_out_total: int = dataclasses.field(metadata=dict(static=True))
+    row_block: int = dataclasses.field(metadata=dict(static=True))
+    fwd_chunk: int = dataclasses.field(metadata=dict(static=True))
+    bwd_chunk: int = dataclasses.field(metadata=dict(static=True))
+    # full unsharded super-arena footprint — the replication baseline the
+    # bench smoke asserts every per-shard footprint strictly beats
+    full_arena_bytes: int = dataclasses.field(metadata=dict(static=True))
+    segments: Tuple[RelationSegment, ...] = dataclasses.field(
+        metadata=dict(static=True))
+    src_types: Tuple[str, ...] = dataclasses.field(
+        metadata=dict(static=True))
+    src_off: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True))
+    src_sizes: Tuple[int, ...] = dataclasses.field(
+        metadata=dict(static=True))
+
+    @property
+    def local_src(self) -> int:
+        """Local source-slab width: owned rows + owner-major halo slots."""
+        return self.src_slab + self.n_shards * self.halo_pad
+
+    def local_fwd(self, d: int) -> FusedELL:
+        """Shard ``d``'s forward arena as a host-side :class:`FusedELL`
+        (round-trip tests, reference simulators)."""
+        return FusedELL(
+            nbr=np.asarray(self.fwd_nbr)[d], w=np.asarray(self.fwd_w)[d],
+            block_of=np.asarray(self.fwd_block_of)[d],
+            start=np.asarray(self.fwd_start)[d],
+            rows=np.asarray(self.fwd_rows)[d],
+            gather=np.asarray(self.fwd_gather)[d],
+            n_dst=self.out_slab, n_src=self.local_src, nnz=-1,
+            row_block=self.row_block, chunk=self.fwd_chunk)
+
+    def local_bwd(self, d: int) -> FusedELL:
+        return FusedELL(
+            nbr=np.asarray(self.bwd_nbr)[d], w=np.asarray(self.bwd_w)[d],
+            block_of=np.asarray(self.bwd_block_of)[d],
+            start=np.asarray(self.bwd_start)[d],
+            rows=np.asarray(self.bwd_rows)[d],
+            gather=np.asarray(self.bwd_gather)[d],
+            n_dst=self.local_src, n_src=self.out_slab, nnz=-1,
+            row_block=self.row_block, chunk=self.bwd_chunk)
+
+    def owned_src_rows(self, d: int) -> int:
+        """Count of REAL (non-padding) source rows shard ``d`` owns."""
+        return max(0, min(self.src_slab, self.n_src_total - d * self.src_slab))
+
+    def shard_bytes(self, d: int) -> int:
+        """Per-device table footprint: owned arena slices + the send table.
+        Identical across shards by construction (stacked uniform shapes)."""
+        return _arena_nbytes(self.local_fwd(d)) \
+            + _arena_nbytes(self.local_bwd(d)) \
+            + np.asarray(self.send_idx)[d].nbytes
+
+    def halo_stats(self) -> dict:
+        hr = np.asarray(self.halo_rows)
+        shards = []
+        for d in range(self.n_shards):
+            owned = self.owned_src_rows(d)
+            halo = int((hr[d] >= 0).sum())
+            shards.append(dict(
+                shard=d, owned_rows=owned, halo_rows=halo,
+                halo_owned_ratio=halo / max(1, owned),
+                arena_bytes=self.shard_bytes(d)))
+        return dict(shards=shards, halo_pad=self.halo_pad,
+                    max_shard_bytes=max(s["arena_bytes"] for s in shards),
+                    total_halo_rows=sum(s["halo_rows"] for s in shards),
+                    full_arena_bytes=self.full_arena_bytes)
+
+
+def _relation_halo_counts(plan: RelationPlan, dst: np.ndarray,
+                          src: np.ndarray, shard_of: np.ndarray,
+                          owner_of: np.ndarray) -> Dict[str, dict]:
+    """Per-relation halo accounting for the ``arena.halo_*`` gauges: a halo
+    "row" is one distinct (reader shard, source row) pair some cross-shard
+    edge of the relation forces into a halo slab; "owned" is the relation's
+    distinct source-row working set (same bytes per row, so the row ratio IS
+    the byte ratio for the feature slabs the exchange moves)."""
+    out = {}
+    for seg in plan.segments:
+        m = (dst >= seg.out_off) & (dst < seg.out_off + seg.n_dst)
+        used = np.unique(src[m])
+        cross = shard_of[m] != owner_of[m]
+        pairs = np.unique(np.stack([shard_of[m][cross], src[m][cross]],
+                                   axis=1), axis=0) if cross.any() else \
+            np.zeros((0, 2), np.int64)
+        out[seg.etype] = dict(halo_rows=int(pairs.shape[0]),
+                              owned_rows=int(used.size))
+    return out
+
+
+def shard_relation_plan(plan: RelationPlan, n_shards: int, *,
+                        registry=None) -> ShardedRelationPlan:
+    """Partition a super-arena plan into per-shard local arenas + halo
+    tables (pure host-side numpy; see module docstring for the layout).
+
+    The partition is by global coordinates, not arena blocks — the fused
+    arenas degree-sort rows, so shard slabs are recovered from the exact
+    edge set via :func:`fused_to_coo` and re-packed locally at the plan's
+    pinned chunk widths.  Emits ``arena.halo_*`` gauges into ``registry``
+    (default: the process registry, DESIGN.md §11).
+    """
+    n = int(n_shards)
+    assert n >= 1, n_shards
+    reg = _METRICS if registry is None else registry
+    fwd = plan.fwd
+    br = fwd.row_block
+    n_out, n_src = fwd.n_dst, fwd.n_src
+    t_slab = _ceil_div(n_out, n)
+    s_slab = _ceil_div(n_src, n)
+
+    dst, src, w = fused_to_coo(fwd)
+    shard_of = dst // t_slab
+    owner_of = src // s_slab
+
+    # per-shard edge sets + per-owner halo request lists (sorted unique)
+    parts, req = [], []
+    for d in range(n):
+        m = shard_of == d
+        sd, ss, sw, own = dst[m] - d * t_slab, src[m], w[m], owner_of[m]
+        req.append([np.unique(ss[(own == s) & (own != d)])
+                    for s in range(n)])
+        parts.append((sd, ss, sw, own))
+    h_pad = max(1, max((r.size for row in req for r in row), default=1))
+    local_src = s_slab + n * h_pad
+
+    # local re-pack: own rows keep [0, S); halo row j of owner s → S + s·H + j
+    fwd_arenas, bwd_arenas = [], []
+    for d in range(n):
+        sd, ss, sw, own = parts[d]
+        loc = ss - d * s_slab
+        for s in range(n):
+            if s == d or req[d][s].size == 0:
+                continue
+            m_s = own == s
+            loc = np.where(m_s, s_slab + s * h_pad
+                           + np.searchsorted(req[d][s], ss), loc)
+        fwd_arenas.append(fuse_bucketed(
+            pack_ell(sd, loc, sw, t_slab, local_src),
+            row_block=br, chunk=fwd.chunk))
+        bwd_arenas.append(fuse_bucketed(
+            pack_ell(loc, sd, sw, local_src, t_slab),
+            row_block=br, chunk=plan.bwd.chunk))
+
+    # pad every shard's arenas to one stacked shape (shard_map uniformity)
+    cf = max(f.n_chunks for f in fwd_arenas)
+    rf = max(f.n_arena_rows for f in fwd_arenas)
+    cb = max(f.n_chunks for f in bwd_arenas)
+    rb = max(f.n_arena_rows for f in bwd_arenas)
+    fwd_arenas = [pad_fused_arena(f, cf, rf) for f in fwd_arenas]
+    bwd_arenas = [pad_fused_arena(f, cb, rb) for f in bwd_arenas]
+
+    send_idx = np.zeros((n, n, h_pad), np.int32)
+    halo_rows = np.full((n, n, h_pad), -1, np.int32)
+    for d in range(n):
+        for s in range(n):
+            r = req[d][s]
+            if r.size:
+                halo_rows[d, s, :r.size] = r
+                send_idx[s, d, :r.size] = r - s * s_slab
+
+    stack = lambda key, fs: np.stack([np.asarray(getattr(f, key))
+                                      for f in fs])
+    splan = ShardedRelationPlan(
+        fwd_nbr=stack("nbr", fwd_arenas), fwd_w=stack("w", fwd_arenas),
+        fwd_block_of=stack("block_of", fwd_arenas),
+        fwd_start=stack("start", fwd_arenas),
+        fwd_rows=stack("rows", fwd_arenas),
+        fwd_gather=stack("gather", fwd_arenas),
+        bwd_nbr=stack("nbr", bwd_arenas), bwd_w=stack("w", bwd_arenas),
+        bwd_block_of=stack("block_of", bwd_arenas),
+        bwd_start=stack("start", bwd_arenas),
+        bwd_rows=stack("rows", bwd_arenas),
+        bwd_gather=stack("gather", bwd_arenas),
+        send_idx=send_idx, halo_rows=halo_rows,
+        n_shards=n, src_slab=s_slab, out_slab=t_slab, halo_pad=h_pad,
+        n_src_total=n_src, n_out_total=n_out, row_block=br,
+        fwd_chunk=fwd.chunk, bwd_chunk=plan.bwd.chunk,
+        full_arena_bytes=_arena_nbytes(fwd) + _arena_nbytes(plan.bwd)
+        + np.asarray(plan.bwd_src_rows).nbytes,
+        segments=plan.segments, src_types=plan.src_types,
+        src_off=plan.src_off, src_sizes=plan.src_sizes)
+
+    # pack-time observability (DESIGN.md §11): halo pressure per shard and
+    # per relation, so layout regressions show up without running a step
+    for st in splan.halo_stats()["shards"]:
+        d = str(st["shard"])
+        reg.set("arena.halo_rows", float(st["halo_rows"]), shard=d)
+        reg.set("arena.halo_owned_byte_ratio",
+                float(st["halo_owned_ratio"]), shard=d)
+        reg.set("arena.shard_bytes", float(st["arena_bytes"]), shard=d)
+    for et, st in _relation_halo_counts(plan, dst, src, shard_of,
+                                        owner_of).items():
+        reg.set("arena.halo_rows", float(st["halo_rows"]), etype=et)
+        reg.set("arena.halo_owned_byte_ratio",
+                float(st["halo_rows"] / max(1, st["owned_rows"])), etype=et)
+    reg.set("arena.halo_pad", float(h_pad), shards=str(n))
+    return splan
+
+
+# ---------------------------------------------------------------------------
+# Host-side reference simulators — numpy re-enactments of the exchange the
+# executor performs with jax.lax.all_to_all, used by the property suite to
+# prove layout correctness without needing a multi-device runtime.
+# ---------------------------------------------------------------------------
+
+def _exchange(splan: ShardedRelationPlan, x_pad: np.ndarray,
+              d: int) -> np.ndarray:
+    """Shard ``d``'s local source slab ``[own | halo]`` under a simulated
+    all-to-all: halo slot (s, j) receives owner s's row ``send_idx[s, d, j]``
+    — exactly the wire order of the executor's collective."""
+    n, s_slab, h = splan.n_shards, splan.src_slab, splan.halo_pad
+    send = np.asarray(splan.send_idx)
+    own = x_pad[d * s_slab:(d + 1) * s_slab]
+    halo = np.concatenate([x_pad[s * s_slab:(s + 1) * s_slab][send[s, d]]
+                           for s in range(n)])
+    return np.concatenate([own, halo])
+
+
+def reference_forward(splan: ShardedRelationPlan, x: np.ndarray) -> np.ndarray:
+    """Dense-operand sharded forward: y = A @ x re-enacted shard by shard
+    (local ``to_dense`` contraction over the exchanged slab).  Matches
+    ``plan.fwd.to_dense() @ x`` exactly when the layout is correct."""
+    n, s_slab, t_slab = splan.n_shards, splan.src_slab, splan.out_slab
+    x = np.asarray(x, np.float32)
+    x_pad = np.concatenate(
+        [x, np.zeros((n * s_slab - x.shape[0],) + x.shape[1:], np.float32)])
+    ys = [np.asarray(splan.local_fwd(d).to_dense(), np.float32)
+          @ _exchange(splan, x_pad, d) for d in range(n)]
+    return np.concatenate(ys)[:splan.n_out_total]
+
+
+def reference_backward(splan: ShardedRelationPlan,
+                       gy: np.ndarray) -> np.ndarray:
+    """Dense-operand sharded backward: dx = Aᵀ @ gy with the reversed halo
+    exchange — each shard's halo dx segment is scattered-ADDED back into the
+    owner shard's rows, the two-coordinate step DESIGN.md §12 describes."""
+    n, s_slab, t_slab, h = (splan.n_shards, splan.src_slab, splan.out_slab,
+                            splan.halo_pad)
+    gy = np.asarray(gy, np.float32)
+    gy_pad = np.concatenate(
+        [gy, np.zeros((n * t_slab - gy.shape[0],) + gy.shape[1:],
+                      np.float32)])
+    send = np.asarray(splan.send_idx)
+    dx = np.zeros((n * s_slab,) + gy.shape[1:], np.float32)
+    for d in range(n):
+        slab = np.asarray(splan.local_bwd(d).to_dense(), np.float32) \
+            @ gy_pad[d * t_slab:(d + 1) * t_slab]
+        dx[d * s_slab:(d + 1) * s_slab] += slab[:s_slab]
+        for s in range(n):            # halo segment travels back to owner s
+            seg = slab[s_slab + s * h: s_slab + (s + 1) * h]
+            np.add.at(dx[s * s_slab:(s + 1) * s_slab], send[s, d], seg)
+    return dx[:splan.n_src_total]

@@ -288,6 +288,28 @@ class DeviceRing:
         return jax.device_put(tree, self.devices[index % len(self.devices)])
 
 
+_SHARD_MESHES: dict = {}
+
+
+def shard_mesh(n_shards: int) -> Mesh:
+    """1-D ``("shard",)`` mesh over the first ``n_shards`` local devices,
+    memoized.  The giant-graph executor (kernels/ops.py::
+    drspmm_multi_sharded) keys its jit cache on plan identity; an
+    identity-stable mesh keeps those cache entries from splitting."""
+    m = _SHARD_MESHES.get(n_shards)
+    if m is None:
+        devs = jax.local_devices()
+        if n_shards > len(devs):
+            raise ValueError(
+                f"shard_mesh({n_shards}) needs {n_shards} devices, "
+                f"{len(devs)} visible — set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={n_shards} "
+                f"before the first jax import for virtual CPU devices")
+        m = Mesh(np.asarray(devs[:n_shards]), ("shard",))
+        _SHARD_MESHES[n_shards] = m
+    return m
+
+
 def shard_map_compat(**kw):
     """Decorator factory over jax.shard_map that also runs on older jax
     releases, where shard_map lives in jax.experimental.shard_map and takes

@@ -48,6 +48,13 @@ class CircuitTrainConfig:
     # so the jitted step runs ONE dispatch per direction-group; collated
     # batches carry plans from the collator.  False pins the serial loop.
     use_plan: bool = True
+    # Giant-graph sharded steps (DESIGN.md §12): > 1 partitions each
+    # graph's plan over that many mesh devices and the jitted step runs the
+    # message passing SPMD with one all-to-all halo exchange per direction
+    # — each device holds only its arena slices.  Needs that many visible
+    # devices; parity with the single-device plan path:
+    # tests/test_sharded_parity.py.
+    n_shards: int = 0
     seed: int = 0
     # graphs per optimizer step: an epoch over a design list is
     # ceil(n/batch_size) collated dispatches instead of n (graphs/collate.py)
@@ -76,7 +83,8 @@ class CircuitTrainer:
         self.mp_cfg = HeteroMPConfig(hidden=cfg.hidden, k_cell=cfg.k_cell,
                                      k_net=cfg.k_net, backend=cfg.backend,
                                      use_drelu=cfg.use_drelu,
-                                     use_plan=cfg.use_plan)
+                                     use_plan=cfg.use_plan,
+                                     n_shards=cfg.n_shards)
         key = jax.random.PRNGKey(cfg.seed)
         self.params = init_drcircuitgnn(key, f_cell, f_net, cfg.hidden,
                                         cfg.n_layers)
@@ -231,8 +239,21 @@ class CircuitTrainer:
         hit = self._plan_cache.get(key)
         if hit is not None and hit[0] is g:
             return hit[1]
-        pg = dataclasses.replace(
-            g, plan=jax.device_put(relation_plan_of(g)))
+        if self.cfg.n_shards > 1:
+            # giant-graph step: the partitioned plan's stacked tables are
+            # device_put PRE-SHARDED over the ("shard",) mesh, so each
+            # device ever holds only its arena slices and the jitted step's
+            # shard_map consumes them without resharding
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.graphs.circuit import sharded_plan_of
+            from repro.sharding.specs import shard_mesh
+            sp = sharded_plan_of(g, self.cfg.n_shards)
+            mesh = shard_mesh(self.cfg.n_shards)
+            pg = dataclasses.replace(g, plan=jax.device_put(
+                sp, NamedSharding(mesh, P("shard"))))
+        else:
+            pg = dataclasses.replace(
+                g, plan=jax.device_put(relation_plan_of(g)))
         self._plan_cache[key] = (g, pg)
         return pg
 

@@ -1,0 +1,45 @@
+"""Shared multi-device subprocess runner for the tier-1 suite.
+
+XLA's device count locks at the FIRST jax import, so any test needing N > 1
+virtual CPU devices must run in a child interpreter with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax loads.
+That boilerplate used to be copy-pasted across test_multidevice.py,
+test_online_serve.py and test_obs_integration.py; every multi-device suite
+now routes through :func:`run_multidev` (the new sharded-parity harness,
+tests/test_sharded_parity.py, included).
+
+The runner returns the completed process so callers can make additional
+assertions on stdout (e.g. parse counters the script prints).
+"""
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def run_multidev(script: str, n_devices: int = 2, argv=(), expect=(),
+                 timeout: float = 1200.0) -> "subprocess.CompletedProcess":
+    """Run ``script`` in a child python with ``n_devices`` virtual devices.
+
+    ``argv`` is forwarded as ``sys.argv[1:]`` (stringified); every marker in
+    ``expect`` must appear in the child's stdout.  Failures surface both
+    stream tails — subprocess assertions are useless without them.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    # replace (not duplicate) any inherited device-count flag; keep the rest
+    flags = [t for t in env.get("XLA_FLAGS", "").split()
+             if not t.startswith(_COUNT_FLAG)]
+    env["XLA_FLAGS"] = " ".join(flags + [f"{_COUNT_FLAG}={n_devices}"])
+    r = subprocess.run([sys.executable, "-c", script,
+                        *[str(a) for a in argv]],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-4000:])
+    for marker in expect:
+        assert marker in r.stdout, (marker, r.stdout[-2000:])
+    return r

@@ -1,17 +1,14 @@
 """Multi-device integration tests — run in a subprocess with 8 virtual
-devices (XLA device count locks at first jax import, so these cannot share
-the main pytest process)."""
-
-import os
-import subprocess
-import sys
+devices via the shared tests/_multidev.py runner (XLA device count locks at
+first jax import, so these cannot share the main pytest process)."""
 
 import pytest
 
+from _multidev import run_multidev
+
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+assert jax.device_count() == 8
 from repro.configs.base import get_config, reduced
 from repro.models.lm.model import build_lm
 from repro.sharding.specs import mesh_context
@@ -76,11 +73,5 @@ print("ELASTIC_OK")
 
 @pytest.mark.slow
 def test_multidevice_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=1200)
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "COMPRESSED_OK" in r.stdout
-    assert "SHARDED_DECODE_OK" in r.stdout
-    assert "ELASTIC_OK" in r.stdout
+    run_multidev(SCRIPT, n_devices=8,
+                 expect=("COMPRESSED_OK", "SHARDED_DECODE_OK", "ELASTIC_OK"))

@@ -11,8 +11,6 @@ trace)."""
 import importlib.util
 import json
 import os
-import subprocess
-import sys
 import threading
 
 import numpy as np
@@ -20,6 +18,7 @@ import pytest
 
 import jax
 
+from _multidev import run_multidev
 from repro.core.hetero_mp import HeteroMPConfig
 from repro.fault.inject import FaultInjector, FaultRule
 from repro.graphs.collate import collate_graphs
@@ -224,8 +223,6 @@ def test_online_deadline_flush_annotated_in_trace():
 # ------------------------------------------- 2-device acceptance (slow)
 
 ACCEPTANCE_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import sys, time, threading
 import jax, numpy as np
 from repro.core.hetero_mp import HeteroMPConfig
@@ -274,14 +271,9 @@ print("ACCEPT_OK", st["retries"], st["bisects"], st["deadline_flushes"],
 
 @pytest.mark.slow
 def test_two_device_chaos_trace_acceptance_subprocess(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     trace_path = str(tmp_path / "accept_trace.json")
-    r = subprocess.run([sys.executable, "-c", ACCEPTANCE_SCRIPT,
-                        trace_path], env=env,
-                       capture_output=True, text=True, timeout=1200)
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "ACCEPT_OK" in r.stdout
+    run_multidev(ACCEPTANCE_SCRIPT, n_devices=2, argv=[trace_path],
+                 expect=("ACCEPT_OK",))
     with open(trace_path) as f:
         doc = json.load(f)
     assert check_trace(

@@ -7,9 +7,6 @@ asserts per-device dispatch counts, the (bucket, device) compile bound, and
 data-parallel training parity.
 """
 
-import os
-import subprocess
-import sys
 import threading
 import time
 
@@ -17,6 +14,7 @@ import jax
 import numpy as np
 import pytest
 
+from _multidev import run_multidev
 from repro.core.hetero_mp import HeteroMPConfig
 from repro.graphs.collate import LayoutTable
 from repro.graphs.generator import generate_partition, pack_graph_parallel
@@ -309,8 +307,6 @@ def test_percentile_moved_and_reexported():
 # ----------------------------------------------------- 2-device routing
 
 MULTIDEV_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
 import threading
 import jax, numpy as np
 from repro.core.hetero_mp import HeteroMPConfig
@@ -369,13 +365,8 @@ print("TRAIN_DP_OK", la, lb, pd)
 
 @pytest.mark.slow
 def test_two_device_serve_and_train_subprocess():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT], env=env,
-                       capture_output=True, text=True, timeout=1200)
-    assert r.returncode == 0, r.stderr[-3000:]
-    assert "SERVE_2DEV_OK" in r.stdout
-    assert "TRAIN_DP_OK" in r.stdout
+    run_multidev(MULTIDEV_SCRIPT, n_devices=2,
+                 expect=("SERVE_2DEV_OK", "TRAIN_DP_OK"))
 
 
 # ------------------------------------------- single-device data parallel

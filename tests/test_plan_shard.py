@@ -1,0 +1,291 @@
+"""Mesh-partitioned RelationPlan properties (DESIGN.md §12).
+
+Host-side guarantees of ``shard_relation_plan`` — no multi-device runtime
+needed (the executor itself is covered by tests/test_sharded_parity.py):
+
+* shard ↔ unshard ROUND-TRIP: the union of every shard's local fwd arena,
+  mapped back through the slab/halo coordinate tables, is exactly the
+  original super-arena's edge set;
+* halo table BIJECTIVITY: owned source slabs partition ``[0, n_src)``; a
+  shard's halo references rows it does not own, each at most once, and
+  ``halo_rows[d, s, j] == s·S + send_idx[s, d, j]`` ties the receive view
+  to the all-to-all send gather slot by slot;
+* PADDING INERTNESS: the numpy reference simulators (exchange + local
+  contraction, forward and reversed-exchange backward) reproduce the dense
+  ``A @ x`` / ``Aᵀ @ gy`` exactly through all arena/halo/slab padding —
+  including collation filler members and a degree-skewed hub row;
+* the ``arena.halo_*`` gauges land in the metrics registry and agree with
+  ``halo_stats()``.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare container: seeded fallback
+    from _hyp_fallback import given, settings, strategies as st
+
+from repro.graphs.circuit import EDGE_SCHEMA, relation_plan_of, \
+    sharded_plan_of, with_sharded_plan
+from repro.graphs.collate import collate_graphs
+from repro.graphs.ell import build_relation_plan, fused_to_coo
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.obs.metrics import MetricsRegistry
+from repro.sharding.plan_shard import (ShardedRelationPlan,
+                                       reference_backward,
+                                       reference_forward,
+                                       shard_relation_plan)
+
+settings.register_profile("fast", max_examples=15, deadline=None)
+settings.load_profile("fast")
+
+
+def _plan(seed, n_cell, n_net, etypes=("near", "pin", "pinned")):
+    """A mixed-degree multi-relation plan over the circuit schema."""
+    rng = np.random.default_rng(seed)
+
+    def mk(n_dst, n_src, nnz):
+        d = rng.integers(0, n_dst, nnz)
+        s = rng.integers(0, n_src, nnz)
+        pairs = np.unique(np.stack([d, s], 1), axis=0)
+        w = rng.normal(size=pairs.shape[0]).astype(np.float32)
+        w[w == 0] = 1.0
+        return pairs[:, 0], pairs[:, 1], w
+
+    sizes = {"cell": n_cell, "net": n_net}
+    nnz_of = {"near": 4 * n_cell, "pin": 2 * n_cell, "pinned": 2 * n_cell}
+    rels = []
+    for et in etypes:
+        s_t, d_t = EDGE_SCHEMA[et]
+        rels.append((et, s_t, d_t,
+                     *mk(sizes[d_t], sizes[s_t], max(nnz_of[et], 1))))
+    return build_relation_plan(rels, {"cell": n_cell, "net": n_net})
+
+
+def _graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+
+def _global_coo_of_shards(sp: ShardedRelationPlan):
+    """Every shard's local arena mapped back to GLOBAL (dst, src, w) via the
+    slab offsets and the halo_rows table — the unshard direction."""
+    hr = np.asarray(sp.halo_rows)
+    dsts, srcs, ws = [], [], []
+    for d in range(sp.n_shards):
+        ld, ls, lw = fused_to_coo(sp.local_fwd(d))
+        own = ls < sp.src_slab
+        slot = np.maximum(ls - sp.src_slab, 0)     # own rows: dummy slot 0
+        s_of, j_of = slot // sp.halo_pad, slot % sp.halo_pad
+        gsrc = np.where(own, ls + d * sp.src_slab, hr[d, s_of, j_of])
+        assert (gsrc >= 0).all(), "edge references a padded halo slot"
+        dsts.append(ld + d * sp.out_slab)
+        srcs.append(gsrc)
+        ws.append(lw)
+    return (np.concatenate(dsts), np.concatenate(srcs),
+            np.concatenate(ws).astype(np.float32))
+
+
+def _sorted(dst, src, w):
+    o = np.lexsort((src, dst))
+    return dst[o], src[o], w[o]
+
+
+cases = st.integers(0, 2 ** 31 - 1).flatmap(lambda seed: st.tuples(
+    st.just(seed), st.integers(9, 40), st.integers(5, 24),
+    st.sampled_from((1, 2, 3, 4, 7))))
+
+
+# -------------------------- round-trip property -------------------------
+
+@given(cases)
+def test_shard_unshard_roundtrip(args):
+    """Union of the shards' local arenas == the super-arena, edge for edge
+    (global coordinates AND weights), at every shard count including the
+    ragged ones that leave trailing shards empty."""
+    seed, n_cell, n_net, n = args
+    plan = _plan(seed, n_cell, n_net)
+    sp = shard_relation_plan(plan, n, registry=MetricsRegistry())
+    got = _sorted(*_global_coo_of_shards(sp))
+    want = _sorted(*fused_to_coo(plan.fwd))
+    np.testing.assert_array_equal(got[0], want[0], err_msg="dst rows")
+    np.testing.assert_array_equal(got[1], want[1], err_msg="src rows")
+    np.testing.assert_allclose(got[2], want[2], atol=1e-6, err_msg="weights")
+
+
+# ------------------------- halo table bijectivity -----------------------
+
+@given(cases)
+def test_halo_tables_bijective(args):
+    """Owned slabs tile the source space; halo slots reference foreign rows
+    at most once each; receive and send tables agree slot by slot."""
+    seed, n_cell, n_net, n = args
+    sp = shard_relation_plan(_plan(seed, n_cell, n_net), n,
+                             registry=MetricsRegistry())
+    hr, send = np.asarray(sp.halo_rows), np.asarray(sp.send_idx)
+
+    # every owned source row lives in exactly one owner slab
+    assert sum(sp.owned_src_rows(d) for d in range(n)) == sp.n_src_total
+    assert sp.src_slab * n >= sp.n_src_total
+
+    for d in range(n):
+        rows = hr[d][hr[d] >= 0]
+        # reference, never duplicate: one halo slot per needed foreign row
+        assert rows.size == np.unique(rows).size, f"shard {d} dup halo"
+        assert (rows < sp.n_src_total).all(), f"shard {d} phantom halo row"
+        lo = d * sp.src_slab
+        owned = (rows >= lo) & (rows < lo + sp.owned_src_rows(d))
+        assert not owned.any(), f"shard {d} halos a row it owns"
+        assert (hr[d, d] == -1).all(), f"shard {d} self-halo"
+        for s in range(n):
+            m = hr[d, s] >= 0
+            # the receive table IS the send gather, owner-side coords
+            np.testing.assert_array_equal(
+                hr[d, s][m], s * sp.src_slab + send[s, d][m],
+                err_msg=f"send/recv mismatch d={d} s={s}")
+            # request lists are sorted-unique (searchsorted precondition)
+            assert (np.diff(hr[d, s][m]) > 0).all()
+            # padded send slots point at owner row 0: in-range, inert
+            assert (send[s, d][~m] == 0).all()
+
+
+# ----------------- padding inertness (reference exchange) ---------------
+
+@given(cases)
+def test_reference_exchange_matches_dense(args):
+    """Simulated all-to-all + local contraction == dense A @ x (forward)
+    and Aᵀ @ gy (reversed-exchange scatter-add backward): every slab, halo
+    and arena padding path is exactly inert."""
+    seed, n_cell, n_net, n = args
+    plan = _plan(seed, n_cell, n_net)
+    sp = shard_relation_plan(plan, n, registry=MetricsRegistry())
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    x = rng.normal(size=(sp.n_src_total, 5)).astype(np.float32)
+    gy = rng.normal(size=(sp.n_out_total, 5)).astype(np.float32)
+    A = np.asarray(plan.fwd.to_dense(), np.float32)
+
+    y = reference_forward(sp, x)
+    dx = reference_backward(sp, gy)
+    tol = dict(atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(y, A @ x, err_msg="sharded fwd", **tol)
+    np.testing.assert_allclose(dx, A.T @ gy, err_msg="sharded bwd", **tol)
+
+
+# --------------------------- edge-case shapes ---------------------------
+
+def test_single_shard_degenerate():
+    """n_shards=1: no halo at all (pad stays at its floor of 1, every slot
+    −1) and the single local arena is the plan itself, edge for edge."""
+    plan = _plan(3, 31, 17)
+    sp = shard_relation_plan(plan, 1, registry=MetricsRegistry())
+    assert sp.halo_pad == 1
+    assert (np.asarray(sp.halo_rows) == -1).all()
+    got = _sorted(*_global_coo_of_shards(sp))
+    want = _sorted(*fused_to_coo(plan.fwd))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-6)
+
+
+def test_single_relation_plan_shards():
+    """A one-relation plan (near only) survives the partition — no other
+    segment's slab to hide layout bugs behind."""
+    plan = _plan(11, 26, 13, etypes=("near",))
+    sp = shard_relation_plan(plan, 3, registry=MetricsRegistry())
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(sp.n_src_total, 4)).astype(np.float32)
+    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    np.testing.assert_allclose(reference_forward(sp, x), A @ x,
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_skewed_hub_row_halos_everywhere():
+    """Degree skew: a hub source row read by every output slab must appear
+    in every non-owner shard's halo EXACTLY once, and the exchange still
+    reproduces the dense product."""
+    n_cell, n_net, n = 24, 12, 4
+    rng = np.random.default_rng(2)
+    dst = np.arange(n_cell, dtype=np.int64)          # hub: cell 0 -> all
+    src = np.zeros(n_cell, np.int64)
+    extra_d = rng.integers(0, n_cell, 30)
+    extra_s = rng.integers(0, n_cell, 30)
+    pairs = np.unique(np.stack([np.concatenate([dst, extra_d]),
+                                np.concatenate([src, extra_s])], 1), axis=0)
+    w = rng.normal(size=pairs.shape[0]).astype(np.float32)
+    w[w == 0] = 1.0
+    plan = build_relation_plan(
+        [("near", "cell", "cell", pairs[:, 0], pairs[:, 1], w)],
+        {"cell": n_cell, "net": n_net})
+    sp = shard_relation_plan(plan, n, registry=MetricsRegistry())
+    hr = np.asarray(sp.halo_rows)
+    for d in range(1, n):                            # shard 0 owns the hub
+        assert int((hr[d] == 0).sum()) == 1, f"shard {d} hub halo count"
+    x = rng.normal(size=(sp.n_src_total, 3)).astype(np.float32)
+    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    np.testing.assert_allclose(reference_forward(sp, x), A @ x,
+                               atol=1e-4, rtol=1e-5)
+
+
+def test_collated_filler_members_shard_cleanly():
+    """A collated batch plan (quantized padding + a filler replica) shards
+    without disturbing the math — collation padding stays inert through the
+    partition, not just through the unsharded plan path."""
+    members = [_graph(60, 30, 0), _graph(37, 20, 2)]
+    batch = collate_graphs(members + [members[-1]], n_real=len(members))
+    plan = batch.graph.plan
+    assert plan is not None
+    sp = shard_relation_plan(plan, 3, registry=MetricsRegistry())
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(sp.n_src_total, 4)).astype(np.float32)
+    gy = rng.normal(size=(sp.n_out_total, 4)).astype(np.float32)
+    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    np.testing.assert_allclose(reference_forward(sp, x), A @ x,
+                               atol=1e-4, rtol=1e-5)
+    np.testing.assert_allclose(reference_backward(sp, gy), A.T @ gy,
+                               atol=1e-4, rtol=1e-5)
+
+
+# ------------------------ graph-level memoization -----------------------
+
+def test_sharded_plan_memoized_and_attachable():
+    g = _graph(48, 24, 7)
+    sp = sharded_plan_of(g, 2)
+    assert sharded_plan_of(g, 2) is sp               # memoized per (g, n)
+    assert sharded_plan_of(g, 3) is not sp           # keyed by shard count
+    pg = with_sharded_plan(g, 2)
+    assert pg.plan is sp
+    assert with_sharded_plan(pg, 2) is pg            # already attached
+    # the unsharded accessor must NOT return the sharded plan
+    assert relation_plan_of(g) is relation_plan_of(g)
+    assert not isinstance(relation_plan_of(pg), ShardedRelationPlan)
+
+
+# ------------------------------ gauges ----------------------------------
+
+def test_halo_gauges_emitted_and_sane():
+    """Pack-time observability: per-shard and per-relation ``arena.halo_*``
+    gauges land in the registry and agree with ``halo_stats()``; per-shard
+    footprint beats full replication on a graph of real size."""
+    reg = MetricsRegistry()
+    plan = _plan(7, 120, 60)
+    sp = shard_relation_plan(plan, 4, registry=reg)
+    stats = sp.halo_stats()
+    for s in stats["shards"]:
+        d = str(s["shard"])
+        assert reg.value("arena.halo_rows", -1.0, shard=d) == s["halo_rows"]
+        assert reg.value("arena.shard_bytes", -1.0,
+                         shard=d) == s["arena_bytes"]
+        ratio = reg.value("arena.halo_owned_byte_ratio", -1.0, shard=d)
+        assert ratio == pytest.approx(s["halo_owned_ratio"]) and ratio >= 0
+    for seg in plan.segments:
+        v = reg.value("arena.halo_rows", -1.0, etype=seg.etype)
+        assert v >= 0, f"missing per-relation gauge for {seg.etype}"
+        r = reg.value("arena.halo_owned_byte_ratio", -1.0, etype=seg.etype)
+        assert r >= 0
+    assert reg.value("arena.halo_pad", -1.0, shards="4") == sp.halo_pad
+    # the reason sharding exists: every device's tables are strictly
+    # smaller than holding the whole super-arena
+    assert stats["max_shard_bytes"] < stats["full_arena_bytes"]
+    assert stats["total_halo_rows"] == int(
+        (np.asarray(sp.halo_rows) >= 0).sum())

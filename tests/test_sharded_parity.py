@@ -1,0 +1,197 @@
+"""Multi-device parity harness for giant-graph sharded execution
+(DESIGN.md §12) — the acceptance test of the mesh-partitioned RelationPlan.
+
+Runs in a subprocess per shard count (XLA's device count locks at first jax
+import; tests/_multidev.py) with 2/4/8 virtual CPU devices and asserts the
+sharded executor — real ``shard_map`` + ``jax.lax.all_to_all`` halo
+exchange — matches the single-device plan path to f32 allclose:
+
+* ``ops.drspmm_multi_sharded`` vs ``ops.drspmm_multi``: forward outputs of
+  ALL edge-type directions of the medium synthetic graph, plus gradients
+  wrt both source types' CBSR values;
+* ``hetero_conv`` with ``HeteroMPConfig(n_shards=n)`` vs the unsharded plan
+  path: forward (both node types) and gradients (inputs + layer params);
+* the skewed-degree (hub source row read by every shard) and
+  single-relation plans — the layouts most likely to break halo exchange;
+* ``CircuitTrainer(n_shards=2)`` vs the single-device trainer: identical
+  per-epoch losses and final parameters (n=2 leg only, runtime bound).
+
+The host-side layout properties behind the same partitioner are covered
+(fast, in-process) by tests/test_plan_shard.py.
+"""
+
+import pytest
+
+from _multidev import run_multidev
+
+SCRIPT = r"""
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+n = int(sys.argv[1])
+assert jax.device_count() == n, (jax.device_count(), n)
+
+from repro.core.cbsr import cbsr_from_dense
+from repro.core.drelu import drelu
+from repro.core.hetero_mp import HeteroMPConfig, hetero_conv, \
+    init_hetero_layer
+from repro.graphs.circuit import relation_plan_of, sharded_plan_of
+from repro.graphs.ell import build_relation_plan
+from repro.graphs.generator import generate_partition, pack_graph_parallel
+from repro.kernels import ops
+from repro.sharding.plan_shard import shard_relation_plan
+
+
+def close(a, r, msg, tol=2e-5):
+    a, r = np.asarray(a), np.asarray(r)
+    atol = tol * max(1.0, float(np.abs(r).max()) if r.size else 1.0)
+    np.testing.assert_allclose(a, r, atol=atol, rtol=tol, err_msg=msg)
+
+
+def graph(n_cell, n_net, seed):
+    coo, xc, xn, y = generate_partition(np.random.default_rng(seed),
+                                        n_cell, n_net)
+    return pack_graph_parallel(coo, n_cell, n_net, xc, xn, y)
+
+
+def sparsify(rng, rows, dim, k):
+    x = jnp.asarray(rng.normal(size=(rows, dim)).astype(np.float32))
+    return cbsr_from_dense(drelu(x, k), k)
+
+
+def op_parity(plan, splan, cbsr, idxs, dim, tag):
+    # drspmm_multi_sharded == drspmm_multi, fwd + grads in every source
+    # type's CBSR values
+    y_ref = ops.drspmm_multi(plan, cbsr, dim, backend="xla_fused")
+    y_sh = ops.drspmm_multi_sharded(splan, cbsr, dim, backend="xla_fused")
+    assert y_ref.keys() == y_sh.keys()
+    for et in y_ref:
+        close(y_sh[et], y_ref[et], f"{tag} fwd {et}")
+
+    types = list(cbsr)
+
+    def loss(op, p):
+        def f(*vals):
+            ys = op(p, {t: (v, idxs[t]) for t, v in zip(types, vals)},
+                    dim, backend="xla_fused")
+            return sum(jnp.sum(jnp.sin(y)) for y in ys.values())
+        return f
+
+    vals = tuple(cbsr[t][0] for t in types)
+    arg = tuple(range(len(types)))
+    g_ref = jax.grad(loss(ops.drspmm_multi, plan), argnums=arg)(*vals)
+    g_sh = jax.grad(loss(ops.drspmm_multi_sharded, splan),
+                    argnums=arg)(*vals)
+    for a, r, t in zip(g_sh, g_ref, types):
+        close(a, r, f"{tag} grad {t}")
+
+
+# ---- all edge-type directions of the medium synthetic graph -----------
+rng = np.random.default_rng(1)
+dim, k = 32, 8
+g = graph(120, 60, 0)
+plan = relation_plan_of(g)
+splan = sharded_plan_of(g, n)
+cc, cn = sparsify(rng, 120, dim, k), sparsify(rng, 60, dim, k)
+cbsr = {"cell": (cc.values, cc.idx), "net": (cn.values, cn.idx)}
+idxs = {"cell": cc.idx, "net": cn.idx}
+op_parity(plan, splan, cbsr, idxs, dim, "medium")
+print("OP_PARITY_OK")
+
+# ---- layer-level parity through HeteroMPConfig(n_shards=n) ------------
+lp = init_hetero_layer(jax.random.PRNGKey(0), dim)
+x_cell = jnp.asarray(rng.normal(size=(120, dim)).astype(np.float32))
+x_net = jnp.asarray(rng.normal(size=(60, dim)).astype(np.float32))
+cfg1 = HeteroMPConfig(hidden=dim, k_cell=k, k_net=k, backend="xla_fused")
+cfgn = dataclasses.replace(cfg1, n_shards=n)
+y1 = hetero_conv(lp, g, x_cell, x_net, cfg1)
+yn = hetero_conv(lp, g, x_cell, x_net, cfgn)
+for a, r, nm in zip(yn, y1, ("cell", "net")):
+    close(a, r, f"layer fwd {nm}")
+
+
+def layer_loss(cfg):
+    def f(p, xc, xn):
+        yc, yn = hetero_conv(p, g, xc, xn, cfg)
+        return jnp.sum(yc ** 2) + jnp.sum(jnp.sin(yn))
+    return f
+
+
+g1 = jax.grad(layer_loss(cfg1), argnums=(0, 1, 2))(lp, x_cell, x_net)
+gn = jax.grad(layer_loss(cfgn), argnums=(0, 1, 2))(lp, x_cell, x_net)
+for (pa, a), (_, r) in zip(jax.tree_util.tree_leaves_with_path(gn),
+                           jax.tree_util.tree_leaves_with_path(g1)):
+    close(a, r, f"layer grad {jax.tree_util.keystr(pa)}")
+print("LAYER_PARITY_OK")
+
+# ---- edge cases: skewed degree (hub) and single-relation plans --------
+n_cell = 96
+erng = np.random.default_rng(2)
+hub_d = np.arange(n_cell, dtype=np.int64)       # hub: cell 0 feeds all
+hub_s = np.zeros(n_cell, np.int64)
+ex_d = erng.integers(0, n_cell, 64)
+ex_s = erng.integers(0, n_cell, 64)
+pairs = np.unique(np.stack([np.concatenate([hub_d, ex_d]),
+                            np.concatenate([hub_s, ex_s])], 1), axis=0)
+w = erng.normal(size=pairs.shape[0]).astype(np.float32)
+w[w == 0] = 1.0
+skew = build_relation_plan(
+    [("near", "cell", "cell", pairs[:, 0], pairs[:, 1], w)],
+    {"cell": n_cell})
+ck = sparsify(erng, n_cell, dim, k)
+op_parity(skew, shard_relation_plan(skew, n),
+          {"cell": (ck.values, ck.idx)}, {"cell": ck.idx}, dim, "skew")
+
+thin_d = erng.integers(0, 40, 120)
+thin_s = erng.integers(0, 64, 120)
+tp = np.unique(np.stack([thin_d, thin_s], 1), axis=0)
+tw = erng.normal(size=tp.shape[0]).astype(np.float32)
+tw[tw == 0] = 1.0
+single = build_relation_plan(
+    [("pinned", "net", "cell", tp[:, 0], tp[:, 1], tw)],
+    {"cell": 40, "net": 64})
+cs = sparsify(erng, 64, dim, k)
+cz = sparsify(erng, 40, dim, k)     # unread source type: zero grads both paths
+op_parity(single, shard_relation_plan(single, n),
+          {"cell": (cz.values, cz.idx), "net": (cs.values, cs.idx)},
+          {"cell": cz.idx, "net": cs.idx}, dim, "single-rel")
+print("EDGE_CASES_OK")
+
+# ---- trainer-step parity (2-device leg only: runtime bound) -----------
+if n == 2:
+    from repro.train.circuit_trainer import CircuitTrainConfig, \
+        CircuitTrainer
+
+    graphs = [graph(80, 40, s) for s in (3, 4)]
+    fc, fn = graphs[0].x_cell.shape[1], graphs[0].x_net.shape[1]
+    runs = {}
+    for shards in (0, 2):
+        tr = CircuitTrainer(CircuitTrainConfig(
+            hidden=32, k_cell=8, k_net=8, backend="xla_fused",
+            n_shards=shards), fc, fn)
+        losses = [tr.train_epoch(graphs) for _ in range(2)]
+        runs[shards] = (losses, tr.params)
+    np.testing.assert_allclose(runs[2][0], runs[0][0],
+                               rtol=1e-5, atol=1e-6, err_msg="epoch losses")
+    d = max(float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(runs[0][1]),
+                            jax.tree.leaves(runs[2][1])))
+    assert d < 5e-6, f"param divergence {d}"
+    print("TRAINER_PARITY_OK")
+
+print("SHARDED_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n", [2, 4, 8])
+def test_sharded_parity_subprocess(n):
+    expect = ["OP_PARITY_OK", "LAYER_PARITY_OK", "EDGE_CASES_OK",
+              "SHARDED_PARITY_OK"]
+    if n == 2:
+        expect.append("TRAINER_PARITY_OK")
+    run_multidev(SCRIPT, n_devices=n, argv=[n], expect=tuple(expect))
