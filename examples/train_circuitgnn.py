@@ -2,7 +2,14 @@
 synthetic Mini-CircuitNet (the paper's Table 2 protocol, CPU scale).
 
     PYTHONPATH=src python examples/train_circuitgnn.py \
-        [--epochs 10] [--scale 0.08] [--dense] [--k 16]
+        [--epochs 10] [--scale 0.08] [--dense] [--k 16] \
+        [--n-layers 15 --remat --wiring residual]
+
+Deep backbones (DESIGN.md §13): ``--n-layers`` sets the stack depth (the
+config's single source of truth), ``--wiring residual|dense`` adds skip
+reuse from the second layer on, ``--remat`` checkpoints each layer so peak
+training memory stops scaling with depth (stats prints the
+``peak_memory_bytes`` / ``recompute_ms`` gauges).
 """
 
 import argparse
@@ -21,6 +28,13 @@ def main():
     ap.add_argument("--dense", action="store_true",
                     help="disable D-ReLU (dense baseline)")
     ap.add_argument("--n-train", type=int, default=4)
+    ap.add_argument("--n-layers", type=int, default=2,
+                    help="backbone depth (CircuitTrainConfig.n_layers)")
+    ap.add_argument("--wiring", choices=("plain", "residual", "dense"),
+                    default="plain", help="inter-layer reuse pattern")
+    ap.add_argument("--remat", action="store_true",
+                    help="checkpoint each layer (constant-ish activation "
+                         "memory in depth; backward recomputes forwards)")
     args = ap.parse_args()
 
     print("generating Mini-CircuitNet (synthetic)...")
@@ -33,17 +47,24 @@ def main():
 
     cfg = CircuitTrainConfig(epochs=args.epochs, hidden=args.hidden,
                              k_cell=args.k, k_net=args.k,
-                             use_drelu=not args.dense)
+                             use_drelu=not args.dense,
+                             n_layers=args.n_layers, wiring=args.wiring,
+                             remat=args.remat)
     tr = CircuitTrainer(cfg, f_cell, f_net)
     t0 = time.perf_counter()
     out = tr.fit(train, eval_graphs=test)
     dt = time.perf_counter() - t0
     m = out["final"]
     mode = "dense" if args.dense else f"D-ReLU k={args.k}"
-    print(f"\n[{mode}] {dt:.1f}s  "
+    depth = f"L={args.n_layers} {args.wiring}" \
+            + (" remat" if args.remat else "")
+    st = tr.stats()
+    print(f"\n[{mode} {depth}] {dt:.1f}s  "
           f"Pearson={m['pearson']:.3f} Spearman={m['spearman']:.3f} "
           f"Kendall={m['kendall']:.3f} MAE={m['mae']:.3f} "
-          f"RMSE={m['rmse']:.3f}")
+          f"RMSE={m['rmse']:.3f}  "
+          f"peak={st['peak_memory_bytes'] / 1e6:.1f}MB "
+          f"recompute={st['recompute_ms']:.1f}ms")
 
 
 if __name__ == "__main__":

@@ -23,8 +23,15 @@ Two execution strategies share the math:
   computed once and shared by every relation consuming that type.
 * **serial path** (the reference, and the fallback for per-bucket/dense
   backends, dense aggregation, or traced graphs without a plan): the
-  per-relation loop of PR 1–4, one ``drspmm``/``spmm`` per edge type.
+  per-relation loop of PR 1–4, one ``drspmm``/``spmm`` per edge type —
+  but the per-type D-ReLU/CBSR is shared across relations here too
+  (``near`` and ``pin`` both consume the cell slab; 2 sparsifications per
+  layer, not 3 — tests/test_backbone.py pins the dispatch count).
   ``HeteroMPConfig(use_plan=False)`` pins it for parity tests.
+
+Stack callers (models/backbone.py) additionally hoist the layer-invariant
+plan resolution once per stack application and pass it via
+``hetero_conv(..., plan=...)``.
 """
 
 from __future__ import annotations
@@ -103,15 +110,32 @@ def _sparsify(x_src: jax.Array, k: int, cfg: HeteroMPConfig):
 
 
 def _aggregate(graph: CircuitGraph, etype: str, x_src: jax.Array,
-               k: int, cfg: HeteroMPConfig) -> jax.Array:
+               c, cfg: HeteroMPConfig) -> jax.Array:
     """A^ψ · D-ReLU(x_src) for one edge type, via DR-SpMM (or dense SpMM) —
-    the serial per-direction reference."""
+    the serial per-direction reference.  ``c`` is the source type's
+    pre-computed CBSR (None pins the dense SpMM path): the caller
+    sparsifies each node type ONCE per layer and shares it across every
+    relation consuming that type, exactly like the plan path — ``near``
+    and ``pin`` both read the cell slab, so re-deriving its D-ReLU/CBSR
+    per relation was pure recompute (and an extra top_k dispatch)."""
     es = graph.edges[etype]
-    if cfg.use_drelu and k < x_src.shape[-1]:
-        c = _sparsify(x_src, k, cfg)
+    if c is not None:
         return ops.drspmm(es.adj, es.adj_t, c.values, c.idx,
                           x_src.shape[-1], backend=cfg.backend)
     return ops.spmm(es.adj, es.adj_t, x_src, backend=cfg.backend)
+
+
+def _sparsify_types(x_cell: jax.Array, x_net: jax.Array,
+                    cfg: HeteroMPConfig):
+    """Per-type CBSR, computed once per layer and shared by every relation
+    consuming the type (None where the type stays dense — k >= width or
+    D-ReLU off).  The single sparsification site for BOTH execution
+    strategies, so they cannot drift."""
+    c_cell = _sparsify(x_cell, cfg.k_cell, cfg) \
+        if cfg.use_drelu and cfg.k_cell < x_cell.shape[-1] else None
+    c_net = _sparsify(x_net, cfg.k_net, cfg) \
+        if cfg.use_drelu and cfg.k_net < x_net.shape[-1] else None
+    return c_cell, c_net
 
 
 def plan_applicable(cfg: HeteroMPConfig, hidden: int) -> bool:
@@ -161,20 +185,33 @@ def _merge(params: HeteroLayerParams, x_cell: jax.Array,
     return y_cell, y_net
 
 
+# sentinel: "resolve the plan yourself" (the back-compat default) vs an
+# explicit plan=None, which pins the serial path
+_RESOLVE_PLAN = object()
+
+
 def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
                 x_cell: jax.Array, x_net: jax.Array,
-                cfg: HeteroMPConfig) -> Tuple[jax.Array, jax.Array]:
+                cfg: HeteroMPConfig, *,
+                plan=_RESOLVE_PLAN) -> Tuple[jax.Array, jax.Array]:
     """One HeteroConv layer.  Returns (y_cell, y_net).
 
     With a :class:`RelationPlan` available (see :func:`_plan_for`) the
     layer's entire message passing is ONE ``drspmm_multi`` dispatch per
-    direction-group; each node type is sparsified once and shared by every
-    relation consuming it (the serial path re-derives the same CBSR per
-    relation — identical values, so the paths agree exactly)."""
-    plan = _plan_for(graph, cfg, x_cell.shape[-1])
+    direction-group.  Both strategies sparsify each node type once per
+    layer and share the CBSR across the relations consuming it
+    (:func:`_sparsify_types` — identical values, so the paths agree
+    exactly).
+
+    ``plan`` lets a stack caller (models/backbone.py) hoist the
+    layer-invariant plan resolution once per stack application and thread
+    it remat-safely through every layer: pass the resolved plan (or
+    ``None`` to pin the serial reference); the default sentinel keeps the
+    per-call resolution for standalone use."""
+    if plan is _RESOLVE_PLAN:
+        plan = _plan_for(graph, cfg, x_cell.shape[-1])
     if plan is not None:
-        c_cell = _sparsify(x_cell, cfg.k_cell, cfg)
-        c_net = _sparsify(x_net, cfg.k_net, cfg)
+        c_cell, c_net = _sparsify_types(x_cell, x_net, cfg)
         op = ops.drspmm_multi_sharded \
             if isinstance(plan, ShardedRelationPlan) else ops.drspmm_multi
         aggs = op(
@@ -184,8 +221,10 @@ def hetero_conv(params: HeteroLayerParams, graph: CircuitGraph,
         return _merge(params, x_cell, aggs["near"], aggs["pinned"],
                       aggs["pin"])
 
-    # --- serial reference: three independent edge-type message passings ---
-    agg_near = _aggregate(graph, "near", x_cell, cfg.k_cell, cfg)      # cell->cell
-    agg_pinned = _aggregate(graph, "pinned", x_net, cfg.k_net, cfg)    # net->cell
-    agg_pin = _aggregate(graph, "pin", x_cell, cfg.k_cell, cfg)        # cell->net
+    # --- serial reference: three edge-type message passings over the two
+    # --- shared per-type CBSRs (cell feeds both near and pin) -------------
+    c_cell, c_net = _sparsify_types(x_cell, x_net, cfg)
+    agg_near = _aggregate(graph, "near", x_cell, c_cell, cfg)    # cell->cell
+    agg_pinned = _aggregate(graph, "pinned", x_net, c_net, cfg)  # net->cell
+    agg_pin = _aggregate(graph, "pin", x_cell, c_cell, cfg)      # cell->net
     return _merge(params, x_cell, agg_near, agg_pinned, agg_pin)

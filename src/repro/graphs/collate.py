@@ -259,7 +259,13 @@ def graph_signature(graph: CircuitGraph) -> tuple:
     """Hashable padded-shape signature: the pytree structure (which carries
     the static fields) plus every leaf's shape/dtype.  Two graphs with equal
     signatures hit the same jit-compiled executable when passed as traced
-    arguments — this is exactly jit's cache key restricted to shapes."""
+    arguments — this is exactly jit's cache key restricted to shapes.
+
+    Signatures are a property of the DATA alone: model depth, wiring, and
+    remat (the BackboneSpec, DESIGN.md §13) never enter — a 2-layer and a
+    15-layer backbone bucket identically, and flipping remat on a trainer
+    or serve engine cannot invalidate collated layouts or batches
+    (tests/test_backbone.py pins the independence)."""
     leaves, treedef = jax.tree_util.tree_flatten(graph)
     return (treedef,
             tuple((tuple(l.shape), np.dtype(l.dtype).name) for l in leaves))

@@ -726,10 +726,66 @@ def _build_multi(plan: RelationPlan, dim: int, backend: Backend,
     return f
 
 
+def _zero_plan_cotangent(plan):
+    """Symbolic-zero cotangent pytree for a plan passed as a custom-vjp
+    primal: float0 for the integer tables, dense zeros for the float w
+    arenas (custom_vjp requires real-dtype cotangents for float leaves)."""
+    def z(x):
+        if jnp.issubdtype(jnp.result_type(x), jnp.floating):
+            return jnp.zeros_like(x)
+        return np.zeros(np.shape(x), jax.dtypes.float0)
+    return jax.tree.map(z, plan)
+
+
+def _multi_traced(plan: RelationPlan, vals, idxs, dim: int, backend: Backend):
+    """Traced-plan execution (collated serve batches / plan-attached trainer
+    graphs, where the graph — plan included — is a jit argument).
+
+    The plan rides through the custom_vjp as an explicit PRIMAL argument
+    instead of a closure constant.  This is what makes the executor safe
+    under layer-granular remat (``jax.checkpoint`` at the ``hetero_conv``
+    boundary, models/backbone.py): the closure form would capture
+    checkpoint-scope tracers inside ``f_bwd``, which are stale by the time
+    the outer backward invokes it (UnexpectedTracerError).  As a primal the
+    plan is a *saved residual* of the checkpointed layer: stored ONCE by
+    reference (it is already a jit argument, so every layer's residual
+    aliases the same buffers), never rematerialized in the backward, and
+    never re-``device_put`` on recompute.  Cotangents for the plan leaves
+    are symbolic zeros — the fixed-weight arenas carry no gradient."""
+
+    @jax.custom_vjp
+    def f(plan, vals, idxs):
+        xv, xi, _ = _multi_concat(plan, vals, idxs)
+        y_cat = _multi_fwd_impl(plan, xv, xi, dim, backend)
+        return _split_out(plan, y_cat)
+
+    def f_fwd(plan, vals, idxs):
+        # residuals: the plan (aliased jit args, see above) + xi
+        return f(plan, vals, idxs), (plan, idxs)
+
+    def f_bwd(res, gys):
+        plan, idxs = res
+        gy_cat = jnp.concatenate(list(gys))
+        _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
+                                        for i in idxs], idxs)
+        dx_cat = _multi_bwd_impl(plan, gy_cat, xi, backend)
+        return (_zero_plan_cotangent(plan),
+                _dx_cat_to_types(plan, dx_cat, idxs),
+                tuple(np.zeros(np.shape(i), jax.dtypes.float0)
+                      for i in idxs))
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(plan, vals, idxs)
+
+
 # Same memoization discipline as the learnable executor (§8.3): the
 # custom-vjp wrapper + jit is built ONCE per (plan identity, dim, backend)
 # in a strong-ref LRU (the jitted closure pins the plan anyway), with a
-# trace probe asserting repeat calls never retrace.
+# trace probe asserting repeat calls never retrace.  Remat interaction:
+# ``jax.checkpoint`` traces its body, so a checkpointed layer always sees
+# TRACED plan leaves and routes through ``_multi_traced`` — the LRU is only
+# ever touched by non-checkpointed concrete-plan calls, so recompute cannot
+# thrash it (guarded by tests/test_backbone.py::test_remat_no_retrace).
 _MULTI_EXE: "OrderedDict[tuple, tuple]" = OrderedDict()
 _MULTI_EXE_MAX = 64
 _MULTI_TRACES: list = []
@@ -767,15 +823,22 @@ def drspmm_multi(plan: RelationPlan, cbsr, dim: int, *,
     autograd-free oracle with the Alg.-2 sampled backward.  A concrete plan
     routes through the id-keyed LRU executor cache
     (no retrace on repeat calls); a TRACED plan — e.g. a collated serve
-    batch whose graph is a jit argument — is executed inline and cached by
-    the outer jit.  Parity across all five names:
-    tests/test_relation_plan.py.
+    batch whose graph is a jit argument, or any plan seen inside a
+    ``jax.checkpoint`` body — is executed inline with the plan threaded as
+    a custom-vjp primal (``_multi_traced``: remat-safe, plan saved once as
+    an aliased residual) and cached by the outer jit.  Parity across all
+    five names: tests/test_relation_plan.py.
     """
     eff = _multi_effective_backend(backend)
     vals = tuple(cbsr[t][0] for t in plan.src_types)
     idxs = tuple(cbsr[t][1] for t in plan.src_types)
     if isinstance(plan.fwd.nbr, jax.core.Tracer):
-        ys = _build_multi(plan, dim, eff)(vals, idxs)
+        if eff == "dense":
+            # the dense oracle's sampled backward needs host-side segment
+            # arithmetic (_dx_row_map) — concrete plans only, as before
+            ys = _build_multi(plan, dim, eff)(vals, idxs)
+        else:
+            ys = _multi_traced(plan, vals, idxs, dim, eff)
     else:
         ys = _multi_executable(plan, dim, eff)(vals, idxs)
     return {s.etype: y for s, y in zip(plan.segments, ys)}

@@ -1,7 +1,7 @@
 """DR-CircuitGNN model (paper Fig. 1) + homogeneous GNN baselines.
 
-DR-CircuitGNN: per-type input Linear → 2 × HeteroConv → per-cell Linear head
-(congestion regression).  Baselines: 3-layer GCN / GraphSAGE / GAT on the
+DR-CircuitGNN: per-type input Linear → N × HeteroConv → per-cell Linear head
+(congestion regression).  Baselines: GCN / GraphSAGE / GAT stacks on the
 homogenized graph (all edges merged, single node space), matching the paper's
 Table 2 comparison protocol.
 
@@ -9,13 +9,18 @@ Each HeteroConv layer dispatches its whole message passing through the
 graph's :class:`~repro.graphs.ell.RelationPlan` when one is available
 (``ops.drspmm_multi`` — one kernel per direction-group, DESIGN.md §9); the
 per-direction serial loop remains the reference (core/hetero_mp.py).
-"""
+
+Both stacks run through the deep-backbone executor (models/backbone.py,
+DESIGN.md §13): every forward takes an optional :class:`BackboneSpec`
+selecting wiring (plain/residual/dense) and layer-granular remat; the
+entry points here stay thin wrappers with exact init/numeric parity to the
+pre-backbone hardcoded loops (the default spec IS the old behavior)."""
 
 from __future__ import annotations
 
 import dataclasses
 import weakref
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax
@@ -23,10 +28,13 @@ import jax.numpy as jnp
 
 from repro.core.drelu import drelu
 from repro.core.hetero_mp import (HeteroLayerParams, HeteroMPConfig,
-                                  hetero_conv, init_hetero_layer)
+                                  _plan_for, hetero_conv, init_hetero_layer)
 from repro.graphs.circuit import CircuitGraph
 from repro.graphs.ell import BucketedELL, ell_to_coo, pack_fused_eid_pair
 from repro.kernels import ops
+from repro.models.backbone import (BackboneSpec, apply_stack, init_stack,
+                                   spec_for)
+from repro.sharding.plan_shard import ShardedRelationPlan
 
 
 # ---------------------------------------------------------------------------
@@ -43,48 +51,75 @@ class DRCircuitGNNParams(NamedTuple):
 
 def init_drcircuitgnn(key, f_cell: int, f_net: int, hidden: int,
                       n_layers: int = 2) -> DRCircuitGNNParams:
-    ks = jax.random.split(key, n_layers + 3)
+    (k_ic, k_in), layers, (k_head,) = init_stack(
+        key, n_layers, lambda k, _i: init_hetero_layer(k, hidden),
+        n_pre=2, n_post=1)
     s_c, s_n = 1.0 / jnp.sqrt(f_cell), 1.0 / jnp.sqrt(f_net)
     return DRCircuitGNNParams(
-        in_cell=jax.random.uniform(ks[0], (f_cell, hidden), jnp.float32, -s_c, s_c),
-        in_net=jax.random.uniform(ks[1], (f_net, hidden), jnp.float32, -s_n, s_n),
-        layers=tuple(init_hetero_layer(ks[2 + i], hidden)
-                     for i in range(n_layers)),
-        head_w=jax.random.uniform(ks[-1], (hidden, 1), jnp.float32,
+        in_cell=jax.random.uniform(k_ic, (f_cell, hidden), jnp.float32, -s_c, s_c),
+        in_net=jax.random.uniform(k_in, (f_net, hidden), jnp.float32, -s_n, s_n),
+        layers=layers,
+        head_w=jax.random.uniform(k_head, (hidden, 1), jnp.float32,
                                   -1.0 / jnp.sqrt(hidden), 1.0 / jnp.sqrt(hidden)),
         head_b=jnp.zeros((1,)))
 
 
-def drcircuitgnn_forward(params: DRCircuitGNNParams, graph: CircuitGraph,
-                         cfg: HeteroMPConfig) -> jax.Array:
-    """Per-cell congestion prediction in [0, 1]."""
-    h_cell = graph.x_cell @ params.in_cell
-    h_net = graph.x_net @ params.in_net
-    for lp in params.layers:
-        h_cell, h_net = hetero_conv(lp, graph, h_cell, h_net, cfg)
+def _hetero_body(cfg: HeteroMPConfig):
+    """One checkpointable backbone layer: hetero_conv + the inter-layer
+    activation.  ``const`` threads the layer-invariant (graph, plan) pair
+    resolved ONCE per stack application — under remat they are saved input
+    residuals, not recomputed (models/backbone.py)."""
+    def body(lp, state, const):
+        graph, plan = const
+        h_cell, h_net = hetero_conv(lp, graph, *state, cfg, plan=plan)
         # inter-layer nonlinearity IS D-ReLU (dense form) — the sparsifier
         # doubles as the activation, per the paper's framing.
         if cfg.use_drelu:
-            h_cell = drelu(h_cell, cfg.k_cell)
-            h_net = drelu(h_net, cfg.k_net)
-        else:
-            h_cell, h_net = jax.nn.relu(h_cell), jax.nn.relu(h_net)
+            return drelu(h_cell, cfg.k_cell), drelu(h_net, cfg.k_net)
+        return jax.nn.relu(h_cell), jax.nn.relu(h_net)
+    return body
+
+
+def drcircuitgnn_forward(params: DRCircuitGNNParams, graph: CircuitGraph,
+                         cfg: HeteroMPConfig,
+                         spec: Optional[BackboneSpec] = None) -> jax.Array:
+    """Per-cell congestion prediction in [0, 1].
+
+    ``spec`` selects the backbone wiring/remat (DESIGN.md §13); the
+    default — plain wiring, no remat, depth from ``params`` — reproduces
+    the pre-backbone loop bit-for-bit."""
+    if spec is None:
+        spec = spec_for(params.layers, params.head_w.shape[0])
+    h_cell = graph.x_cell @ params.in_cell
+    h_net = graph.x_net @ params.in_net
+    # layer-invariant hoist: ONE plan resolution per stack application
+    plan = _plan_for(graph, cfg, h_cell.shape[-1])
+    if spec.remat and isinstance(plan, ShardedRelationPlan):
+        # The mesh-sharded executor (DESIGN.md §12) needs its plan
+        # pre-placed with a NamedSharding, which a checkpoint-traced primal
+        # cannot express — so the sharded path draws no checkpoint boundary
+        # (remat composes with data-parallel replicas, not with §12 yet).
+        spec = dataclasses.replace(spec, remat=False)
+    h_cell, h_net = apply_stack(params.layers, (h_cell, h_net),
+                                _hetero_body(cfg), spec, (graph, plan))
     pred = jax.nn.sigmoid(h_cell @ params.head_w + params.head_b)
     return pred[:, 0]
 
 
-def loss_fn(params, graph, cfg) -> jax.Array:
-    pred = drcircuitgnn_forward(params, graph, cfg)
+def loss_fn(params, graph, cfg,
+            spec: Optional[BackboneSpec] = None) -> jax.Array:
+    pred = drcircuitgnn_forward(params, graph, cfg, spec)
     return jnp.mean((pred - graph.y_cell) ** 2)
 
 
-def batched_loss_fn(params, graph, cell_weight, cfg) -> jax.Array:
+def batched_loss_fn(params, graph, cell_weight, cfg,
+                    spec: Optional[BackboneSpec] = None) -> jax.Array:
     """Loss over a block-diagonal collated batch (graphs/collate.py).
 
     ``cell_weight`` is 1/(n_members·n_cell_i) on member i's cells and 0 on
     padding, so this equals the mean of the members' per-graph ``loss_fn``
     values — batched gradients match the per-graph loop exactly."""
-    pred = drcircuitgnn_forward(params, graph, cfg)
+    pred = drcircuitgnn_forward(params, graph, cfg, spec)
     return jnp.sum(cell_weight * (pred - graph.y_cell) ** 2)
 
 
@@ -142,33 +177,34 @@ def init_homo(key, f_in: int, hidden: int, n_layers: int = 3,
     vector (nnz,) — pass ``nnz`` (e.g. ``adj.nnz`` of the homogenized
     graph).  Zero-initialized logits start at uniform attention, which
     coincides with the mean aggregation the other baselines use."""
-    ks = jax.random.split(key, n_layers + 2)
     s = 1.0 / jnp.sqrt(hidden)
-    layers = []
-    for i in range(n_layers):
+
+    def layer_init(k, _i):
         if kind == "sage":
-            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
-                                              jnp.float32, -s, s),
-                           jax.random.uniform(jax.random.fold_in(ks[i], 1),
-                                              (hidden, hidden), jnp.float32, -s, s)))
-        elif kind == "gat":
-            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
-                                              jnp.float32, -s, s),
-                           jax.random.uniform(jax.random.fold_in(ks[i], 1),
-                                              (2 * hidden,), jnp.float32, -s, s)))
-        elif kind == "gat_edge":
+            return (jax.random.uniform(k, (hidden, hidden),
+                                       jnp.float32, -s, s),
+                    jax.random.uniform(jax.random.fold_in(k, 1),
+                                       (hidden, hidden), jnp.float32, -s, s))
+        if kind == "gat":
+            return (jax.random.uniform(k, (hidden, hidden),
+                                       jnp.float32, -s, s),
+                    jax.random.uniform(jax.random.fold_in(k, 1),
+                                       (2 * hidden,), jnp.float32, -s, s))
+        if kind == "gat_edge":
             assert nnz > 0, "gat_edge needs the homogenized edge count (nnz)"
-            layers.append((jax.random.uniform(ks[i], (hidden, hidden),
-                                              jnp.float32, -s, s),
-                           jnp.zeros((nnz,), jnp.float32)))
-        else:  # gcn
-            layers.append(jax.random.uniform(ks[i], (hidden, hidden),
-                                             jnp.float32, -s, s))
+            return (jax.random.uniform(k, (hidden, hidden),
+                                       jnp.float32, -s, s),
+                    jnp.zeros((nnz,), jnp.float32))
+        return jax.random.uniform(k, (hidden, hidden),  # gcn
+                                  jnp.float32, -s, s)
+
+    _, layers, (k_in, k_head) = init_stack(key, n_layers, layer_init,
+                                           n_pre=0, n_post=2)
     si = 1.0 / jnp.sqrt(f_in)
     return HomoParams(
-        w_in=jax.random.uniform(ks[-2], (f_in, hidden), jnp.float32, -si, si),
-        w_layers=tuple(layers),
-        head_w=jax.random.uniform(ks[-1], (hidden, 1), jnp.float32, -s, s),
+        w_in=jax.random.uniform(k_in, (f_in, hidden), jnp.float32, -si, si),
+        w_layers=layers,
+        head_w=jax.random.uniform(k_head, (hidden, 1), jnp.float32, -s, s),
         head_b=jnp.zeros((1,)))
 
 
@@ -206,11 +242,12 @@ def learnable_edge_packing(adj: BucketedELL):
     return pack
 
 
-def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
-                 kind: str = "gcn",
-                 backend: ops.Backend = ops.DEFAULT_BACKEND) -> jax.Array:
-    h = x @ params.w_in
-    for lw in params.w_layers:
+def _homo_body(kind: str, adj, adj_t, backend: ops.Backend):
+    """One homogeneous backbone layer (relu included).  ``adj``/``adj_t``
+    are closed over — the homo baselines run on concrete (host-packed)
+    graphs, and the gat/gat_edge kinds need the host-side
+    :func:`learnable_edge_packing` anyway."""
+    def body(lw, h, _const):
         if kind == "sage":
             w_nbr, w_self = lw
             agg = ops.spmm(adj, adj_t, h, backend=backend)
@@ -282,5 +319,18 @@ def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
         else:
             agg = ops.spmm(adj, adj_t, h, backend=backend)
             h = jax.nn.relu(agg @ lw)
+        return h
+    return body
+
+
+def homo_forward(params: HomoParams, adj, adj_t, x, n_cell: int,
+                 kind: str = "gcn",
+                 backend: ops.Backend = ops.DEFAULT_BACKEND,
+                 spec: Optional[BackboneSpec] = None) -> jax.Array:
+    if spec is None:
+        spec = spec_for(params.w_layers, params.head_w.shape[0])
+    h = x @ params.w_in
+    h = apply_stack(params.w_layers, h, _homo_body(kind, adj, adj_t, backend),
+                    spec, None)
     pred = jax.nn.sigmoid(h @ params.head_w + params.head_b)
     return pred[:n_cell, 0]

@@ -42,6 +42,17 @@ block-diagonal collation (graphs/collate.py) instead:
   replicas between batches (in-flight batches finish on the old weights);
   every request records the ``params_version`` that served it — the
   train-then-serve loop without a restart or a recompile;
+* **multi-tenant head registry** — ``register_head(name, head_w, head_b)``
+  installs named per-task output heads sharing the ONE backbone:
+  ``submit(graph, head="congestion_v2")`` selects a head per request.  The
+  bucket's jitted forward takes the head weights as *traced arguments*
+  (same shapes for every head), so N heads share each bucket's single
+  compiled executable — head registration and selection cost ZERO extra
+  compiles (tests/test_backbone.py pins it).  Batches group by
+  (shape bucket, head) — a batch is head-homogeneous — while layouts,
+  compile caches, and the ``compiles`` counter stay keyed by shape bucket
+  alone.  ``head=None`` (default) serves the committed params' own head,
+  so ``update_params()`` interacts unchanged;
 * **self-healing containment ladder** (DESIGN.md §10) — a failed batch is
   retried with exponential backoff on a freshly-routed device
   (``max_retries``); a batch that keeps failing is *bisected* so only the
@@ -108,6 +119,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.core.hetero_mp import HeteroMPConfig
 from repro.core.parallel import prefetch
@@ -115,6 +127,7 @@ from repro.fault.inject import FaultInjector, InjectedFault
 from repro.graphs.circuit import CircuitGraph
 from repro.graphs.collate import (ARENA_GRID_BITS, LayoutTable,
                                   collate_graphs, quantize_up)
+from repro.models.backbone import BackboneSpec
 from repro.models.hgnn import drcircuitgnn_forward
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import NULL_RECORDER, NULL_SPAN, Recorder
@@ -155,6 +168,11 @@ class CircuitRequest:
     t_done: float = 0.0
     pred: Optional[np.ndarray] = None     # (n_cell,) congestion in [0, 1]
     key: Optional[tuple] = None           # shape bucket, stamped by submit()
+    # which registered head serves this request; None = the committed
+    # params' own head.  Batching is head-homogeneous (the grouping key is
+    # (key, head)) but compilation is not: every head shares the bucket's
+    # one executable.
+    head: Optional[str] = None
     error: Optional[BaseException] = None  # set when the batch failed
     # which params generation served this request (update_params bumps it);
     # stamped at dispatch, so callers can tell pre- from post-swap results
@@ -209,6 +227,7 @@ class CircuitServeEngine:
     SERVE_NODE_BITS = 1
 
     def __init__(self, params, mp_cfg: HeteroMPConfig, *,
+                 spec: Optional[BackboneSpec] = None,
                  max_batch: int = 8,
                  n_pack_threads: int = 3,
                  node_bits: int = SERVE_NODE_BITS,
@@ -235,6 +254,9 @@ class CircuitServeEngine:
         if admission not in ("block", "reject", "shed_oldest"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.mp_cfg = mp_cfg
+        # backbone spec (wiring/remat/depth — DESIGN.md §13); None keeps
+        # the vanilla plain stack derived from the params themselves
+        self.spec = spec
         self.b = max_batch
         self.n_pack_threads = n_pack_threads
         self.node_bits = node_bits
@@ -263,6 +285,9 @@ class CircuitServeEngine:
         self._params_of = tuple(jax.device_put(params, d)
                                 for d in self.ring.devices)
         self._params_version = 0
+        # head registry: name -> per-ring-slot (head_w, head_b) replicas,
+        # committed like _params_of so a dispatch just indexes its slot
+        self._heads: Dict[str, tuple] = {}
         self.queue: Deque[CircuitRequest] = deque()
         self.finished: Dict[int, CircuitRequest] = {}
         self._rid = itertools.count()
@@ -308,15 +333,27 @@ class CircuitServeEngine:
         self._healing = 0           # containment-ladder batches in flight
 
     def _make_fwd(self):
-        cfg = self.mp_cfg
-        return jax.jit(lambda p, g: drcircuitgnn_forward(p, g, cfg))
+        """The bucket's jitted forward.  The head weights ride as TRACED
+        arguments (not baked into the closure): every registered head has
+        the shapes of ``params.head_w``/``head_b``, so selecting a head
+        changes only argument *values* — the (signature, device) executable
+        is shared by all heads and by the default, and head selection can
+        never trigger a compile."""
+        cfg, spec = self.mp_cfg, self.spec
+        return jax.jit(lambda p, hw, hb, g: drcircuitgnn_forward(
+            p._replace(head_w=hw, head_b=hb), g, cfg, spec))
 
     # ------------------------------------------------------------- intake
 
     def submit(self, graph: CircuitGraph,
-               timeout: Optional[float] = None) -> int:
+               timeout: Optional[float] = None, *,
+               head: Optional[str] = None) -> int:
         """Enqueue one request; thread-safe, legal while serve_forever()
         runs (the serving loop is woken immediately).
+
+        ``head`` selects a registered per-task output head by name
+        (:meth:`register_head`); ``None`` serves the committed params' own
+        head.  An unregistered name raises ``KeyError`` here, at the door.
 
         With ``max_queue`` set, admission is policy-dependent when the
         queue is full: ``"block"`` waits for capacity (up to ``timeout``,
@@ -326,6 +363,9 @@ class CircuitServeEngine:
         :class:`LoadShedError`) and admits the newcomer.  With
         ``validate_inputs`` (default), NaN/Inf-feature graphs raise
         :class:`NonFiniteInputError` here instead of poisoning a batch."""
+        if head is not None and head not in self._heads:
+            raise KeyError(f"unknown head {head!r}; registered heads: "
+                           f"{sorted(self._heads)}")
         if self.validate_inputs:
             self._validate(graph)
         rid = next(self._rid)
@@ -333,7 +373,7 @@ class CircuitServeEngine:
         # recompute it under the engine lock on every wake
         req = CircuitRequest(rid=rid, graph=graph,
                              t_submit=time.perf_counter(),
-                             key=self._group_key(graph))
+                             key=self._group_key(graph), head=head)
         deadline = None if timeout is None else time.perf_counter() + timeout
         with self._work:
             if self.max_queue is not None and \
@@ -431,6 +471,9 @@ class CircuitServeEngine:
                         ) -> Optional[List[CircuitRequest]]:
         """Deadline-aware micro-batcher (caller holds the lock).
 
+        Requests group by (shape bucket, head) — a batch is always
+        head-homogeneous, so its one dispatch reads one head's weights —
+        while layouts and compile caches stay keyed by shape bucket alone.
         Buckets form in FIFO order of first appearance; the first bucket
         with ``max_batch`` compatible requests dispatches full.  With none
         full, the head bucket dispatches partial once its oldest request
@@ -443,7 +486,7 @@ class CircuitServeEngine:
         groups: Dict[tuple, List[CircuitRequest]] = {}
         order: List[tuple] = []
         for r in self.queue:
-            k = r.key
+            k = (r.key, r.head)
             g = groups.get(k)
             if g is None:
                 groups[k] = g = []
@@ -568,9 +611,14 @@ class CircuitServeEngine:
             self._disp[dev_idx].inc()
             # snapshot replicas + version under the lock so a concurrent
             # update_params() can't hand this batch replica A and stamp it
-            # version B
+            # version B.  The head replica snapshots under the SAME lock:
+            # batches are head-homogeneous (the batcher groups by
+            # (key, head)), so reqs[0] speaks for the batch.
             params_d = self._params_of[dev_idx]
             version = self._params_version
+            head = reqs[0].head
+            hw, hb = (params_d.head_w, params_d.head_b) if head is None \
+                else self._heads[head][dev_idx]
         if compile_new:
             self.metrics.inc("serve.compiles")
             if rec.enabled:
@@ -578,7 +626,7 @@ class CircuitServeEngine:
         try:
             if self.chaos is not None:
                 self.chaos.raise_if("dispatch", device=dev_idx)
-            out = fwd(params_d, graph)                # async dispatch
+            out = fwd(params_d, hw, hb, graph)        # async dispatch
         except Exception:
             self.ring.record_failure(dev_idx)
             raise
@@ -1017,7 +1065,9 @@ class CircuitServeEngine:
         request records the version that served it
         (``result(rid).params_version``).  Params must keep their pytree
         shapes — the per-bucket jits re-run the existing executables, so a
-        swap costs zero recompiles."""
+        swap costs zero recompiles.  Registered heads (:meth:`register_head`)
+        are independent replicas and survive the swap unchanged; only the
+        default ``head=None`` path follows the new params' own head."""
         replicas = tuple(jax.device_put(params, d)
                          for d in self.ring.devices)
         with self._lock:
@@ -1029,6 +1079,38 @@ class CircuitServeEngine:
     @property
     def params_version(self) -> int:
         return self._params_version
+
+    # ------------------------------------------------- multi-tenant heads
+
+    def register_head(self, name: str, head_w, head_b=None) -> None:
+        """Install (or replace) a named per-task output head sharing the
+        engine's one backbone.  ``head_w``/``head_b`` must match the
+        committed params' head shapes — that is what guarantees selection
+        is argument-only and costs zero compiles (a different shape would
+        be a different model, not a head).  ``head_b=None`` uses a zero
+        bias.  Replicas are committed per ring slot exactly like
+        ``update_params`` replicas; re-registering a name hot-swaps that
+        head between batches.  Requests then opt in per call:
+        ``submit(graph, head=name)``."""
+        ref_w, ref_b = self.params.head_w, self.params.head_b
+        head_w = jnp.asarray(head_w, ref_w.dtype)
+        head_b = jnp.zeros_like(ref_b) if head_b is None \
+            else jnp.asarray(head_b, ref_b.dtype)
+        if head_w.shape != ref_w.shape or head_b.shape != ref_b.shape:
+            raise ValueError(
+                f"head {name!r} shapes {head_w.shape}/{head_b.shape} do "
+                f"not match the backbone's head {ref_w.shape}/{ref_b.shape}"
+                f"; a registered head swaps argument values only")
+        replicas = tuple(
+            (jax.device_put(head_w, d), jax.device_put(head_b, d))
+            for d in self.ring.devices)
+        with self._lock:
+            self._heads[name] = replicas
+
+    @property
+    def heads(self) -> tuple:
+        """Registered head names, sorted."""
+        return tuple(sorted(self._heads))
 
     # ------------------------------------------------------------- stats
 

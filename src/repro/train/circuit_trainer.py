@@ -21,6 +21,7 @@ from repro.fault.monitor import StepMonitor
 from repro.graphs.circuit import CircuitGraph, relation_plan_of
 from repro.graphs.collate import collate_graphs
 from repro.kernels import ops
+from repro.models.backbone import BackboneSpec
 from repro.models.hgnn import (DRCircuitGNNParams, batched_loss_fn,
                                drcircuitgnn_forward, init_drcircuitgnn,
                                loss_fn)
@@ -59,6 +60,15 @@ class CircuitTrainConfig:
     # graphs per optimizer step: an epoch over a design list is
     # ceil(n/batch_size) collated dispatches instead of n (graphs/collate.py)
     batch_size: int = 1
+    # Deep-backbone knobs (models/backbone.py, DESIGN.md §13).  ``n_layers``
+    # above is the single depth source of truth end-to-end (it sizes the
+    # params AND the spec).  ``remat=True`` checkpoints each hetero layer:
+    # the backward recomputes the layer's fused forward instead of storing
+    # its activations, so depth-15 trains at roughly depth-3 peak memory
+    # (bench_backbone asserts it).  ``wiring`` selects the DeepGEN-style
+    # reuse pattern: "plain" | "residual" | "dense".
+    remat: bool = False
+    wiring: str = "plain"
 
 
 def _grads_finite(grads) -> jax.Array:
@@ -85,6 +95,10 @@ class CircuitTrainer:
                                      use_drelu=cfg.use_drelu,
                                      use_plan=cfg.use_plan,
                                      n_shards=cfg.n_shards)
+        # the backbone spec shares cfg.n_layers with init_drcircuitgnn —
+        # one depth knob end-to-end (trainer, examples, benches)
+        self.spec = BackboneSpec(depth=cfg.n_layers, hidden=cfg.hidden,
+                                 wiring=cfg.wiring, remat=cfg.remat)
         key = jax.random.PRNGKey(cfg.seed)
         self.params = init_drcircuitgnn(key, f_cell, f_net, cfg.hidden,
                                         cfg.n_layers)
@@ -94,6 +108,7 @@ class CircuitTrainer:
         self._batched_step_fn = self._build_batched_step()
         self._grad_fn = self._build_grad()
         self._apply_fn = self._build_apply()
+        self._fwd_fn, self._batched_fwd_fn = self._build_fwd_losses()
         self._batch_cache = {}        # id-tuple of member graphs -> device batch
         self._plan_cache = {}         # id(graph) -> plan-attached graph
         # Robustness (DESIGN.md §10): the chaos harness (fault/inject.py)
@@ -113,6 +128,12 @@ class CircuitTrainer:
         self._c_steps = self.metrics.counter("train.steps")
         self._c_nonfinite = self.metrics.counter("train.nonfinite_grad_steps")
         self._h_step_ms = self.metrics.histogram("train.step_ms")
+        # Deep-backbone memory accounting (§11 gauges, backend-guarded —
+        # see _peak_memory_bytes / _recompute_ms): peak device bytes after
+        # each step, and the per-step recompute-cost estimate remat pays.
+        self._g_peak = self.metrics.gauge("train.peak_memory_bytes")
+        self._g_recompute = self.metrics.gauge("train.recompute_ms")
+        self._fwd_time_cache = {}     # id(step input) -> (pin, est_ms)
         self._global_step = 0
 
     @property
@@ -127,22 +148,67 @@ class CircuitTrainer:
             "steps": int(self._c_steps.value),
             "nonfinite_grad_steps": int(self._c_nonfinite.value),
             "step_p50_ms": p50, "step_p95_ms": p95, "step_p99_ms": p99,
+            "peak_memory_bytes": int(self._g_peak.value),
+            "recompute_ms": float(self._g_recompute.value),
         }
 
-    def _tick(self, duration_s: float) -> None:
+    def _peak_memory_bytes(self) -> int:
+        """Peak device memory, backend-guarded: real accelerators report
+        ``peak_bytes_in_use`` via ``device.memory_stats()``; CPU/interpret
+        backends return None there, so the gauge degrades to a live-buffer
+        estimate (Σ nbytes over ``jax.live_arrays()``) instead of crashing.
+        The deterministic compiled-peak measure (``memory_analysis()``)
+        lives in benchmarks/bench_backbone.py."""
+        try:
+            ms = jax.devices()[0].memory_stats()
+            if ms and "peak_bytes_in_use" in ms:
+                return int(ms["peak_bytes_in_use"])
+        except Exception:
+            pass
+        try:
+            return int(sum(x.nbytes for x in jax.live_arrays()))
+        except Exception:
+            return 0
+
+    def _recompute_ms(self, fwd_fn, args) -> float:
+        """Per-step recompute-cost estimate under remat: the backward
+        re-runs each checkpointed layer's forward exactly once, so the
+        extra work per step ≈ one forward pass — measured on the jitted
+        forward loss once per step input (id-cached, pinned like
+        _plan_cache) and emitted as the ``train.recompute_ms`` gauge.
+        0.0 with remat off."""
+        if not self.cfg.remat:
+            return 0.0
+        key = id(args[0])
+        hit = self._fwd_time_cache.get(key)
+        if hit is not None and hit[0] is args[0]:
+            return hit[1]
+        fwd_fn(self.params, *args).block_until_ready()   # compile warm-up
+        t0 = time.perf_counter()
+        fwd_fn(self.params, *args).block_until_ready()
+        est = (time.perf_counter() - t0) * 1e3
+        self._fwd_time_cache[key] = (args[0], est)
+        return est
+
+    def _tick(self, duration_s: float, recompute_ms: float = 0.0) -> None:
         """Feed one step's wall-clock to the StepMonitor (host 0 — the
-        single-process trainer; multi-host callers own their monitor)."""
+        single-process trainer; multi-host callers own their monitor) and
+        refresh the §11 memory/recompute gauges."""
         self.monitor.record(self._global_step, 0, duration_s)
         self._global_step += 1
         self._c_steps.inc()
         self._h_step_ms.observe(duration_s * 1e3)
+        self._g_peak.set(self._peak_memory_bytes())
+        self._g_recompute.set(recompute_ms)
 
     def _build_step(self):
         mp_cfg, lr, wd = self.mp_cfg, self.lr, self.cfg.weight_decay
+        spec = self.spec
 
         @jax.jit
         def step(params, opt_state, graph: CircuitGraph):
-            loss, grads = jax.value_and_grad(loss_fn)(params, graph, mp_cfg)
+            loss, grads = jax.value_and_grad(loss_fn)(params, graph, mp_cfg,
+                                                      spec)
             ok = _grads_finite(grads)
             new_p, new_o = adamw_update(params, grads, opt_state,
                                         lr(opt_state.step),
@@ -154,11 +220,12 @@ class CircuitTrainer:
 
     def _build_batched_step(self):
         mp_cfg, lr, wd = self.mp_cfg, self.lr, self.cfg.weight_decay
+        spec = self.spec
 
         @jax.jit
         def step(params, opt_state, graph: CircuitGraph, cell_w):
             loss, grads = jax.value_and_grad(batched_loss_fn)(
-                params, graph, cell_w, mp_cfg)
+                params, graph, cell_w, mp_cfg, spec)
             ok = _grads_finite(grads)
             new_p, new_o = adamw_update(params, grads, opt_state,
                                         lr(opt_state.step),
@@ -172,14 +239,23 @@ class CircuitTrainer:
         """Loss+grad over one collated shard — the per-device half of a
         data-parallel step.  Placement follows the committed arguments, so
         dispatching shard d with replica-d params runs on device d."""
-        mp_cfg = self.mp_cfg
+        mp_cfg, spec = self.mp_cfg, self.spec
 
         @jax.jit
         def gfn(params, graph: CircuitGraph, cell_w):
             return jax.value_and_grad(batched_loss_fn)(params, graph,
-                                                       cell_w, mp_cfg)
+                                                       cell_w, mp_cfg, spec)
 
         return gfn
+
+    def _build_fwd_losses(self):
+        """Jitted forward-only losses — the measurement probes behind the
+        ``train.recompute_ms`` gauge (one forward ≈ the extra work a remat
+        backward pays per step)."""
+        mp_cfg, spec = self.mp_cfg, self.spec
+        f = jax.jit(lambda p, g: loss_fn(p, g, mp_cfg, spec))
+        fb = jax.jit(lambda p, g, w: batched_loss_fn(p, g, w, mp_cfg, spec))
+        return f, fb
 
     def _build_apply(self):
         lr, wd = self.lr, self.cfg.weight_decay
@@ -293,11 +369,13 @@ class CircuitTrainer:
             for g in graphs:
                 if self.chaos is not None:
                     self.chaos.stall("straggler")
+                pg = self._planned(g)
                 t_step = time.perf_counter()
                 self.params, self.opt_state, loss, ok = self._step_fn(
-                    self.params, self.opt_state, self._planned(g))
+                    self.params, self.opt_state, pg)
                 ok = bool(ok)                  # device barrier ends the step
-                self._tick(time.perf_counter() - t_step)
+                self._tick(time.perf_counter() - t_step,
+                           self._recompute_ms(self._fwd_fn, (pg,)))
                 if not ok:
                     self._c_nonfinite.inc()
                     if self._rec.enabled:
@@ -315,6 +393,7 @@ class CircuitTrainer:
             if self.chaos is not None:
                 self.chaos.stall("straggler")
             t_step = time.perf_counter()
+            recompute = 0.0
             if ring is not None and len(chunk) > 1:
                 loss, n_real, ok = self._dp_step(chunk, ring)
             else:
@@ -323,7 +402,9 @@ class CircuitTrainer:
                     self._batched_step_fn(self.params, self.opt_state,
                                           graph, cell_w)
                 ok = bool(ok)
-            self._tick(time.perf_counter() - t_step)
+                recompute = self._recompute_ms(self._batched_fwd_fn,
+                                               (graph, cell_w))
+            self._tick(time.perf_counter() - t_step, recompute)
             if not ok:
                 self._c_nonfinite.inc()
                 if self._rec.enabled:
@@ -358,6 +439,8 @@ class CircuitTrainer:
         self._step_fn = self._build_step()
         self._batched_step_fn = self._build_batched_step()
         self._grad_fn = self._build_grad()
+        self._fwd_fn, self._batched_fwd_fn = self._build_fwd_losses()
+        self._fwd_time_cache.clear()
         return ks
 
     def fit(self, train_graphs: List[CircuitGraph],
@@ -380,7 +463,8 @@ class CircuitTrainer:
     def evaluate(self, graphs: List[CircuitGraph]) -> Dict[str, float]:
         preds, labels = [], []
         for g in graphs:
-            p = drcircuitgnn_forward(self.params, g, self.mp_cfg)
+            p = drcircuitgnn_forward(self.params, g, self.mp_cfg,
+                                     self.spec)
             preds.append(np.asarray(p))
             labels.append(np.asarray(g.y_cell))
         return M.all_metrics(np.concatenate(preds), np.concatenate(labels))
