@@ -37,7 +37,7 @@ plan resolution once per stack application and pass it via
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -72,6 +72,11 @@ class HeteroMPConfig:
     # graph arriving with a ShardedRelationPlan already attached uses it
     # regardless of this knob.
     n_shards: int = 0
+    # Dense-tier nnz crossover override (DESIGN.md §14): None takes the
+    # measured ``DENSE_TIER_NNZ`` constant; <= -1 pins every relation to
+    # the arena tier.  Applies only to plans this module builds itself —
+    # attached (collated/sharded) plans were tiered at pack time.
+    dense_threshold: Optional[int] = None
 
 
 class HeteroLayerParams(NamedTuple):
@@ -169,7 +174,7 @@ def _plan_for(graph: CircuitGraph, cfg: HeteroMPConfig,
         return None    # traced graph argument: host packing impossible
     if cfg.n_shards > 1:
         return sharded_plan_of(graph, cfg.n_shards)
-    return relation_plan_of(graph)
+    return relation_plan_of(graph, dense_threshold=cfg.dense_threshold)
 
 
 def _merge(params: HeteroLayerParams, x_cell: jax.Array,

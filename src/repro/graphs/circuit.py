@@ -67,14 +67,17 @@ class CircuitGraph:
 _PLAN_CACHE: Dict[int, tuple] = {}
 
 
-def relation_plan_of(graph: CircuitGraph) -> RelationPlan:
+def relation_plan_of(graph: CircuitGraph,
+                     dense_threshold: Optional[int] = None) -> RelationPlan:
     """Memoized :class:`RelationPlan` covering every edge type of
     ``graph`` — the one-kernel-per-direction-group packing of its whole
     hetero layer.  Requires concrete (non-traced) bucketed adjacencies; the
-    collator attaches pre-quantized plans to collated graphs instead."""
-    if isinstance(graph.plan, RelationPlan):
+    collator attaches pre-quantized plans to collated graphs instead.
+    ``dense_threshold`` overrides the measured dense-tier nnz crossover
+    (DESIGN.md §14); distinct thresholds memoize separately."""
+    if isinstance(graph.plan, RelationPlan) and dense_threshold is None:
         return graph.plan
-    key = id(graph)
+    key = (id(graph), dense_threshold)
     hit = _PLAN_CACHE.get(key)
     if hit is not None and hit[0]() is graph:
         return hit[1]
@@ -86,7 +89,8 @@ def relation_plan_of(graph: CircuitGraph) -> RelationPlan:
         dst, src, w = ell_to_coo(graph.edges[et].adj)
         rels.append((et, s_t, d_t, dst, src, w))
     plan = build_relation_plan(
-        rels, {"cell": graph.n_cell, "net": graph.n_net})
+        rels, {"cell": graph.n_cell, "net": graph.n_net},
+        dense_threshold=dense_threshold)
     _PLAN_CACHE[key] = (
         weakref.ref(graph, lambda _: _PLAN_CACHE.pop(key, None)), plan)
     return plan

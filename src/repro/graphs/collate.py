@@ -40,7 +40,8 @@ import jax.numpy as jnp
 
 from repro.graphs.circuit import (CircuitGraph, EDGE_SCHEMA, EDGE_TYPES,
                                   EdgeSet)
-from repro.graphs.ell import (DEFAULT_BOUNDS, FusedELL, RelationPlan,
+from repro.graphs.ell import (DEFAULT_BOUNDS, DENSE_TIER_AREA,
+                              DENSE_TIER_NNZ, FusedELL, RelationPlan,
                               arena_stats, build_relation_plan, ell_to_coo,
                               fuse_bucketed, pack_ell, pack_ell_pair,
                               pack_fused_eid_pair, pad_fused_arena, _round_up)
@@ -99,6 +100,13 @@ class BucketLayout:
         default_factory=dict)        # (etype, "fwd"|"bwd") -> padded C
     min_nnz: Dict[str, int] = dataclasses.field(
         default_factory=dict)        # etype -> quantized eid-arena nnz
+    # Relation tier (DESIGN.md §14): dense-vs-arena routing changes the
+    # plan's dense-table SHAPES, so a tier flip mid-bucket would change the
+    # graph signature.  The first batch of a bucket pins each edge type's
+    # tier; later batches reuse it even if their nnz drifts across the
+    # crossover — correctness is tier-independent, only speed is at stake.
+    plan_tier: Dict[str, str] = dataclasses.field(
+        default_factory=dict)        # etype -> "dense"|"arena"
 
 
 class LayoutTable:
@@ -509,16 +517,32 @@ def _build_batch_plan(coo_of: Dict[str, tuple],
                 layout.plan_min_chunks[(et, dname)] = c_pad
             return c_pad, r_cap
 
+    # Tier pinning (DESIGN.md §14): classify each edge type from the
+    # batch's EXACT merged-COO nnz (padded plan arenas reset ``nnz``, so
+    # build_relation_plan's own count would see the padded slab) against
+    # the padded type sizes, then pin the FIRST batch's verdict per bucket
+    # — a tier flip changes dense-table shapes, hence the signature.
+    tiers = None
+    if layout is not None:
+        for et, st, dt, dst, _src, _w in relations:
+            area = int(sizes_pad[dt]) * int(sizes_pad[st])
+            t = ("dense" if (int(dst.shape[0]) <= DENSE_TIER_NNZ
+                             and area <= DENSE_TIER_AREA) else "arena")
+            layout.plan_tier.setdefault(et, t)
+        tiers = dict(layout.plan_tier)
+
     plan = build_relation_plan(relations, sizes_pad, bounds=bounds,
                                chunk=chunk, pad=pad,
-                               packed=bucketed_of or None)
+                               packed=bucketed_of or None, tiers=tiers)
     if layout is not None:
         layout.plan_chunk.setdefault("fwd", plan.fwd.chunk)
         layout.plan_chunk.setdefault("bwd", plan.bwd.chunk)
-    # Super-arena efficiency gauges: real slots are the summed relation
-    # edge counts (known from the merged COO — padded plan arenas reset
-    # ``nnz``, and scanning the arena per batch would not be cheap).
-    real = sum(int(r[3].shape[0]) for r in relations)
+    # Super-arena efficiency gauges: real slots are the summed ARENA-tier
+    # relation edge counts (known from the merged COO — padded plan arenas
+    # reset ``nnz``, and scanning the arena per batch would not be cheap).
+    # Dense-tier relations occupy no arena slots.
+    arena_ets = {s.etype for s in plan.arena_segments}
+    real = sum(int(r[3].shape[0]) for r in relations if r[0] in arena_ets)
     for dname, arena in (("fwd", plan.fwd), ("bwd", plan.bwd)):
         c, br, ec = (int(s) for s in np.shape(arena.nbr))
         slots = c * br * ec

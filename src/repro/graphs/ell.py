@@ -32,6 +32,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import DEFAULT_REGISTRY as _METRICS
+
 # Row-block granularity of the Pallas grid; bucket row counts are padded to it.
 ROW_BLOCK = 8
 # Default degree-bucket upper bounds (inclusive); last bucket is open-ended.
@@ -51,6 +53,17 @@ CHUNK_CANDIDATES = (4, 8, 16)
 # the degree-sort makes a block's chunk count track the max width of just
 # these 8 rows, so smaller blocks mean tighter adaptive widths.
 FUSED_ROW_BLOCK = 8
+# Dense-tier crossover: relations at or below this nnz run as ONE masked
+# dense matmul instead of the chunk-walk arena (DESIGN.md §14).  Measured on
+# CPU (xla timing, dim=64, k=16): at nnz≈2k the dense fwd/bwd are 2–4x
+# faster than the arena, at nnz≈6–7k the arena is competitive on grad and
+# ahead on TPU-shaped work — 4096 splits the measured gap.  Interpret-mode
+# timings are meaningless here (ROADMAP: re-tune on real TPU).
+DENSE_TIER_NNZ = 4096
+# Safety valve on the dense-tier table: never densify a relation whose
+# n_dst·n_src exceeds this (a 4M-entry f32 table is 16 MiB per direction —
+# past that the arena wins on memory regardless of nnz).
+DENSE_TIER_AREA = 1 << 22
 
 
 @jax.tree_util.register_dataclass
@@ -645,7 +658,15 @@ def fused_to_coo(f: FusedELL) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
 @dataclasses.dataclass(frozen=True)
 class RelationSegment:
     """Where one relation lives inside a :class:`RelationPlan` (all static:
-    part of the plan's pytree aux data, stable within a shape bucket)."""
+    part of the plan's pytree aux data, stable within a shape bucket).
+
+    ``out_off`` is ALWAYS the relation's row offset in the full output
+    concat (the y/gy slab every tier shares).  Arena-tier segments
+    additionally carry ``arena_out_off`` (row offset in the arena-only fwd
+    output concat) and ``src_out_off`` (offset in the arena-only dx concat);
+    dense-tier segments carry ``dense_off`` (row offset in the plan's
+    ``dense_fwd`` table) and leave the arena coordinates at −1 / (0, 0).
+    """
 
     etype: str
     src_type: str
@@ -658,6 +679,9 @@ class RelationSegment:
     bwd_chunks: Tuple[int, int]
     fwd_rows: Tuple[int, int]    # [lo, hi) arena-row range in the fwd arena
     bwd_rows: Tuple[int, int]
+    tier: str = "arena"          # "arena" (chunk walk) | "dense" (matmul)
+    dense_off: int = -1          # row offset in dense_fwd (dense tier only)
+    arena_out_off: int = -1      # row offset in the arena-only fwd concat
 
 
 @jax.tree_util.register_dataclass
@@ -666,12 +690,18 @@ class RelationPlan:
     """One hetero layer's whole message passing as a fwd/bwd super-arena
     pair plus the relation segment table.
 
-    ``fwd`` aggregates every relation in ONE dispatch over the type-concat
-    source slab (n_src = Σ node-type sizes) into the relation-concat output
-    (n_dst = Σ per-relation destinations); ``bwd`` is the transposed
-    super-arena over the concatenated output cotangents (its ``gather``
-    yields the per-relation dx concat, summed per source type by the op).
-    Consumed by :func:`repro.kernels.ops.drspmm_multi`.
+    ``fwd`` aggregates every ARENA-tier relation in ONE dispatch over the
+    type-concat source slab (n_src = Σ node-type sizes) into the arena-only
+    output concat (n_dst = Σ arena-tier destinations); ``bwd`` is the
+    transposed super-arena over the FULL concatenated output cotangents
+    (its ``gather`` yields the arena-tier dx concat, summed per source type
+    by the op).  DENSE-tier relations (sub-crossover nnz, DESIGN.md §14)
+    bypass the chunk walk entirely: ``dense_fwd`` stacks their masked dense
+    matrices over the full type-concat source width, and ``dense_bwd`` is
+    its exact transpose, so the whole tier is one batched matmul per
+    direction.  When no relation lands in a tier, that tier's tables are an
+    inert placeholder (empty dense table / sentinel-only arena) the
+    executor skips.  Consumed by :func:`repro.kernels.ops.drspmm_multi`.
     """
 
     fwd: FusedELL
@@ -682,6 +712,14 @@ class RelationPlan:
     # (``rows``/``gather`` are inverse maps there, ``to_dense`` is the
     # block matrix of the transposed relations).
     bwd_src_rows: jax.Array
+    # Dense-tier tables: (dense_rows_total, n_src_total) f32 — segment d's
+    # matrix occupies rows [dense_off, dense_off + n_dst) and columns
+    # [src_off[src_type], + n_src); everything else is structural zero.
+    # ``dense_bwd`` is dense_fwd.T, materialized so the backward matmul
+    # reads a contiguous operand.  (0, n_src_total)/(n_src_total, 0) when
+    # no relation is dense-tier.
+    dense_fwd: jax.Array
+    dense_bwd: jax.Array
     segments: Tuple[RelationSegment, ...] = dataclasses.field(
         metadata=dict(static=True))
     src_types: Tuple[str, ...] = dataclasses.field(
@@ -697,13 +735,46 @@ class RelationPlan:
 
     @property
     def n_out_total(self) -> int:
-        return self.fwd.n_dst
+        return self.segments[-1].out_off + self.segments[-1].n_dst \
+            if self.segments else self.fwd.n_dst
+
+    @property
+    def arena_segments(self) -> Tuple[RelationSegment, ...]:
+        return tuple(s for s in self.segments if s.tier == "arena")
+
+    @property
+    def dense_segments(self) -> Tuple[RelationSegment, ...]:
+        return tuple(s for s in self.segments if s.tier == "dense")
+
+    @property
+    def has_arena(self) -> bool:
+        return any(s.tier == "arena" for s in self.segments)
+
+    @property
+    def has_dense(self) -> bool:
+        return any(s.tier == "dense" for s in self.segments)
 
     def segment(self, etype: str) -> RelationSegment:
         for s in self.segments:
             if s.etype == etype:
                 return s
         raise KeyError(etype)
+
+    def to_dense(self) -> np.ndarray:
+        """Full (n_out_total, n_src_total) block matrix across BOTH tiers —
+        the oracle every executor path must match (round-trip tests, the
+        ``dense`` reference backend)."""
+        a = np.zeros((self.n_out_total, self.n_src_total), np.float32)
+        if self.has_arena:
+            fa = np.asarray(self.fwd.to_dense(), np.float32)
+            for s in self.arena_segments:
+                a[s.out_off:s.out_off + s.n_dst] = \
+                    fa[s.arena_out_off:s.arena_out_off + s.n_dst]
+        df = np.asarray(self.dense_fwd, np.float32)
+        for s in self.dense_segments:
+            a[s.out_off:s.out_off + s.n_dst] = \
+                df[s.dense_off:s.dense_off + s.n_dst]
+        return a
 
 
 def pick_chunk_multi(packings: Sequence[BucketedELL], row_block: int = None,
@@ -723,6 +794,58 @@ def pick_chunk_multi(packings: Sequence[BucketedELL], row_block: int = None,
         return sum(row_block * c * max(1, -(-bw // c)) for bw in bws)
 
     return min(candidates, key=lambda c: (slots(c), -c))
+
+
+def _empty_super_arena(n_dst: int, n_src: int, row_block: int,
+                       chunk: int) -> FusedELL:
+    """Inert placeholder arena for a tier nothing landed in: one all-zero
+    sentinel chunk/block, every output row gathering from the zero block.
+    The executors never dispatch it (``plan.has_arena`` gates the call),
+    but keeping the pytree structure uniform means tier composition never
+    changes the plan's leaf COUNT — only leaf shapes, which the collator's
+    bucket pinning already keeps stable."""
+    return FusedELL(
+        nbr=np.zeros((1, row_block, chunk), np.int32),
+        w=np.zeros((1, row_block, chunk), np.float32),
+        block_of=np.zeros(1, np.int32),
+        start=np.ones(1, np.int32),
+        rows=np.zeros(row_block, np.int32),
+        gather=np.zeros(n_dst, np.int32),
+        n_dst=n_dst, n_src=n_src, nnz=0,
+        row_block=row_block, chunk=chunk,
+        rel=np.zeros(1, np.int32))
+
+
+def plan_to_coo(plan: "RelationPlan"
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side (dst, src, w) of EVERY edge a plan represents, across both
+    tiers, in full-output-concat / type-concat-source coordinates — the
+    global coordinate pair the mesh partitioner (sharding/plan_shard.py)
+    shards on.  Arena-tier edges come from :func:`fused_to_coo` with their
+    arena-concat rows remapped to full output rows; dense-tier edges come
+    straight from the non-zeros of ``dense_fwd``."""
+    ds, ss, ws = [], [], []
+    if plan.has_arena:
+        d, s, w = fused_to_coo(plan.fwd)
+        shift = np.zeros(plan.fwd.n_dst, np.int64)
+        for seg in plan.arena_segments:
+            shift[seg.arena_out_off:seg.arena_out_off + seg.n_dst] = \
+                seg.out_off - seg.arena_out_off
+        ds.append(d + shift[d])
+        ss.append(s)
+        ws.append(w)
+    if plan.has_dense:
+        df = np.asarray(plan.dense_fwd, np.float32)
+        for seg in plan.dense_segments:
+            blk = df[seg.dense_off:seg.dense_off + seg.n_dst]
+            r, c = np.nonzero(blk)
+            ds.append(r.astype(np.int64) + seg.out_off)
+            ss.append(c.astype(np.int64))
+            ws.append(blk[r, c])
+    if not ds:
+        return (np.zeros(0, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32))
+    return np.concatenate(ds), np.concatenate(ss), np.concatenate(ws)
 
 
 def _concat_arenas(arenas: Sequence[FusedELL], nbr_offs: Sequence[int],
@@ -771,9 +894,12 @@ def build_relation_plan(relations: Sequence[tuple], n_of: Dict[str, int], *,
                         chunk: Union[int, None, Tuple] = None,
                         pad: Dict[str, Dict[str, Tuple[int, int]]] = None,
                         packed: Dict[str, Tuple[BucketedELL,
-                                                BucketedELL]] = None
+                                                BucketedELL]] = None,
+                        dense_threshold: int = None,
+                        tiers: Dict[str, str] = None
                         ) -> RelationPlan:
-    """Pack every relation of a hetero layer into one fwd/bwd super-arena.
+    """Pack every relation of a hetero layer into one fwd/bwd super-arena
+    plus a dense-tier table for sub-crossover relations (DESIGN.md §14).
 
     Parameters
     ----------
@@ -798,6 +924,14 @@ def build_relation_plan(relations: Sequence[tuple], n_of: Dict[str, int], *,
         ``pack_ell`` (the collator shares the pair it packs for the
         per-edge-type arenas; fusing at the plan's shared chunk width is
         memoized separately per (packing, width)).
+    dense_threshold : nnz at or below which a relation is routed to the
+        dense tier (default :data:`DENSE_TIER_NNZ`); the
+        :data:`DENSE_TIER_AREA` table-size guard always applies on top.
+    tiers : optional ``{etype: "arena"|"dense"}`` overriding the nnz
+        classification per relation — the collator pins the first-seen
+        tiering per shape bucket with this, so padded members of one bucket
+        share segment statics (and thus a jit signature) even when filler
+        members' nnz straddles the threshold.
     """
     if row_block is None:
         row_block = FUSED_ROW_BLOCK
@@ -807,6 +941,7 @@ def build_relation_plan(relations: Sequence[tuple], n_of: Dict[str, int], *,
         src_off[t] = off
         off += int(n_of[t])
     n_src_total = off
+    thr = DENSE_TIER_NNZ if dense_threshold is None else int(dense_threshold)
 
     # Plan packing may run lazily inside a jit trace (first call of a
     # jitted layer over a concrete graph): force the pack_ell slabs to be
@@ -824,52 +959,121 @@ def build_relation_plan(relations: Sequence[tuple], n_of: Dict[str, int], *,
             bwd_b = [pack_ell(src, dst, w, int(n_of[st]), int(n_of[dt]),
                               bounds)
                      for _et, st, dt, dst, src, w in relations]
+
+        # Tier classification: exact nnz (pack-time count) against the
+        # measured crossover, with the table-area guard on top.  An
+        # explicit ``tiers`` entry wins — that's how collated buckets stay
+        # signature-stable across members.
+        tier_of = []
+        for i, r in enumerate(relations):
+            et, st, dt = r[0], r[1], r[2]
+            nnz_i = fwd_b[i].nnz
+            if nnz_i < 0:
+                nnz_i = int(np.asarray(r[3]).shape[0])
+            area = int(n_of[dt]) * int(n_of[st])
+            t = "dense" if (nnz_i <= thr and area <= DENSE_TIER_AREA) \
+                else "arena"
+            if tiers is not None and et in tiers:
+                t = tiers[et]
+            tier_of.append(t)
+            for d in ("fwd", "bwd"):
+                _METRICS.set("arena.tier", 1.0 if t == "dense" else 0.0,
+                             etype=et, dir=d)
+                _METRICS.set("arena.tier_nnz", float(nnz_i), etype=et, dir=d)
+                _METRICS.set("arena.tier_threshold", float(thr),
+                             etype=et, dir=d)
+        arena_idx = [i for i, t in enumerate(tier_of) if t == "arena"]
+        dense_idx = [i for i, t in enumerate(tier_of) if t == "dense"]
+
         ck_f, ck_b = chunk if isinstance(chunk, tuple) else (chunk, chunk)
         if ck_f is None:
-            ck_f = pick_chunk_multi(fwd_b, row_block)
+            ck_f = pick_chunk_multi([fwd_b[i] for i in arena_idx], row_block)
         if ck_b is None:
-            ck_b = pick_chunk_multi(bwd_b, row_block)
-        fwd_a = [fuse_bucketed(b, row_block, ck_f) for b in fwd_b]
-        bwd_a = [fuse_bucketed(b, row_block, ck_b) for b in bwd_b]
+            ck_b = pick_chunk_multi([bwd_b[i] for i in arena_idx], row_block)
+        fwd_a = [fuse_bucketed(fwd_b[i], row_block, ck_f) for i in arena_idx]
+        bwd_a = [fuse_bucketed(bwd_b[i], row_block, ck_b) for i in arena_idx]
+
+        # Dense-tier tables: each relation's exact edge set (straight from
+        # its bucketed packing, so zero-weight padding is dropped the same
+        # way the arena drops it) scattered into a stacked matrix over the
+        # full type-concat source width; bwd is the materialized transpose.
+        dense_offs, doff = {}, 0
+        for i in dense_idx:
+            dense_offs[i] = doff
+            doff += int(n_of[relations[i][2]])
+        dense_fwd = np.zeros((doff, n_src_total), np.float32)
+        for i in dense_idx:
+            d, s, wv = ell_to_coo(fwd_b[i])
+            np.add.at(dense_fwd,
+                      (d + dense_offs[i], s + src_off[relations[i][1]]), wv)
+        dense_bwd = np.ascontiguousarray(dense_fwd.T)
+
     if pad is not None:
         target = pad if callable(pad) else (lambda et, d, _a: pad[et][d])
-        fwd_a = [pad_fused_arena(a, *target(r[0], "fwd", a))
-                 for a, r in zip(fwd_a, relations)]
-        bwd_a = [pad_fused_arena(a, *target(r[0], "bwd", a))
-                 for a, r in zip(bwd_a, relations)]
+        fwd_a = [pad_fused_arena(a, *target(relations[i][0], "fwd", a))
+                 for a, i in zip(fwd_a, arena_idx)]
+        bwd_a = [pad_fused_arena(a, *target(relations[i][0], "bwd", a))
+                 for a, i in zip(bwd_a, arena_idx)]
 
-    out_offs = np.cumsum([0] + [a.n_dst for a in fwd_a])      # output concat
-    src_out_offs = np.cumsum([0] + [a.n_dst for a in bwd_a])  # dx concat
-    # fwd: sources live in the type-concat slab, outputs in the relation
-    # concat; bwd: "sources" are the fwd outputs (gy concat), rows are
-    # type-concat source ids (the §2 xi gather reads them).
-    fwd, f_offs = _concat_arenas(
-        fwd_a,
-        nbr_offs=[src_off[r[1]] for r in relations],
-        rows_offs=[int(o) for o in out_offs[:-1]],
-        n_dst=int(out_offs[-1]), n_src=n_src_total)
-    bwd, b_offs = _concat_arenas(
-        bwd_a,
-        nbr_offs=[int(o) for o in out_offs[:-1]],
-        rows_offs=[int(o) for o in src_out_offs[:-1]],
-        n_dst=int(src_out_offs[-1]), n_src=int(out_offs[-1]))
-    bwd_src_rows = np.concatenate(
-        [np.asarray(a.rows) + np.int32(src_off[r[1]])
-         for a, r in zip(bwd_a, relations)])
+    # Full output concat over ALL relations (y/gy live here, both tiers);
+    # the fwd arena's own output space covers arena-tier rows only.
+    out_offs = np.cumsum([0] + [int(n_of[r[2]]) for r in relations])
+    arena_out_offs = np.cumsum([0] + [a.n_dst for a in fwd_a])
+    src_out_offs = np.cumsum([0] + [a.n_dst for a in bwd_a])  # arena dx
+    if arena_idx:
+        # fwd: sources live in the type-concat slab, outputs in the
+        # arena-only concat; bwd: "sources" are the FULL fwd outputs (gy
+        # concat — dense-tier rows are simply never referenced), rows are
+        # type-concat source ids (the §2 xi gather reads them).
+        fwd, f_offs = _concat_arenas(
+            fwd_a,
+            nbr_offs=[src_off[relations[i][1]] for i in arena_idx],
+            rows_offs=[int(o) for o in arena_out_offs[:-1]],
+            n_dst=int(arena_out_offs[-1]), n_src=n_src_total)
+        bwd, b_offs = _concat_arenas(
+            bwd_a,
+            nbr_offs=[int(out_offs[i]) for i in arena_idx],
+            rows_offs=[int(o) for o in src_out_offs[:-1]],
+            n_dst=int(src_out_offs[-1]), n_src=int(out_offs[-1]))
+        bwd_src_rows = np.concatenate(
+            [np.asarray(a.rows) + np.int32(src_off[relations[i][1]])
+             for a, i in zip(bwd_a, arena_idx)])
+    else:
+        fwd = _empty_super_arena(0, n_src_total, row_block, int(ck_f or 16))
+        bwd = _empty_super_arena(0, int(out_offs[-1]), row_block,
+                                 int(ck_b or 16))
+        bwd_src_rows = np.zeros(row_block, np.int32)
+        f_offs = b_offs = []
 
     segments = []
+    a_pos = 0
     for i, (et, st, dt, _d, _s, _w) in enumerate(relations):
-        fa, ba = fwd_a[i], bwd_a[i]
-        (fc, fr), (bc, brr) = f_offs[i], b_offs[i]
-        segments.append(RelationSegment(
-            etype=et, src_type=st, dst_type=dt,
-            n_dst=fa.n_dst, n_src=fa.n_src,
-            out_off=int(out_offs[i]), src_out_off=int(src_out_offs[i]),
-            fwd_chunks=(fc, fc + fa.n_chunks),
-            bwd_chunks=(bc, bc + ba.n_chunks),
-            fwd_rows=(fr, fr + fa.n_arena_rows),
-            bwd_rows=(brr, brr + ba.n_arena_rows)))
+        if tier_of[i] == "arena":
+            fa, ba = fwd_a[a_pos], bwd_a[a_pos]
+            (fc, fr), (bc, brr) = f_offs[a_pos], b_offs[a_pos]
+            segments.append(RelationSegment(
+                etype=et, src_type=st, dst_type=dt,
+                n_dst=fa.n_dst, n_src=fa.n_src,
+                out_off=int(out_offs[i]),
+                src_out_off=int(src_out_offs[a_pos]),
+                fwd_chunks=(fc, fc + fa.n_chunks),
+                bwd_chunks=(bc, bc + ba.n_chunks),
+                fwd_rows=(fr, fr + fa.n_arena_rows),
+                bwd_rows=(brr, brr + ba.n_arena_rows),
+                tier="arena", dense_off=-1,
+                arena_out_off=int(arena_out_offs[a_pos])))
+            a_pos += 1
+        else:
+            segments.append(RelationSegment(
+                etype=et, src_type=st, dst_type=dt,
+                n_dst=int(n_of[dt]), n_src=int(n_of[st]),
+                out_off=int(out_offs[i]), src_out_off=-1,
+                fwd_chunks=(0, 0), bwd_chunks=(0, 0),
+                fwd_rows=(0, 0), bwd_rows=(0, 0),
+                tier="dense", dense_off=int(dense_offs[i]),
+                arena_out_off=-1))
     return RelationPlan(fwd=fwd, bwd=bwd, bwd_src_rows=bwd_src_rows,
+                        dense_fwd=dense_fwd, dense_bwd=dense_bwd,
                         segments=tuple(segments),
                         src_types=src_types,
                         src_off=tuple(src_off[t] for t in src_types),

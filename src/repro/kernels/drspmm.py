@@ -467,6 +467,128 @@ def spmm_dense_fused(fused: FusedELL, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# dense-tier executors — tiny relations (nnz ≤ DENSE_TIER_NNZ, graphs/ell.py)
+# skip the chunk-walk arena entirely: the plan materializes the relation
+# stack as ONE dense matrix and the whole tier runs as a single masked
+# matmul (fwd) / single transposed matmul + in-kernel CBSR sampling (bwd).
+# Same custom-vjp contract as the arena path: grad flows to x_vals only,
+# sampled at x_idx (SSpMM).  DESIGN.md §14.
+# ---------------------------------------------------------------------------
+
+DENSE_TIER_ROW_BLOCK = 8      # output rows per grid step (fwd M / bwd N)
+DENSE_TIER_SRC_CHUNK = 128    # source rows per scatter-densify step (fwd)
+
+
+def _dense_tier_fwd_kernel(a_ref, xv_ref, xi_ref, out_ref,
+                           *, d_tile: int, n_chunk: int):
+    a = a_ref[...].astype(jnp.float32)        # (RB, Np)
+    xv = xv_ref[...].astype(jnp.float32)      # (Np, k)
+    xi = xi_ref[...]                          # (Np, k)
+    rb, npad = a.shape
+
+    d_base = pl.program_id(0) * d_tile
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, d_tile), 2) + d_base
+
+    def body(c, acc):
+        off = c * n_chunk
+        vc = jax.lax.dynamic_slice_in_dim(xv, off, n_chunk, 0)   # (NC, k)
+        ic = jax.lax.dynamic_slice_in_dim(xi, off, n_chunk, 0)
+        ac = jax.lax.dynamic_slice_in_dim(a, off, n_chunk, 1)    # (RB, NC)
+        onehot = (ic[:, :, None] == iota_d).astype(jnp.float32)  # (NC, k, DT)
+        xd = jnp.einsum("nk,nkd->nd", vc, onehot)                # (NC, DT)
+        return acc + ac @ xd
+
+    acc = jnp.zeros((rb, d_tile), jnp.float32)
+    acc = jax.lax.fori_loop(0, npad // n_chunk, body, acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def drspmm_dense_tier_fwd(a_dense: jax.Array, x_vals: jax.Array,
+                          x_idx: jax.Array, dim: int,
+                          *, interpret: bool | None = None) -> jax.Array:
+    """Y = A·dense(CBSR(x)) for a dense-tier relation stack in ONE launch.
+
+    ``a_dense`` is the (M, N) dense relation matrix (the plan's
+    ``dense_fwd``); the CBSR operand is scatter-densified in-kernel in
+    source chunks, so no (N, dim) intermediate is ever materialized in HBM.
+    Returns fp32 (M, dim); the op wrapper casts.
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    m, n = a_dense.shape
+    k = x_vals.shape[1]
+    if m == 0 or n == 0:
+        return jnp.zeros((m, dim), jnp.float32)
+    rb = DENSE_TIER_ROW_BLOCK
+    nc = min(DENSE_TIER_SRC_CHUNK, _round_up(n, 8))
+    mp = _round_up(m, rb)
+    npad = _round_up(n, nc)
+    # constant-folded under jit: shapes are static, pads are zeros (padded
+    # x_idx rows point at column 0 but carry zero values — inert).
+    a_p = jnp.pad(a_dense, ((0, mp - m), (0, npad - n)))
+    xv_p = jnp.pad(x_vals, ((0, npad - n), (0, 0)))
+    xi_p = jnp.pad(x_idx, ((0, npad - n), (0, 0)))
+    dt, ndt = _d_tiling(dim)
+    y = pl.pallas_call(
+        functools.partial(_dense_tier_fwd_kernel, d_tile=dt, n_chunk=nc),
+        grid=(ndt, mp // rb),
+        in_specs=[
+            pl.BlockSpec((rb, npad), lambda d, i: (i, 0)),
+            pl.BlockSpec((npad, k), lambda d, i: (0, 0)),
+            pl.BlockSpec((npad, k), lambda d, i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, dt), lambda d, i: (i, d)),
+        out_shape=jax.ShapeDtypeStruct((mp, dim), jnp.float32),
+        interpret=interpret,
+    )(a_p, xv_p, xi_p)
+    return y[:m]
+
+
+def _dense_tier_bwd_kernel(at_ref, gy_ref, xi_ref, out_ref):
+    at = at_ref[...].astype(jnp.float32)      # (RB, M)
+    gy = gy_ref[...].astype(jnp.float32)      # (M, D)
+    xi = xi_ref[...]                          # (RB, k)
+    dx = at @ gy                              # (RB, D) — dense row cotangent
+    out_ref[...] = jnp.take_along_axis(dx, xi, axis=1).astype(out_ref.dtype)
+
+
+def drspmm_dense_tier_bwd(a_dense_t: jax.Array, gy: jax.Array,
+                          x_idx: jax.Array,
+                          *, interpret: bool | None = None) -> jax.Array:
+    """dV = sample(Aᵀ·gY, x_idx) for the dense tier in ONE launch.
+
+    ``a_dense_t`` is the transposed relation matrix (the plan's
+    ``dense_bwd``, (N, M)); the SSpMM sampling happens in-kernel via
+    ``take_along_axis`` at each source row's own CBSR indices, so the
+    (N, dim) dense cotangent never leaves VMEM.  Returns fp32 (N, k).
+    """
+    if interpret is None:
+        interpret = INTERPRET
+    n, m = a_dense_t.shape
+    k = x_idx.shape[1]
+    if n == 0 or m == 0:
+        return jnp.zeros((n, k), jnp.float32)
+    rb = DENSE_TIER_ROW_BLOCK
+    npad = _round_up(n, rb)
+    at_p = jnp.pad(a_dense_t, ((0, npad - n), (0, 0)))
+    xi_p = jnp.pad(x_idx, ((0, npad - n), (0, 0)))
+    d = gy.shape[1]
+    dv = pl.pallas_call(
+        _dense_tier_bwd_kernel,
+        grid=(npad // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, m), lambda i: (i, 0)),
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+            pl.BlockSpec((rb, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad, k), jnp.float32),
+        interpret=interpret,
+    )(at_p, gy, xi_p)
+    return dv[:n]
+
+
+# ---------------------------------------------------------------------------
 # fused learnable-edge executors — Y = A(w)·dense(CBSR(x)) with the weight
 # vector w (nnz,) gathered IN-KERNEL from the arena's eid table, so the
 # differentiable-edge path (kernels/ops.py::drspmm_learnable) is the same

@@ -28,12 +28,17 @@ bucketed API gets the single-dispatch path by flipping ``backend`` alone.
 ``drspmm_multi`` lifts the same contract one level: every edge-type
 direction of a hetero layer runs over a :class:`RelationPlan` super-arena
 as ONE dispatch per direction-group — one forward, one transposed backward
-— instead of one per relation (DESIGN.md §9).
+— instead of one per relation (DESIGN.md §9).  Execution is size-adaptive
+(DESIGN.md §14): relations the plan classified as dense-tier at pack time
+(nnz below the measured crossover) skip the chunk walk and run together as
+at most one extra batched dense matmul per direction; ``drspmm`` applies
+the same crossover to single tiny relations on the fused-family backends.
 """
 
 from __future__ import annotations
 
 import functools
+import weakref
 from collections import OrderedDict, deque
 from typing import Literal
 
@@ -41,8 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.ell import (BucketedELL, ELLBucket, FusedELL, RelationPlan,
-                              decode_eids, fuse_bucketed)
+from repro.graphs.ell import (DENSE_TIER_AREA, DENSE_TIER_NNZ, BucketedELL,
+                              ELLBucket, FusedELL, RelationPlan, decode_eids,
+                              ell_to_coo, fuse_bucketed, fused_to_coo)
 from repro.kernels import drspmm as _k
 from repro.kernels import learnable as _learn
 from repro.kernels import ref as _ref
@@ -233,13 +239,98 @@ def _bwd_impl(adj_t: BucketedELL, gy, x_idx, backend: Backend):
     return gv
 
 
+# ----- dense fast-path tier for tiny single relations ----------------------
+#
+# The fused chunk-walk arena LOSES on tiny relations (BENCH_drspmm recorded
+# ``pin``/``pinned`` at nnz≈2k running 0.53–0.65x vs the per-bucket path):
+# below the measured crossover (graphs/ell.py::DENSE_TIER_NNZ) the whole
+# relation is ONE masked dense matmul — still a single dispatch, same
+# custom-vjp contract (sampled backward at x_idx).  Fused-family names only:
+# "pallas"/"xla" stay bucket-granular as the reference baselines the bench
+# compares against.  A collated arena (nnz == −1: padded filler, bucket-
+# stable shape signature) never reroutes — tier decisions for collation are
+# pinned at pack time by the plan (graphs/collate.py).
+
+_DENSE_MAT_CACHE: "dict[int, tuple]" = {}
+
+
+def _dense_mat_of(adj) -> np.ndarray:
+    """Host-side (n_dst, n_src) dense matrix of a concrete packing,
+    memoized per packing identity (same discipline as ``_FUSE_CACHE``)."""
+    key = id(adj)
+    hit = _DENSE_MAT_CACHE.get(key)
+    if hit is not None and hit[0]() is adj:
+        return hit[1]
+    d, s, w = (fused_to_coo(adj) if isinstance(adj, FusedELL)
+               else ell_to_coo(adj))
+    a = np.zeros((adj.n_dst, adj.n_src), np.float32)
+    np.add.at(a, (d, s), w)
+    _DENSE_MAT_CACHE[key] = (
+        weakref.ref(adj, lambda _, k=key: _DENSE_MAT_CACHE.pop(k, None)), a)
+    return a
+
+
+def _dense_tier_single(adj, backend: Backend) -> bool:
+    """True when a single-relation fused-family call should take the
+    dense-tier fast path: concrete packing, known sub-threshold nnz, and a
+    dense table small enough to be worth materializing."""
+    if backend not in ("pallas_fused", "xla_fused"):
+        return False
+    leaf = adj.nbr if isinstance(adj, FusedELL) else adj.buckets[0].nbr
+    if isinstance(leaf, jax.core.Tracer):
+        return False
+    return (adj.nnz >= 0 and adj.nnz <= DENSE_TIER_NNZ
+            and adj.n_dst * adj.n_src <= DENSE_TIER_AREA)
+
+
+def _drspmm_dense_single(adj, adj_t, x_vals, x_idx, dim: int,
+                         backend: Backend) -> jax.Array:
+    family = "pallas" if backend == "pallas_fused" else "xla"
+    a = jnp.asarray(_dense_mat_of(adj))
+    at = jnp.asarray(_dense_mat_of(adj_t))
+
+    @jax.custom_vjp
+    def f(xv):
+        _record_dispatch(f"{family}:dense_fwd")
+        if backend == "pallas_fused":
+            return _k.drspmm_dense_tier_fwd(a, xv, x_idx,
+                                            dim).astype(xv.dtype)
+        n = xv.shape[0]
+        xd = jnp.zeros((n, dim), jnp.float32).at[
+            jnp.arange(n)[:, None], x_idx].add(xv.astype(jnp.float32))
+        return (a @ xd).astype(xv.dtype)
+
+    def f_fwd(xv):
+        return f(xv), None
+
+    def f_bwd(_, gy):
+        _record_dispatch(f"{family}:dense_bwd")
+        if backend == "pallas_fused":
+            dv = _k.drspmm_dense_tier_bwd(at, gy, x_idx)
+        else:
+            dx = at @ gy.astype(jnp.float32)
+            dv = jnp.take_along_axis(dx, x_idx, axis=1)
+        return (dv.astype(gy.dtype),)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(x_vals)
+
+
 def drspmm(adj: BucketedELL, adj_t: BucketedELL, x_vals: jax.Array,
            x_idx: jax.Array, dim: int, *,
            backend: Backend = DEFAULT_BACKEND) -> jax.Array:
     """Differentiable DR-SpMM.  Gradient flows to ``x_vals`` only; the
-    adjacency and the CBSR indices are structural."""
+    adjacency and the CBSR indices are structural.
+
+    Size-adaptive: on the fused-family backends a concrete relation whose
+    nnz sits below the measured dense crossover
+    (``graphs/ell.py::DENSE_TIER_NNZ``) routes to the dense-tier executor —
+    one masked dense matmul forward, one transposed matmul + SSpMM sampling
+    backward — instead of walking the arena (DESIGN.md §14)."""
 
     backend = _effective_backend(adj, backend)
+    if _dense_tier_single(adj, backend):
+        return _drspmm_dense_single(adj, adj_t, x_vals, x_idx, dim, backend)
 
     @jax.custom_vjp
     def f(xv):
@@ -594,17 +685,34 @@ def _multi_concat(plan: RelationPlan, vals, idxs):
     """Stack per-type CBSR operands into the plan's type-concat slab,
     padding k up to the group max (padded value columns are zero, so they
     contribute nothing forward; their sampled gradients are sliced off on
-    the way back)."""
+    the way back).
+
+    Values and indices travel together as one (n_t, 2, k) stack per type —
+    f32 values bitcast to int32 — so the assembly is ONE pad + ONE
+    concatenate instead of a separate pad/concat pair per operand (the
+    forward-path overhead BENCH_drspmm attributed to the type-concat
+    gather).  The shared container is int32, NOT float32: small column
+    indices bitcast to f32 are denormals, and the jit partitioner is free
+    to flush those to zero when this concat fuses with a shard_map reshard
+    (observed on CPU: every xi reached the sharded kernel as 0).  Integer
+    lanes are never flushed, and the int32 0 padding bitcasts back to an
+    inert f32 +0.0 — identical padding semantics to the two-array form."""
     kmax = max(int(i.shape[1]) for i in idxs)
-    pv, pi = [], []
+    vdt = vals[0].dtype
+    parts = []
     for v, i in zip(vals, idxs):
+        vi = jnp.stack(
+            [jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.int32),
+             i.astype(jnp.int32)],
+            axis=1)                                    # (n_t, 2, k_t)
         k = int(i.shape[1])
         if k < kmax:
-            v = jnp.pad(v, ((0, 0), (0, kmax - k)))
-            i = jnp.pad(i, ((0, 0), (0, kmax - k)))
-        pv.append(v)
-        pi.append(i.astype(jnp.int32))
-    return jnp.concatenate(pv), jnp.concatenate(pi), kmax
+            vi = jnp.pad(vi, ((0, 0), (0, 0), (0, kmax - k)))
+        parts.append(vi)
+    cat = jnp.concatenate(parts)                       # (N, 2, kmax)
+    xv = jax.lax.bitcast_convert_type(cat[:, 0, :], jnp.float32).astype(vdt)
+    xi = cat[:, 1, :]
+    return xv, xi, kmax
 
 
 def _split_out(plan: RelationPlan, y_cat):
@@ -613,33 +721,62 @@ def _split_out(plan: RelationPlan, y_cat):
                  for s in plan.segments)
 
 
-def _dx_cat_to_types(plan: RelationPlan, dx_cat, idxs):
-    """Relation-concat dV → per-type gradients: segments of one source type
-    accumulate (cell feeds both ``near`` and ``pin``), padded k columns are
-    sliced off per type."""
+def _dx_cat_to_types(plan: RelationPlan, dx_cat, dv_dense, idxs):
+    """Arena relation-concat dV (+ dense-tier type-concat dV) → per-type
+    gradients.
+
+    Arena segments of one source type accumulate (cell feeds both ``near``
+    and ``pin``); the dense tier's ``dv_dense`` is already type-concat —
+    ONE transposed matmul over the stacked ``dense_bwd`` table sums every
+    dense relation's contribution per source row — so it adds at most once
+    per consuming type.  Padded k columns are sliced off per type.  Either
+    input may be ``None`` (single-tier plans)."""
     outs = []
     for ti, t in enumerate(plan.src_types):
         k_t = int(idxs[ti].shape[1])
         acc = None
-        for s in plan.segments:
+        for s in plan.arena_segments:
             if s.src_type != t:
                 continue
             part = dx_cat[s.src_out_off:s.src_out_off + s.n_src]
             acc = part if acc is None else acc + part
+        if dv_dense is not None and any(s.src_type == t
+                                        for s in plan.dense_segments):
+            o = int(plan.src_off[ti])
+            part = dv_dense[o:o + int(plan.src_sizes[ti])]
+            acc = part if acc is None else acc + part
         if acc is None:
-            acc = jnp.zeros((plan.src_sizes[ti], k_t), dx_cat.dtype)
+            ref = dx_cat if dx_cat is not None else dv_dense
+            acc = jnp.zeros((int(plan.src_sizes[ti]), k_t), ref.dtype)
         outs.append(acc[:, :k_t])
     return tuple(outs)
 
 
-def _multi_fwd_impl(plan: RelationPlan, xv, xi, dim: int, backend: Backend):
+def _densify_cbsr(xv, xi, dim: int):
+    """Type-concat CBSR → dense (N, dim) operand: the shared densify the
+    hybrid forward's tiers both consume (one scatter over N·k values, vs
+    the nnz·k-element arena scatter ``_fwd_fused_xla`` pays)."""
+    n = xv.shape[0]
+    return jnp.zeros((n, dim), xv.dtype).at[
+        jnp.arange(n)[:, None], xi].add(xv)
+
+
+def _multi_fwd_impl(plan: RelationPlan, xv, xi, dim: int, backend: Backend,
+                    xd=None):
     if backend == "pallas_fused":
         _record_dispatch("pallas:multi_fwd")
         ya = _k.drspmm_fwd_multi(plan.fwd, xv, xi, dim)       # fp32 arena
         return jnp.take(ya, jnp.asarray(plan.fwd.gather),
                         axis=0).astype(xv.dtype)
+    # XLA family: densify once, then the dense-operand arena walk (gather +
+    # segment-sum). The in-arena CBSR scatter (`_fwd_fused_xla`) is ~9x
+    # slower on CPU at medium nnz — it stays the per-relation reference the
+    # serial path runs, and the Pallas kernel keeps consuming CBSR directly
+    # (in-register densify; materializing xd would waste TPU bandwidth).
     _record_dispatch("xla:multi_fwd")
-    return _fwd_fused_xla(plan.fwd, xv, xi, dim)
+    if xd is None:
+        xd = _densify_cbsr(xv, xi, dim)
+    return _spmm_fused_xla(plan.fwd, xd).astype(xv.dtype)
 
 
 def _multi_bwd_impl(plan: RelationPlan, gy_cat, xi, backend: Backend):
@@ -654,6 +791,79 @@ def _multi_bwd_impl(plan: RelationPlan, gy_cat, xi, backend: Backend):
     return _bwd_fused_xla(ft, gy_cat, xi, rows=plan.bwd_src_rows)
 
 
+def _multi_dense_fwd(plan: RelationPlan, xv, xi, dim: int, backend: Backend,
+                     xd=None):
+    """Dense-tier forward: ONE batched masked matmul over the stacked
+    ``dense_fwd`` table — every dense-tier relation of the direction-group
+    at once (rows are the dense relation-concat, columns the full
+    type-concat source slab)."""
+    if backend == "pallas_fused":
+        _record_dispatch("pallas:multi_dense_fwd")
+        return _k.drspmm_dense_tier_fwd(jnp.asarray(plan.dense_fwd), xv, xi,
+                                        dim).astype(xv.dtype)
+    _record_dispatch("xla:multi_dense_fwd")
+    if xd is None:
+        xd = _densify_cbsr(xv.astype(jnp.float32), xi, dim)
+    return (jnp.asarray(plan.dense_fwd) @ xd.astype(jnp.float32)
+            ).astype(xv.dtype)
+
+
+def _multi_dense_bwd(plan: RelationPlan, gy_dense, xi, backend: Backend):
+    """Dense-tier backward: ONE transposed matmul + SSpMM sampling, landing
+    directly in type-concat coordinates (``dense_bwd`` is
+    (n_src_total, Σ dense n_dst), so source rows outside any dense relation
+    come back exactly zero)."""
+    if backend == "pallas_fused":
+        _record_dispatch("pallas:multi_dense_bwd")
+        return _k.drspmm_dense_tier_bwd(jnp.asarray(plan.dense_bwd),
+                                        gy_dense, xi).astype(gy_dense.dtype)
+    _record_dispatch("xla:multi_dense_bwd")
+    dx = jnp.asarray(plan.dense_bwd) @ gy_dense.astype(jnp.float32)
+    return jnp.take_along_axis(dx, xi, axis=1).astype(gy_dense.dtype)
+
+
+def _hybrid_fwd(plan: RelationPlan, xv, xi, dim: int, backend: Backend):
+    """Tiered forward: ≤1 fused arena dispatch + ≤1 batched dense dispatch,
+    reassembled into the full relation-concat output.  Single-tier plans
+    skip the reassembly — their tier-local offsets coincide with the full
+    ``out_off`` coordinates.
+
+    On the XLA family the type-concat CBSR is densified ONCE and the
+    shared (N, dim) operand feeds both tiers — the dense tier has to
+    materialize it anyway, so the arena leg rides along for free and drops
+    its nnz-scale scatter.  Pallas tiers keep consuming CBSR directly."""
+    xd = None if backend == "pallas_fused" else _densify_cbsr(xv, xi, dim)
+    ya = _multi_fwd_impl(plan, xv, xi, dim, backend, xd=xd) \
+        if plan.has_arena else None
+    yd = _multi_dense_fwd(plan, xv, xi, dim, backend, xd=xd) \
+        if plan.has_dense else None
+    if yd is None:
+        return ya
+    if ya is None:
+        return yd
+    return jnp.concatenate(
+        [ya[s.arena_out_off:s.arena_out_off + s.n_dst] if s.tier == "arena"
+         else yd[s.dense_off:s.dense_off + s.n_dst]
+         for s in plan.segments])
+
+
+def _hybrid_bwd(plan: RelationPlan, gy_cat, xi, backend: Backend):
+    """Tiered backward → (arena relation-concat dV | None, dense type-concat
+    dV | None).  The arena transposed super-arena already addresses the FULL
+    output concat (its ``nbr`` are pre-offset at pack time), so ``gy_cat``
+    feeds it unsliced; the dense tier gets its segments' cotangent slices
+    re-stacked into ``dense_fwd`` row order."""
+    dx_cat = _multi_bwd_impl(plan, gy_cat, xi, backend) \
+        if plan.has_arena else None
+    dv_dense = None
+    if plan.has_dense:
+        gy_dense = gy_cat if not plan.has_arena else jnp.concatenate(
+            [gy_cat[s.out_off:s.out_off + s.n_dst]
+             for s in plan.dense_segments])
+        dv_dense = _multi_dense_bwd(plan, gy_dense, xi, backend)
+    return dx_cat, dv_dense
+
+
 def _super_dense_mat(f: FusedELL):
     """Dense matrix of a (super-)arena built from its own tables — works
     with traced leaves, unlike the host-side ``to_dense``."""
@@ -664,63 +874,79 @@ def _super_dense_mat(f: FusedELL):
                 nbr].add(jnp.asarray(f.w))
 
 
-def _dx_row_map(plan: RelationPlan) -> np.ndarray:
-    """(Σ n_src_r,) type-concat source id per relation-concat dx row —
-    static segment arithmetic, used by the dense oracle's sampled bwd."""
-    off = dict(zip(plan.src_types, plan.src_off))
-    return np.concatenate([np.arange(s.n_src, dtype=np.int32)
-                           + np.int32(off[s.src_type])
-                           for s in plan.segments])
+def _plan_dense_mat(plan: RelationPlan):
+    """Full (n_out_total, n_src_total) block matrix across BOTH tiers,
+    built from the plan's own tables — works with traced leaves, unlike the
+    host-side :meth:`RelationPlan.to_dense`."""
+    a = jnp.zeros((plan.n_out_total, plan.n_src_total), jnp.float32)
+    if plan.has_arena:
+        fa = _super_dense_mat(plan.fwd)
+        for s in plan.arena_segments:
+            a = a.at[s.out_off:s.out_off + s.n_dst].set(
+                fa[s.arena_out_off:s.arena_out_off + s.n_dst])
+    if plan.has_dense:
+        df = jnp.asarray(plan.dense_fwd, jnp.float32)
+        for s in plan.dense_segments:
+            a = a.at[s.out_off:s.out_off + s.n_dst].set(
+                df[s.dense_off:s.dense_off + s.n_dst])
+    return a
 
 
 def _build_multi(plan: RelationPlan, dim: int, backend: Backend,
                  trace_key=None):
-    """Custom-vjp callable over (vals_tuple, idxs_tuple): ONE fused forward
-    dispatch, ONE transposed backward dispatch, per call."""
+    """Custom-vjp callable over (vals_tuple, idxs_tuple): at most one fused
+    arena dispatch plus one batched dense-tier dispatch per direction —
+    O(1) per layer, not O(relations) — with the type-concat ``xi`` saved as
+    a forward residual so the backward never re-runs the concat."""
 
     def probe():
         if trace_key is not None:
             _MULTI_TRACES.append(trace_key)
 
     if backend == "dense":
-        @jax.custom_vjp
-        def f(vals, idxs):
+        def impl(vals, idxs):
             probe()
             xv, xi, _ = _multi_concat(plan, vals, idxs)
             n = xv.shape[0]
             xd = jnp.zeros((n, dim), xv.dtype).at[
                 jnp.arange(n)[:, None], xi].add(xv)
-            return _split_out(plan, _super_dense_mat(plan.fwd) @ xd)
+            return _split_out(plan, _plan_dense_mat(plan) @ xd), xi
 
-        def f_bwd(idxs, gys):
+        def bwd_impl(xi, idxs, gys):
+            # full-coordinate transposed oracle: summing every relation's
+            # Aᵀ·gy into the type-concat rows FIRST and sampling once is
+            # exact — take_along_axis at a type's shared xi is linear.
             gy_cat = jnp.concatenate(list(gys))
-            g_cat = _super_dense_mat(plan.bwd) @ gy_cat   # (Σ n_src_r, D)
-            _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
-                                            for i in idxs], idxs)
-            xi_dx = jnp.take(xi, jnp.asarray(_dx_row_map(plan)), axis=0)
-            dx_cat = jnp.take_along_axis(g_cat, xi_dx, axis=1)
-            return (_dx_cat_to_types(plan, dx_cat, idxs),
-                    tuple(np.zeros(np.shape(i), jax.dtypes.float0)
-                          for i in idxs))
+            dx_full = _plan_dense_mat(plan).T @ gy_cat    # (n_src_total, D)
+            dv = jnp.take_along_axis(dx_full, xi, axis=1)
+            return tuple(
+                dv[int(o):int(o) + int(sz)][:, :int(i.shape[1])]
+                for o, sz, i in zip(plan.src_off, plan.src_sizes, idxs))
     else:
-        @jax.custom_vjp
-        def f(vals, idxs):
+        def impl(vals, idxs):
             probe()
             xv, xi, _ = _multi_concat(plan, vals, idxs)
-            y_cat = _multi_fwd_impl(plan, xv, xi, dim, backend)
-            return _split_out(plan, y_cat)
+            y_cat = _hybrid_fwd(plan, xv, xi, dim, backend)
+            return _split_out(plan, y_cat), xi
 
-        def f_bwd(idxs, gys):
+        def bwd_impl(xi, idxs, gys):
             gy_cat = jnp.concatenate(list(gys))
-            _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
-                                            for i in idxs], idxs)
-            dx_cat = _multi_bwd_impl(plan, gy_cat, xi, backend)
-            return (_dx_cat_to_types(plan, dx_cat, idxs),
-                    tuple(np.zeros(np.shape(i), jax.dtypes.float0)
-                          for i in idxs))
+            dx_cat, dv_dense = _hybrid_bwd(plan, gy_cat, xi, backend)
+            return _dx_cat_to_types(plan, dx_cat, dv_dense, idxs)
+
+    @jax.custom_vjp
+    def f(vals, idxs):
+        return impl(vals, idxs)[0]
 
     def f_fwd(vals, idxs):
-        return f(vals, idxs), idxs            # xi is the only residual
+        ys, xi = impl(vals, idxs)
+        return ys, (xi, idxs)
+
+    def f_bwd(res, gys):
+        xi, idxs = res
+        return (bwd_impl(xi, idxs, gys),
+                tuple(np.zeros(np.shape(i), jax.dtypes.float0)
+                      for i in idxs))
 
     f.defvjp(f_fwd, f_bwd)
     return f
@@ -753,24 +979,25 @@ def _multi_traced(plan: RelationPlan, vals, idxs, dim: int, backend: Backend):
     never re-``device_put`` on recompute.  Cotangents for the plan leaves
     are symbolic zeros — the fixed-weight arenas carry no gradient."""
 
+    def body(plan, vals, idxs):
+        xv, xi, _ = _multi_concat(plan, vals, idxs)
+        return _split_out(plan, _hybrid_fwd(plan, xv, xi, dim, backend)), xi
+
     @jax.custom_vjp
     def f(plan, vals, idxs):
-        xv, xi, _ = _multi_concat(plan, vals, idxs)
-        y_cat = _multi_fwd_impl(plan, xv, xi, dim, backend)
-        return _split_out(plan, y_cat)
+        return body(plan, vals, idxs)[0]
 
     def f_fwd(plan, vals, idxs):
-        # residuals: the plan (aliased jit args, see above) + xi
-        return f(plan, vals, idxs), (plan, idxs)
+        ys, xi = body(plan, vals, idxs)
+        # residuals: the plan (aliased jit args, see above) + type-concat xi
+        return ys, (plan, xi, idxs)
 
     def f_bwd(res, gys):
-        plan, idxs = res
+        plan, xi, idxs = res
         gy_cat = jnp.concatenate(list(gys))
-        _, xi, _ = _multi_concat(plan, [jnp.zeros_like(i, jnp.float32)
-                                        for i in idxs], idxs)
-        dx_cat = _multi_bwd_impl(plan, gy_cat, xi, backend)
+        dx_cat, dv_dense = _hybrid_bwd(plan, gy_cat, xi, backend)
         return (_zero_plan_cotangent(plan),
-                _dx_cat_to_types(plan, dx_cat, idxs),
+                _dx_cat_to_types(plan, dx_cat, dv_dense, idxs),
                 tuple(np.zeros(np.shape(i), jax.dtypes.float0)
                       for i in idxs))
 
@@ -807,8 +1034,12 @@ def _multi_executable(plan: RelationPlan, dim: int, backend: Backend):
 
 def drspmm_multi(plan: RelationPlan, cbsr, dim: int, *,
                  backend: Backend = DEFAULT_BACKEND):
-    """Whole-direction-group DR-SpMM: every relation of a hetero layer in
-    ONE dispatch forward and ONE transposed dispatch backward.
+    """Whole-direction-group DR-SpMM, tiered at pack time: the plan's
+    arena-tier relations run as ONE fused super-arena dispatch and its
+    dense-tier relations (tiny, sub-crossover nnz — graphs/ell.py §tiering)
+    as at most ONE batched dense matmul, forward and transposed backward
+    alike — dispatch stays O(1) per layer with mixed tiers (≤2 fwd,
+    ≤2 bwd).
 
     ``cbsr`` maps each source node type of the plan to its CBSR pair
     ``{ntype: (vals (n_t, k_t), idx (n_t, k_t))}``; k may differ per type
@@ -834,8 +1065,9 @@ def drspmm_multi(plan: RelationPlan, cbsr, dim: int, *,
     idxs = tuple(cbsr[t][1] for t in plan.src_types)
     if isinstance(plan.fwd.nbr, jax.core.Tracer):
         if eff == "dense":
-            # the dense oracle's sampled backward needs host-side segment
-            # arithmetic (_dx_row_map) — concrete plans only, as before
+            # the oracle closure is traced inline; the outer jit owns the
+            # cache (the oracle is not remat-threaded like _multi_traced —
+            # checkpointed layers always use the fused families)
             ys = _build_multi(plan, dim, eff)(vals, idxs)
         else:
             ys = _multi_traced(plan, vals, idxs, dim, eff)
@@ -909,7 +1141,10 @@ def _build_multi_sharded(splan, dim: int, backend: Backend, trace_key=None):
         if backend == "pallas_fused":
             ya = _k.drspmm_fwd_fused(f, slab_v, slab_i, dim)
             return jnp.take(ya, f.gather, axis=0).astype(xv.dtype)
-        return _fwd_fused_xla(f, slab_v, slab_i, dim)
+        # densify-first, like the single-device hybrid: the slab is local
+        # after the exchange, so the dense-operand walk is purely per-shard
+        return _spmm_fused_xla(
+            f, _densify_cbsr(slab_v, slab_i, dim)).astype(xv.dtype)
 
     def bwd_inner(gy, xi, nbr, w, blk, start, rows, gather, send):
         # gy: (T, D) owned output cotangent; xi: (S, k) owned indices

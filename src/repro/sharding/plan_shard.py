@@ -43,8 +43,8 @@ import numpy as np
 import jax
 
 from repro.graphs.ell import (FusedELL, RelationPlan, RelationSegment,
-                              fuse_bucketed, fused_to_coo, pack_ell,
-                              pad_fused_arena)
+                              fuse_bucketed, pack_ell, pad_fused_arena,
+                              plan_to_coo)
 from repro.obs.metrics import DEFAULT_REGISTRY as _METRICS
 
 
@@ -191,20 +191,24 @@ def shard_relation_plan(plan: RelationPlan, n_shards: int, *,
 
     The partition is by global coordinates, not arena blocks — the fused
     arenas degree-sort rows, so shard slabs are recovered from the exact
-    edge set via :func:`fused_to_coo` and re-packed locally at the plan's
-    pinned chunk widths.  Emits ``arena.halo_*`` gauges into ``registry``
-    (default: the process registry, DESIGN.md §11).
+    edge set via :func:`plan_to_coo` and re-packed locally at the plan's
+    pinned chunk widths.  Sharded plans have NO dense tier (DESIGN.md §14):
+    every relation — including ones the single-device plan would route
+    dense — shards by destination slab into the per-shard local arenas, so
+    the executor stays one exchange + one walk per direction and no dense
+    table needs replicating across the mesh.  Emits ``arena.halo_*`` gauges
+    into ``registry`` (default: the process registry, DESIGN.md §11).
     """
     n = int(n_shards)
     assert n >= 1, n_shards
     reg = _METRICS if registry is None else registry
     fwd = plan.fwd
     br = fwd.row_block
-    n_out, n_src = fwd.n_dst, fwd.n_src
+    n_out, n_src = plan.n_out_total, plan.n_src_total
     t_slab = _ceil_div(n_out, n)
     s_slab = _ceil_div(n_src, n)
 
-    dst, src, w = fused_to_coo(fwd)
+    dst, src, w = plan_to_coo(plan)
     shard_of = dst // t_slab
     owner_of = src // s_slab
 
@@ -272,7 +276,9 @@ def shard_relation_plan(plan: RelationPlan, n_shards: int, *,
         n_src_total=n_src, n_out_total=n_out, row_block=br,
         fwd_chunk=fwd.chunk, bwd_chunk=plan.bwd.chunk,
         full_arena_bytes=_arena_nbytes(fwd) + _arena_nbytes(plan.bwd)
-        + np.asarray(plan.bwd_src_rows).nbytes,
+        + np.asarray(plan.bwd_src_rows).nbytes
+        + np.asarray(plan.dense_fwd).nbytes
+        + np.asarray(plan.dense_bwd).nbytes,
         segments=plan.segments, src_types=plan.src_types,
         src_off=plan.src_off, src_sizes=plan.src_sizes)
 

@@ -56,6 +56,9 @@ class CircuitTrainConfig:
     # devices; parity with the single-device plan path:
     # tests/test_sharded_parity.py.
     n_shards: int = 0
+    # Dense-tier crossover override threaded to HeteroMPConfig (DESIGN.md
+    # §14): None keeps the measured constant; <= -1 forces all-arena.
+    dense_threshold: Optional[int] = None
     seed: int = 0
     # graphs per optimizer step: an epoch over a design list is
     # ceil(n/batch_size) collated dispatches instead of n (graphs/collate.py)
@@ -94,7 +97,8 @@ class CircuitTrainer:
                                      k_net=cfg.k_net, backend=cfg.backend,
                                      use_drelu=cfg.use_drelu,
                                      use_plan=cfg.use_plan,
-                                     n_shards=cfg.n_shards)
+                                     n_shards=cfg.n_shards,
+                                     dense_threshold=cfg.dense_threshold)
         # the backbone spec shares cfg.n_layers with init_drcircuitgnn —
         # one depth knob end-to-end (trainer, examples, benches)
         self.spec = BackboneSpec(depth=cfg.n_layers, hidden=cfg.hidden,

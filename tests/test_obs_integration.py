@@ -140,6 +140,36 @@ def test_collate_emits_arena_gauges_with_near_slot_saving():
                                   dir="fwd") > 0
 
 
+def test_pack_emits_tier_gauges():
+    """§14 tier routing is visible in metrics at pack time: every edge-type
+    direction reports which tier it landed in, the nnz that decided it, and
+    the crossover threshold in force — so a mis-tiered relation shows up in
+    a dashboard, not just in a kernel trace.  On this batch the crossover
+    must split the relations: `near` (high-nnz cell–cell) stays on the
+    arena tier while `pin` drops to the dense tier."""
+    from repro.graphs.ell import DENSE_TIER_NNZ
+
+    gs = [_graph(220, 110, s) for s in range(4)]
+    collate_graphs(gs)
+    for et in ("near", "pin", "pinned"):
+        for d in ("fwd", "bwd"):
+            tier = DEFAULT_REGISTRY.value("arena.tier", etype=et, dir=d)
+            assert tier in (0.0, 1.0), (et, d, tier)
+            nnz = DEFAULT_REGISTRY.value("arena.tier_nnz", etype=et, dir=d)
+            assert nnz > 0, (et, d, nnz)
+            thr = DEFAULT_REGISTRY.value("arena.tier_threshold",
+                                         etype=et, dir=d)
+            assert thr == DENSE_TIER_NNZ, (et, d, thr)
+            # the gauge agrees with the rule it reports (modulo the area
+            # guard and bucket pinning, which only force the arena tier)
+            if nnz > thr:
+                assert tier == 0.0, (et, d, nnz, tier)
+    assert DEFAULT_REGISTRY.value("arena.tier", etype="near",
+                                  dir="fwd") == 0.0     # arena
+    assert DEFAULT_REGISTRY.value("arena.tier", etype="pin",
+                                  dir="fwd") == 1.0     # dense
+
+
 def test_ops_dispatch_counters_accumulate():
     def total():
         return sum(m.value for m in

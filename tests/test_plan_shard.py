@@ -29,7 +29,7 @@ except ImportError:                      # bare container: seeded fallback
 from repro.graphs.circuit import EDGE_SCHEMA, relation_plan_of, \
     sharded_plan_of, with_sharded_plan
 from repro.graphs.collate import collate_graphs
-from repro.graphs.ell import build_relation_plan, fused_to_coo
+from repro.graphs.ell import build_relation_plan, fused_to_coo, plan_to_coo
 from repro.graphs.generator import generate_partition, pack_graph_parallel
 from repro.obs.metrics import MetricsRegistry
 from repro.sharding.plan_shard import (ShardedRelationPlan,
@@ -109,7 +109,7 @@ def test_shard_unshard_roundtrip(args):
     plan = _plan(seed, n_cell, n_net)
     sp = shard_relation_plan(plan, n, registry=MetricsRegistry())
     got = _sorted(*_global_coo_of_shards(sp))
-    want = _sorted(*fused_to_coo(plan.fwd))
+    want = _sorted(*plan_to_coo(plan))
     np.testing.assert_array_equal(got[0], want[0], err_msg="dst rows")
     np.testing.assert_array_equal(got[1], want[1], err_msg="src rows")
     np.testing.assert_allclose(got[2], want[2], atol=1e-6, err_msg="weights")
@@ -164,7 +164,7 @@ def test_reference_exchange_matches_dense(args):
     rng = np.random.default_rng(seed ^ 0x5EED)
     x = rng.normal(size=(sp.n_src_total, 5)).astype(np.float32)
     gy = rng.normal(size=(sp.n_out_total, 5)).astype(np.float32)
-    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    A = np.asarray(plan.to_dense(), np.float32)
 
     y = reference_forward(sp, x)
     dx = reference_backward(sp, gy)
@@ -183,7 +183,7 @@ def test_single_shard_degenerate():
     assert sp.halo_pad == 1
     assert (np.asarray(sp.halo_rows) == -1).all()
     got = _sorted(*_global_coo_of_shards(sp))
-    want = _sorted(*fused_to_coo(plan.fwd))
+    want = _sorted(*plan_to_coo(plan))
     for g, w in zip(got, want):
         np.testing.assert_allclose(g, w, atol=1e-6)
 
@@ -195,7 +195,7 @@ def test_single_relation_plan_shards():
     sp = shard_relation_plan(plan, 3, registry=MetricsRegistry())
     rng = np.random.default_rng(0)
     x = rng.normal(size=(sp.n_src_total, 4)).astype(np.float32)
-    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    A = np.asarray(plan.to_dense(), np.float32)
     np.testing.assert_allclose(reference_forward(sp, x), A @ x,
                                atol=1e-4, rtol=1e-5)
 
@@ -222,7 +222,7 @@ def test_skewed_hub_row_halos_everywhere():
     for d in range(1, n):                            # shard 0 owns the hub
         assert int((hr[d] == 0).sum()) == 1, f"shard {d} hub halo count"
     x = rng.normal(size=(sp.n_src_total, 3)).astype(np.float32)
-    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    A = np.asarray(plan.to_dense(), np.float32)
     np.testing.assert_allclose(reference_forward(sp, x), A @ x,
                                atol=1e-4, rtol=1e-5)
 
@@ -239,7 +239,7 @@ def test_collated_filler_members_shard_cleanly():
     rng = np.random.default_rng(1)
     x = rng.normal(size=(sp.n_src_total, 4)).astype(np.float32)
     gy = rng.normal(size=(sp.n_out_total, 4)).astype(np.float32)
-    A = np.asarray(plan.fwd.to_dense(), np.float32)
+    A = np.asarray(plan.to_dense(), np.float32)
     np.testing.assert_allclose(reference_forward(sp, x), A @ x,
                                atol=1e-4, rtol=1e-5)
     np.testing.assert_allclose(reference_backward(sp, gy), A.T @ gy,

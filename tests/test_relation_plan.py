@@ -223,14 +223,18 @@ def test_one_dispatch_per_direction_group():
     # xla family: executor issues recorded while tracing.  Only the
     # direction-group executors may appear — a serial per-relation tag
     # ("xla:fwd"/"xla:bwd") would mean the plan path leaked back to the
-    # loop.  (custom_vjp traces the forward body twice under grad — primal
-    # + f_fwd — so the fwd tag may legitimately repeat.)
+    # loop.  This tiny graph's relations all sit below the dense-tier
+    # crossover, so the group runs as the batched dense dispatch
+    # (DESIGN.md §14).  (custom_vjp traces the forward body twice under
+    # grad — primal + f_fwd — so the fwd tag may legitimately repeat.)
+    plan = relation_plan_of(g)
+    assert not plan.has_arena and plan.has_dense
     cfg_px = dataclasses.replace(cfg_p, backend="xla_fused")
     n0 = len(ops.FUSED_DISPATCH_LOG)
     jax.make_jaxpr(grad_both(cfg_px))(x_cell, x_net)
     tags = list(ops.FUSED_DISPATCH_LOG)[n0:]
-    assert set(tags) == {"xla:multi_fwd", "xla:multi_bwd"}, tags
-    assert tags.count("xla:multi_bwd") == 1, tags
+    assert set(tags) == {"xla:multi_dense_fwd", "xla:multi_dense_bwd"}, tags
+    assert tags.count("xla:multi_dense_bwd") == 1, tags
 
 
 def test_relation_plan_memoized(layer_setup):
@@ -247,22 +251,20 @@ rt_plans = st.integers(0, 2 ** 31 - 1).flatmap(lambda seed: st.tuples(
     st.just(seed), st.integers(9, 40), st.integers(5, 24)))
 
 
-@given(rt_plans)
-def test_relation_segment_roundtrip(args):
-    """Every relation's matrix reappears exactly at its segment's block of
-    the super-arena pair (fwd at (out_off, src_off), bwd transposed at
-    (src_out_off, out_off)), nothing lands outside the blocks, and the rel
-    chunk table tiles the arena by segment."""
-    seed, n_cell, n_net = args
-    rng = np.random.default_rng(seed)
-    rels = _mixed_relations(rng, n_cell, n_net)
-    plan = build_relation_plan(rels, {"cell": n_cell, "net": n_net})
-    A, B = plan.fwd.to_dense(), plan.bwd.to_dense()
+def _check_plan_roundtrip(plan, rels):
+    """Tier-aware block property: every relation's matrix reappears exactly
+    at its segment's block of the full-coordinate plan matrix, nothing
+    lands outside the blocks, arena segments tile the rel chunk table /
+    transposed super-arena, and dense segments tile the stacked
+    ``dense_fwd``/``dense_bwd`` tables."""
+    A = plan.to_dense()                   # (n_out_total, n_src_total)
     off = dict(zip(plan.src_types, plan.src_off))
     cov_a = np.zeros_like(A, bool)
-    cov_b = np.zeros_like(B, bool)
-    rel_tab = np.asarray(plan.fwd.rel)
-    for i, (seg, r) in enumerate(zip(plan.segments, rels)):
+    arena_pos = {id(s): i for i, s in enumerate(plan.arena_segments)}
+    B = plan.bwd.to_dense() if plan.has_arena else None
+    DF = np.asarray(plan.dense_fwd)
+    rel_tab = np.asarray(plan.fwd.rel) if plan.has_arena else None
+    for seg, r in zip(plan.segments, rels):
         et, s_t, d_t, dst, src, w = r
         dense = np.zeros((seg.n_dst, seg.n_src), np.float32)
         np.add.at(dense, (dst, src), w)
@@ -270,18 +272,47 @@ def test_relation_segment_roundtrip(args):
         np.testing.assert_allclose(
             A[seg.out_off:seg.out_off + seg.n_dst, so:so + seg.n_src],
             dense, atol=1e-6, err_msg=f"fwd {et}")
-        np.testing.assert_allclose(
-            B[seg.src_out_off:seg.src_out_off + seg.n_src,
-              seg.out_off:seg.out_off + seg.n_dst],
-            dense.T, atol=1e-6, err_msg=f"bwd {et}")
         cov_a[seg.out_off:seg.out_off + seg.n_dst, so:so + seg.n_src] = True
-        cov_b[seg.src_out_off:seg.src_out_off + seg.n_src,
-              seg.out_off:seg.out_off + seg.n_dst] = True
-        lo, hi = seg.fwd_chunks
-        assert (rel_tab[lo:hi] == i).all()
-    assert A[~cov_a].sum() == 0 and B[~cov_b].sum() == 0
-    assert rel_tab.shape[0] == plan.fwd.n_chunks
+        if seg.tier == "arena":
+            # transposed super-arena addresses the FULL output concat
+            np.testing.assert_allclose(
+                B[seg.src_out_off:seg.src_out_off + seg.n_src,
+                  seg.out_off:seg.out_off + seg.n_dst],
+                dense.T, atol=1e-6, err_msg=f"bwd {et}")
+            lo, hi = seg.fwd_chunks
+            assert (rel_tab[lo:hi] == arena_pos[id(seg)]).all()
+            assert seg.dense_off == -1
+        else:
+            np.testing.assert_allclose(
+                DF[seg.dense_off:seg.dense_off + seg.n_dst,
+                   so:so + seg.n_src],
+                dense, atol=1e-6, err_msg=f"dense fwd {et}")
+            assert seg.fwd_chunks == (0, 0) and seg.arena_out_off == -1
+    assert A[~cov_a].sum() == 0
+    np.testing.assert_allclose(np.asarray(plan.dense_bwd), DF.T, atol=0,
+                               err_msg="dense_bwd is dense_fwd transposed")
+    if plan.has_arena:
+        assert rel_tab.shape[0] == plan.fwd.n_chunks
     assert plan.bwd_src_rows.shape[0] == plan.bwd.n_arena_rows
+
+
+@given(rt_plans)
+def test_relation_segment_roundtrip(args):
+    """The block property holds for every tiering of the same relations:
+    the default classification (these tiny graphs go all-dense), a
+    threshold of −1 (all-arena, the pre-tiering layout), and a forced
+    mixed-tier split."""
+    seed, n_cell, n_net = args
+    rng = np.random.default_rng(seed)
+    rels = _mixed_relations(rng, n_cell, n_net)
+    sizes = {"cell": n_cell, "net": n_net}
+    for plan in (
+            build_relation_plan(rels, sizes),
+            build_relation_plan(rels, sizes, dense_threshold=-1),
+            build_relation_plan(rels, sizes,
+                                tiers={"near": "arena", "pin": "dense",
+                                       "pinned": "arena"})):
+        _check_plan_roundtrip(plan, rels)
 
 
 # --------------------- collation rides the plan ------------------------
